@@ -1,0 +1,161 @@
+"""Paper Fig. 5 — downstream classification under four loading strategies.
+
+Tasks (linear heads, trained jointly on the same stream): cell_line (50),
+drug (380), moa_broad (4), moa_fine (27).  Strategies: Streaming,
+Streaming+shuffle-buffer (16,384 = 64x256), BlockShuffling (b=16, f=256),
+Random Sampling (b=1).  Train = plates 0..12, test = plate 13 (the paper's
+plates 1-13 / 14 split).  2 seeds; metric macro-F1.
+
+Claim under test: streaming variants underperform due to plate-scale
+heterogeneity; BlockShuffling b=16,f=256 matches Random Sampling.
+Scale adaptations (DESIGN.md §2): 150k synthetic cells (not 94M); lr=1e-2
+(paper 1e-5 — lr scales the effective forgetting horizon to the step count);
+shuffle buffer scaled to the paper's buffer/plate ratio (16,384 / 7M plate =
+0.23% -> 64 cells for our ~11k-cell plates; an UNscaled 16,384 buffer spans
+>1 plate here and trivially decorrelates, inverting the geometry the paper
+tests).  The *ordering* of strategies is the reproduced result.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dataset, emit
+
+from repro.core import BlockShuffling, ScDataset, Streaming
+
+M = 64
+TASKS = {"cell_line": 50, "drug": 380, "moa_broad": 4, "moa_fine": 27}
+SEEDS = (0, 1)
+LR = 1e-2
+
+
+def _strategies():
+    return {
+        "streaming": (Streaming(), 1),
+        # paper buffer/plate ratio: 16384/7e6 * (~11k cells/plate here) ~ 64
+        "shuffle_buffer": (Streaming(shuffle_buffer=64), 1),
+        "block_shuffling": (BlockShuffling(block_size=16), 256),
+        "random_sampling": (BlockShuffling(block_size=1), 256),
+    }
+
+
+def _init_heads(key, n_genes):
+    ks = jax.random.split(key, len(TASKS))
+    return {
+        t: {"w": jnp.zeros((n_genes, c), jnp.float32), "b": jnp.zeros((c,), jnp.float32)}
+        for (t, c), k in zip(TASKS.items(), ks)
+    }
+
+
+@jax.jit
+def _train_step(heads, opt, x, ys):
+    def loss_fn(heads):
+        total = 0.0
+        for t in TASKS:
+            logits = x @ heads[t]["w"] + heads[t]["b"]
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, ys[t][:, None], axis=-1)[:, 0]
+            total = total + jnp.mean(lse - gold)
+        return total
+
+    loss, grads = jax.value_and_grad(loss_fn)(heads)
+    # Adam
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    cnt = opt["count"] + 1
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt["m"], grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, opt["v"], grads)
+    c1, c2 = 1 - b1 ** cnt.astype(jnp.float32), 1 - b2 ** cnt.astype(jnp.float32)
+    heads = jax.tree.map(
+        lambda p, m, v: p - LR * (m / c1) / (jnp.sqrt(v / c2) + eps),
+        heads, new_m, new_v,
+    )
+    return heads, {"m": new_m, "v": new_v, "count": cnt}, loss
+
+
+def _features(batch):
+    x = jnp.asarray(batch.to_dense())
+    return jnp.log1p(x)
+
+
+def _macro_f1(pred: np.ndarray, gold: np.ndarray, n_classes: int) -> float:
+    f1s = []
+    for c in range(n_classes):
+        tp = np.sum((pred == c) & (gold == c))
+        fp = np.sum((pred == c) & (gold != c))
+        fn = np.sum((pred != c) & (gold == c))
+        if tp + fp + fn == 0:
+            continue  # class absent from test and predictions
+        prec = tp / max(tp + fp, 1)
+        rec = tp / max(tp + fn, 1)
+        f1s.append(0.0 if prec + rec == 0 else 2 * prec * rec / (prec + rec))
+    return float(np.mean(f1s)) if f1s else 0.0
+
+
+def run() -> dict:
+    store, _ = dataset(simulate_sata=False)
+    n_train = sum(len(s) for s in store.shards[:13])
+    test_shard = store.shards[13]
+
+    # materialize the (small) test set once
+    test_batch = test_shard[np.arange(len(test_shard))]
+    x_test = np.log1p(test_batch.to_dense())
+    y_test = {t: np.asarray(test_batch.obs[t]) for t in TASKS}
+
+    class TrainView:
+        """Restrict the sharded store to the training plates."""
+
+        def __init__(self, store, n):
+            self.store, self.n = store, n
+
+        def __len__(self):
+            return self.n
+
+        def __getitem__(self, rows):
+            return self.store[rows]
+
+    results: dict[str, dict[str, list[float]]] = {
+        s: {t: [] for t in TASKS} for s in _strategies()
+    }
+    for strat_name, (strat, f) in _strategies().items():
+        for seed in SEEDS:
+            heads = _init_heads(jax.random.PRNGKey(seed), store.n_var)
+            opt = {
+                "m": jax.tree.map(jnp.zeros_like, heads),
+                "v": jax.tree.map(jnp.zeros_like, heads),
+                "count": jnp.zeros((), jnp.int32),
+            }
+            ds = ScDataset(TrainView(store, n_train), strat, batch_size=M,
+                           fetch_factor=f, seed=seed)
+            t0 = time.time()
+            for batch in ds:  # one epoch
+                x = _features(batch)
+                ys = {t: jnp.asarray(batch.obs[t].astype(np.int32)) for t in TASKS}
+                heads, opt, loss = _train_step(heads, opt, x, ys)
+            # evaluate
+            for t, c in TASKS.items():
+                logits = np.asarray(jnp.asarray(x_test) @ heads[t]["w"] + heads[t]["b"])
+                pred = logits.argmax(-1)
+                results[strat_name][t].append(_macro_f1(pred, y_test[t], c))
+            print(f"#  {strat_name} seed {seed}: epoch {time.time()-t0:.0f}s, "
+                  f"f1={ {t: round(results[strat_name][t][-1],3) for t in TASKS} }")
+
+    for strat_name, by_task in results.items():
+        for t in TASKS:
+            arr = np.array(by_task[t])
+            emit(f"fig5_{strat_name}_{t}", 0.0,
+                 f"macro_f1={arr.mean():.3f}+-{arr.std():.3f}")
+    # headline ordering claim
+    mean_of = lambda s: np.mean([np.mean(results[s][t]) for t in TASKS])
+    emit("fig5_ordering", 0.0,
+         f"streaming={mean_of('streaming'):.3f};buffer={mean_of('shuffle_buffer'):.3f};"
+         f"block={mean_of('block_shuffling'):.3f};random={mean_of('random_sampling'):.3f};"
+         f"claim=block~random>buffer~streaming")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,161 @@
+"""Roofline analysis (deliverable g) — three terms per (arch × shape) cell.
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and derives,
+per cell on the single-pod 16x16 mesh:
+
+  compute_s    = HLO_dot_flops_per_device / 197e12          (bf16 peak)
+  memory_s     = HLO_dot_bytes_per_device / 819e9           (HBM BW)
+  collective_s = collective_bytes_per_device / 50e9         (ICI link BW)
+
+All three use the loop-corrected HLO costs (launch/hlo_cost.py) since
+cost_analysis counts while bodies once.  memory_s uses dot operand+output
+bytes as the HBM-traffic proxy (over-counts fusion-resident intermediates,
+excludes elementwise traffic — both noted per DESIGN.md §7).
+
+MODEL_FLOPS = 6·N·D (train), 2·N·D (prefill), 2·N_active·B (decode), with
+N_active for MoE.  ratio = MODEL_FLOPS / global HLO flops (useful-compute
+fraction: remat recompute, padding waste, dispatch overhead all lower it).
+roofline_fraction = ideal_compute_s / max(term) — the headline score.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.mesh import HW  # noqa: E402
+
+RESULTS_GLOB = os.path.join(
+    os.path.dirname(__file__), "..", "results", "dryrun", "single__*.json"
+)
+
+
+def model_flops(r: dict) -> float:
+    n, na = r["n_params"], r["n_active_params"]
+    d = r["tokens_per_step"]
+    if r["kind"] == "train":
+        return 6.0 * na * d
+    if r["kind"] == "prefill":
+        return 2.0 * na * d
+    return 2.0 * na * d  # decode: d = batch (1 token each)
+
+
+def min_bytes_floor(r: dict) -> float:
+    """Bytes that MUST move through HBM per step, global (ideal lower bound).
+
+    decode: read active params once + read the whole KV/SSM cache once.
+    prefill: read params once + write the cache once.
+    train: params read (fwd+bwd) + grads written + optimizer state r/w.
+    Activations beyond the cache are excluded (they can in principle stay
+    on-chip) — this is deliberately an under-estimate so the fraction is
+    conservative.
+    """
+    na, n = r["n_active_params"], r["n_params"]
+    cache = r["memory"]["argument_bytes"] * r["chips"]  # donated cache+params args
+    if r["kind"] == "decode":
+        return 2.0 * na + cache
+    if r["kind"] == "prefill":
+        return 2.0 * na + cache
+    # train: bf16 params x2 reads + bf16 grad write + fp32 m,v read+write
+    return 2.0 * n * 2 + 2.0 * n + 4.0 * n * 4
+
+
+def _note(dom: str, r: dict) -> str:
+    if dom == "collective":
+        return ("cut TP all-reduce traffic: reshard residual over seq "
+                "(SP), overlap with compute, or reduce-scatter grads")
+    if dom == "memory":
+        return ("cut HBM traffic: larger fused tiles (Pallas), bf16 "
+                "optimizer moments, fewer remat re-reads")
+    return "compute-bound: raise MFU via fusion/padding cleanup (good place to be)"
+
+
+def analyze(variant: str = "default") -> list[dict]:
+    """Roofline rows for one sweep variant.
+
+    File naming: ``single__{arch}__{shape}.json`` (default sweep) or
+    ``single__{arch}__{shape}__{variant}.json``.
+    """
+    rows = []
+    for p in sorted(glob.glob(RESULTS_GLOB)):
+        parts = os.path.basename(p)[:-len(".json")].split("__")
+        file_variant = parts[3] if len(parts) > 3 else "default"
+        if file_variant != variant:
+            continue
+        r = json.load(open(p))
+        chips = r["chips"]
+        compute_s = r["flops_per_device"] / HW.PEAK_FLOPS_BF16
+        # prefer the TPU-bf16-equivalent bytes when the sweep recorded them
+        dot_b = r.get("dot_bytes_eq_per_device", r["dot_bytes_per_device"])
+        coll_b = r.get("collective_bytes_eq_per_device",
+                       r["collective_bytes_per_device"])
+        memory_s = dot_b / HW.HBM_BW
+        coll_s = coll_b / HW.ICI_BW
+        mf = model_flops(r)
+        # ideal step time: the larger of the compute floor and the HBM floor
+        ideal_s = max(
+            mf / (chips * HW.PEAK_FLOPS_BF16),
+            min_bytes_floor(r) / (chips * HW.HBM_BW),
+        )
+        terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+        dom = max(terms, key=terms.get)
+        bound = max(terms.values())
+        rows.append({
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "kind": r["kind"],
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": coll_s,
+            "dominant": dom,
+            "model_flops": mf,
+            "hlo_flops_global": r["flops_per_device"] * chips,
+            "useful_ratio": mf / max(r["flops_per_device"] * chips, 1e-9),
+            "roofline_fraction": ideal_s / max(bound, 1e-12),
+            "peak_mem_gb": r["memory"]["peak_estimate_bytes"] / 1e9,
+            "fits_hbm": r["memory"]["peak_estimate_bytes"] <= HW.HBM_BYTES,
+            "note": _note(dom, r),
+        })
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+           "MODEL_FLOPS | useful ratio | roofline frac | mem GB (≤16) |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda x: (x["shape"], x["arch"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['dominant']} | "
+            f"{r['model_flops']:.2e} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {r['peak_mem_gb']:.1f} "
+            f"{'✓' if r['fits_hbm'] else '✗'} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> list[dict]:
+    from .common import emit
+
+    rows = analyze()
+    for r in rows:
+        emit(
+            f"roofline_{r['arch']}_{r['shape']}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"dom={r['dominant']};frac={r['roofline_fraction']:.3f};"
+            f"useful={r['useful_ratio']:.2f};mem={r['peak_mem_gb']:.1f}GB",
+        )
+    worst = sorted(rows, key=lambda r: r["roofline_fraction"])[:3]
+    emit("roofline_worst3", 0.0,
+         ";".join(f"{r['arch']}/{r['shape']}={r['roofline_fraction']:.3f}"
+                  for r in worst))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in analyze():
+        print(row)

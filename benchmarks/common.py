@@ -1,0 +1,83 @@
+"""Shared benchmark fixtures and reporting helpers.
+
+All paper benchmarks run against one synthetic Tahoe-like dataset (plate
+structure per DESIGN.md §2) generated once under BENCH_DATA_DIR.  Two time
+bases are reported everywhere:
+
+- ``wall``    — measured wall-clock on this container's page-cached mmap
+  (real, but the random-access penalty is mild here);
+- ``modeled`` — wall + the SATA-SSD/HDF5 storage model from
+  repro/data/iostats.py (calibrated so 1-random-row-per-sample reads give
+  ~20 samples/s, the paper's AnnLoader baseline).  Speedup *ratios* in the
+  modeled base are the paper-comparable numbers.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Callable, Iterable, Optional
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import BlockShuffling, ScDataset, Streaming  # noqa: E402
+from repro.data import SATA_SSD, IOStats, generate_tahoe_like, load_tahoe_like  # noqa: E402
+
+BENCH_DATA_DIR = os.environ.get("BENCH_DATA_DIR", "/tmp/repro_bench_data")
+N_CELLS = int(os.environ.get("BENCH_N_CELLS", "150000"))
+N_GENES = int(os.environ.get("BENCH_N_GENES", "2048"))
+MEASURE_S = float(os.environ.get("BENCH_MEASURE_S", "1.5"))
+
+_ROWS: list[dict] = []
+
+
+def dataset(simulate_sata: bool = True):
+    """(store, iostats) over the shared fixture; modeled time enabled, no sleeping."""
+    paths = generate_tahoe_like(BENCH_DATA_DIR, n_cells=N_CELLS, n_genes=N_GENES, seed=0)
+    stats = IOStats(simulate=SATA_SSD if simulate_sata else None, simulate_scale=0.0)
+    store = load_tahoe_like(BENCH_DATA_DIR, iostats=stats)
+    return store, stats
+
+
+def timed_samples_per_sec(
+    it: Iterable,
+    stats: IOStats,
+    *,
+    batch_size: int,
+    measure_s: Optional[float] = None,
+    max_batches: int = 10_000,
+) -> dict:
+    """Drain ``it`` for ~measure_s; return wall + modeled throughput."""
+    measure_s = MEASURE_S if measure_s is None else measure_s
+    stats.reset()
+    n = 0
+    t0 = time.perf_counter()
+    for batch in it:
+        n += 1
+        if time.perf_counter() - t0 > measure_s or n >= max_batches:
+            break
+    wall = time.perf_counter() - t0
+    modeled = wall + stats.modeled_s
+    samples = n * batch_size
+    return {
+        "samples": samples,
+        "wall_s": wall,
+        "modeled_s": modeled,
+        "sps_wall": samples / max(wall, 1e-9),
+        "sps_modeled": samples / max(modeled, 1e-9),
+        "io_runs": stats.runs,
+        "io_calls": stats.calls,
+        "bytes_read": stats.bytes_read,
+    }
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """One CSV row in the required ``name,us_per_call,derived`` format."""
+    _ROWS.append({"name": name, "us": us_per_call, "derived": derived})
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def all_rows() -> list[dict]:
+    return list(_ROWS)

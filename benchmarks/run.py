@@ -1,0 +1,59 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (shared ``emit`` helper) and a
+summary.  Individual benches: ``python -m benchmarks.bench_fig2_throughput``.
+Environment knobs: BENCH_N_CELLS (default 150000), BENCH_MEASURE_S (1.5),
+BENCH_SKIP (comma-list: fig2,fig3,fig4,fig5,table2,roofline,kernels).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    skip = set(filter(None, os.environ.get("BENCH_SKIP", "").split(",")))
+    t_all = time.time()
+    print("name,us_per_call,derived")
+
+    if "fig2" not in skip:
+        from benchmarks import bench_fig2_throughput
+
+        bench_fig2_throughput.run()
+    if "fig3" not in skip:
+        from benchmarks import bench_fig3_streaming
+
+        bench_fig3_streaming.run()
+    if "fig4" not in skip:
+        from benchmarks import bench_fig4_entropy
+
+        bench_fig4_entropy.run()
+    if "table2" not in skip:
+        from benchmarks import bench_table2_multiworker
+
+        bench_table2_multiworker.run()
+    if "fig5" not in skip:
+        from benchmarks import bench_fig5_classification
+
+        bench_fig5_classification.run()
+    if "roofline" not in skip:
+        from benchmarks import bench_roofline
+
+        bench_roofline.run()
+    if "kernels" not in skip:
+        from benchmarks import bench_kernels
+
+        bench_kernels.run()
+    if "autotune" not in skip:
+        from benchmarks import bench_autotune
+
+        bench_autotune.run()
+
+    print(f"# total bench time: {time.time()-t_all:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

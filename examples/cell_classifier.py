@@ -1,0 +1,82 @@
+"""Paper §4.4 in miniature: train cell-type probes under different loading
+strategies and watch sequential streaming fail.
+
+    PYTHONPATH=src python examples/cell_classifier.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BlockShuffling, ScDataset, Streaming
+from repro.data import generate_tahoe_like, load_tahoe_like
+
+DATA = "/tmp/cellcls_data"
+TASK, N_CLASSES = "cell_line", 50
+
+
+def train_probe(store, strategy, fetch_factor, lr=1e-2, seed=0):
+    n_train = sum(len(s) for s in store.shards[:13])
+
+    class TrainView:
+        def __len__(self):
+            return n_train
+
+        def __getitem__(self, rows):
+            return store[rows]
+
+    w = jnp.zeros((store.n_var, N_CLASSES))
+    m = jnp.zeros_like(w)
+    v = jnp.zeros_like(w)
+    cnt = jnp.zeros((), jnp.int32)
+
+    @jax.jit
+    def step(w, m, v, cnt, x, y):
+        def loss(w):
+            lg = x @ w
+            return jnp.mean(jax.nn.logsumexp(lg, -1)
+                            - jnp.take_along_axis(lg, y[:, None], -1)[:, 0])
+
+        g = jax.grad(loss)(w)
+        cnt = cnt + 1
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        c1 = 1 - 0.9 ** cnt.astype(jnp.float32)
+        c2 = 1 - 0.999 ** cnt.astype(jnp.float32)
+        w = w - lr * (m / c1) / (jnp.sqrt(v / c2) + 1e-8)
+        return w, m, v, cnt
+
+    ds = ScDataset(TrainView(), strategy, batch_size=64,
+                   fetch_factor=fetch_factor, seed=seed)
+    for batch in ds:  # one epoch
+        x = jnp.asarray(np.log1p(batch.to_dense()))
+        y = jnp.asarray(batch.obs[TASK].astype(np.int32))
+        w, m, v, cnt = step(w, m, v, cnt, x, y)
+    return w
+
+
+def main():
+    generate_tahoe_like(DATA, n_cells=80_000, n_genes=1024, seed=0)
+    store = load_tahoe_like(DATA)
+    test = store.shards[13][np.arange(len(store.shards[13]))]
+    x_test = jnp.asarray(np.log1p(test.to_dense()))
+    y_test = np.asarray(test.obs[TASK])
+
+    for name, strat, f in [
+        ("streaming       ", Streaming(), 1),
+        ("block b=16 f=256", BlockShuffling(16), 256),
+        ("random b=1 f=256", BlockShuffling(1), 256),
+    ]:
+        w = train_probe(store, strat, f)
+        acc = float((np.asarray(x_test @ w).argmax(-1) == y_test).mean())
+        print(f"{name}: test accuracy {acc:.3f}")
+    print("-> sequential streaming forgets early plates; "
+          "block shuffling matches random sampling (paper Fig. 5)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Multi-modal loading (paper Appendix A.1): MultiIndexable keeps RNA counts,
+a second modality (CITE-seq-style protein panel), and metadata aligned
+through the whole fetch -> reshuffle -> batch pipeline.
+
+    PYTHONPATH=src python examples/multimodal_cells.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import BlockShuffling, MultiIndexable, ScDataset
+from repro.data import generate_tahoe_like, load_tahoe_like
+
+DATA = "/tmp/multimodal_cells"
+
+
+class RnaView:
+    """Expose the CSR store as a row-indexable returning dense RNA."""
+
+    def __init__(self, store):
+        self.store = store
+
+    def __len__(self):
+        return len(self.store)
+
+    def __getitem__(self, rows):
+        return self.store[rows].to_dense()
+
+
+def main():
+    generate_tahoe_like(DATA, n_cells=30_000, n_genes=512, seed=0)
+    store = load_tahoe_like(DATA)
+    rng = np.random.default_rng(0)
+
+    # second modality: a 32-plex protein panel (memory-mapped in real life)
+    protein = rng.gamma(2.0, 1.0, size=(len(store), 32)).astype(np.float32)
+    cell_line = store.obs_column("cell_line")
+
+    mm = MultiIndexable(rna=RnaView(store), protein=protein, cell_line=cell_line)
+    ds = ScDataset(mm, BlockShuffling(16), batch_size=64, fetch_factor=16, seed=0)
+
+    batch = next(iter(ds))
+    print(f"rna {batch['rna'].shape}, protein {batch['protein'].shape}, "
+          f"labels {batch['cell_line'].shape}")
+
+    # alignment proof: modality rows correspond to the same cells
+    ds2 = ScDataset(
+        MultiIndexable(rows=np.arange(len(store)), protein=protein),
+        BlockShuffling(16), batch_size=64, fetch_factor=16, seed=0,
+    )
+    b2 = next(iter(ds2))
+    assert np.allclose(b2["protein"], protein[b2["rows"]])
+    print("modalities stay aligned through fetch -> reshuffle -> batch ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Quickstart: scDataset on a synthetic Tahoe-like cell atlas.
+
+Covers the paper's core API in ~40 lines: open an on-disk sharded CSR store
+(the AnnData stand-in), pick a sampling strategy, set (batch_size, fetch
+factor), and iterate dense minibatches — then show what block sampling did
+to the I/O pattern and to minibatch diversity.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import BlockShuffling, ScDataset
+from repro.core.theory import entropy_bounds, mean_batch_entropy
+from repro.data import generate_tahoe_like, load_tahoe_like
+
+DATA = "/tmp/quickstart_cells"
+
+
+def main():
+    # 1. a 50k-cell, 14-plate on-disk dataset (reused across runs)
+    generate_tahoe_like(DATA, n_cells=50_000, n_genes=1024, seed=0)
+    store = load_tahoe_like(DATA)
+    print(f"dataset: {store.n_obs} cells x {store.n_var} genes, "
+          f"{len(store.shards)} plate shards")
+
+    # 2. quasi-random loader: blocks of 16, fetch 64 minibatches at once
+    ds = ScDataset(
+        store,
+        BlockShuffling(block_size=16),
+        batch_size=64,
+        fetch_factor=64,
+        seed=0,
+        batch_transform=lambda b: (b.to_dense(), b.obs["plate"]),
+    )
+
+    # 3. iterate
+    plates_seen = []
+    store.iostats.reset()
+    for i, (x, plates) in enumerate(ds):
+        if i == 0:
+            print(f"minibatch: dense {x.shape} {x.dtype}, "
+                  f"plates in batch: {sorted(set(plates.tolist()))[:8]}...")
+        plates_seen.append(plates)
+        if i >= 49:
+            break
+
+    # 4. what block sampling bought us
+    st = store.iostats
+    print(f"I/O: {st.calls} backend calls, {st.runs} random extents for "
+          f"{st.rows} rows ({st.rows / max(st.runs, 1):.1f} rows per seek)")
+    mean, std = mean_batch_entropy(plates_seen)
+    sizes = np.array([len(s) for s in store.shards], np.float64)
+    lo, hi = entropy_bounds(sizes / sizes.sum(), 64, 16)
+    print(f"diversity: plate entropy {mean:.2f}±{std:.2f} "
+          f"(Cor 3.3 bounds [{lo:.2f}, {hi:.2f}]; IID would be ~{hi:.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Serve a small model with batched requests: prefill + KV-cache decode.
+
+The same prefill/decode step functions lower for the pod-scale dry-run cells
+(decode_32k / long_500k); here they run for real on the local device.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b --smoke
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main())

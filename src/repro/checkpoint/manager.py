@@ -1,0 +1,187 @@
+"""Checkpointing: atomic, resumable (incl. data-loader state), elastic.
+
+Design (DESIGN.md §6):
+
+- **Atomic**: write to ``<dir>/tmp.<step>`` then ``rename`` — a crash mid-save
+  never corrupts the latest checkpoint.
+- **Self-describing**: manifest.json records step, config name, mesh shape,
+  and the scDataset loader state (seed/epoch/fetch_cursor) — three integers
+  give exact mid-epoch resume (the paper's deterministic global index
+  sequence is what makes this possible).
+- **Elastic**: arrays are saved *unsharded* (host-gathered); restore re-shards
+  onto whatever mesh/rules the new job uses.  A job restarted on a different
+  DP degree re-partitions fetch round-robin automatically because the global
+  sequence is rank-independent.
+- **Async**: ``save(..., blocking=False)`` snapshots to host then writes on a
+  background thread, overlapping I/O with the next training steps.
+- **keep_n GC**: old checkpoints are pruned after a successful save.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager", "flatten_tree", "unflatten_tree"]
+
+_SEP = "/"
+
+
+_NP_UNSAVABLE = ("bfloat16", "float8_e4m3fn", "float8_e5m2")
+
+
+def flatten_tree(tree) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    """(arrays, extended-dtype map).  bf16/f8 leaves are stored as uint
+    views — np.savez cannot round-trip ml_dtypes — and restored via the
+    manifest's dtype record."""
+    flat, dtypes = {}, {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name in _NP_UNSAVABLE:
+            dtypes[key] = arr.dtype.name
+            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+        flat[key] = arr
+    return flat, dtypes
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def unflatten_tree(template, flat: dict[str, np.ndarray]):
+    leaves_with_path, tdef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves_with_path:
+        key = _SEP.join(_path_str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        want = tuple(leaf.shape) if hasattr(leaf, "shape") else None
+        if want is not None and tuple(arr.shape) != want:
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs model {want}")
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.dir = directory
+        self.keep_n = keep_n
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ----------------------------------------------------------------- save
+    def save(
+        self,
+        step: int,
+        state: Any,
+        *,
+        loader_state: Optional[dict] = None,
+        extra: Optional[dict] = None,
+        blocking: bool = True,
+    ) -> None:
+        # Snapshot to host synchronously (cheap vs step time); write async.
+        flat, dtypes = flatten_tree(state)
+        manifest = {
+            "step": int(step),
+            "time": time.time(),
+            "loader_state": loader_state,
+            "extra": extra or {},
+            "num_arrays": len(flat),
+            "ext_dtypes": dtypes,
+        }
+        if blocking:
+            self._write(step, flat, manifest)
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, manifest), daemon=True
+            )
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat: dict, manifest: dict) -> None:
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        tmp = os.path.join(self.dir, f"tmp.{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep_n] if self.keep_n > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"), ignore_errors=True)
+
+    # -------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self,
+        template: Any,
+        step: Optional[int] = None,
+        *,
+        shardings: Any = None,
+    ) -> tuple[Any, dict]:
+        """Load into ``template``'s structure; optionally re-shard (elastic).
+
+        ``shardings`` — a matching pytree of NamedSharding (possibly for a
+        different mesh than the one that saved) — each leaf is device_put
+        with its target sharding.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        import ml_dtypes  # shipped with jax
+
+        for k, dt in manifest.get("ext_dtypes", {}).items():
+            if k in flat:
+                flat[k] = flat[k].view(np.dtype(getattr(ml_dtypes, dt)))
+        tree = unflatten_tree(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda arr, sh: jax.device_put(arr, sh), tree, shardings
+            )
+        else:
+            tree = jax.tree.map(
+                lambda arr, t: jax.numpy.asarray(arr, dtype=getattr(t, "dtype", None)),
+                tree, template,
+            )
+        return tree, manifest

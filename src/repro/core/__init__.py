@@ -1,0 +1,41 @@
+"""repro.core — scDataset: block sampling + batched fetching (the paper's contribution).
+
+Public API:
+
+- :class:`ScDataset` — the iterable dataset (Algorithm 1).
+- Strategies: :class:`Streaming`, :class:`BlockShuffling`,
+  :class:`BlockWeightedSampling`, :class:`ClassBalancedSampling`.
+- :class:`MultiIndexable`, :class:`Callbacks` — backend-agnostic data access.
+- :class:`PrefetchPool` — work-stealing prefetch with straggler re-issue.
+- :mod:`repro.core.theory` — entropy bounds (Thms 3.1/3.2, Cor 3.3).
+- :mod:`repro.core.autotune` — (b, f) recommendation from probed I/O costs.
+"""
+from .callbacks import Callbacks, MultiIndexable, sizeof_indexable
+from .dataset import LoaderState, ScDataset
+from .prefetch import PrefetchPool, prefetch_iterator
+from .sampling import (
+    BlockShuffling,
+    BlockWeightedSampling,
+    ClassBalancedSampling,
+    SamplingStrategy,
+    Streaming,
+    class_balanced_weights,
+    epoch_rng,
+)
+
+__all__ = [
+    "ScDataset",
+    "LoaderState",
+    "Callbacks",
+    "MultiIndexable",
+    "sizeof_indexable",
+    "PrefetchPool",
+    "prefetch_iterator",
+    "SamplingStrategy",
+    "Streaming",
+    "BlockShuffling",
+    "BlockWeightedSampling",
+    "ClassBalancedSampling",
+    "class_balanced_weights",
+    "epoch_rng",
+]

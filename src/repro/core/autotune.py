@@ -1,0 +1,146 @@
+"""(b, f) autotuning (paper §5 "experimental support for automated profiling").
+
+Recommends block size and fetch factor from three measurable quantities:
+
+1. **I/O cost model** — probe the backend with a handful of timed reads to fit
+   ``t(fetch) ≈ c0 + c_seek * n_blocks + c_byte * bytes`` (fixed per-call
+   overhead, per-random-access cost, streaming bandwidth).
+2. **Memory budget** — the fetch buffer holds ``m * f`` rows; f is capped by
+   ``mem_budget / (m * row_bytes)``.
+3. **Diversity target** — Corollary 3.3: the entropy deficit of the lower
+   bound is ``(K-1) b / (2 m ln 2)``; with fetch factor f the effective
+   sample size interpolates from m/b blocks to f*m/b blocks, so we require
+   ``f * m / b >= effective_samples_target`` to keep the expected entropy
+   within ``entropy_slack`` bits of the IID value (Thm 3.1 regime).
+
+The recommendation maximizes modeled samples/sec subject to (2) and (3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from .sampling import epoch_rng
+
+__all__ = ["IOCostModel", "probe_io_cost", "recommend", "Recommendation"]
+
+_LN2 = float(np.log(2.0))
+
+
+@dataclasses.dataclass
+class IOCostModel:
+    c0: float  # fixed per-fetch-call overhead (s)
+    c_seek: float  # per-random-block cost (s)
+    c_byte: float  # per-byte streaming cost (s/B)
+    row_bytes: float  # average materialized row size (B)
+
+    def fetch_seconds(self, m: int, f: int, b: int) -> float:
+        rows = m * f
+        n_blocks = max(1, rows // max(1, b))
+        return self.c0 + self.c_seek * n_blocks + self.c_byte * rows * self.row_bytes
+
+    def samples_per_sec(self, m: int, f: int, b: int) -> float:
+        return (m * f) / max(1e-12, self.fetch_seconds(m, f, b))
+
+
+def probe_io_cost(
+    read_rows: Callable[[np.ndarray], Any],
+    n: int,
+    row_bytes: float,
+    *,
+    probes: int = 5,
+    probe_rows: int = 512,
+    seed: int = 0,
+) -> IOCostModel:
+    """Fit the 3-parameter cost model with timed random/contiguous probes.
+
+    ``read_rows(sorted_indices)`` must perform one backend call, mirroring
+    Algorithm 1 line 8.
+    """
+    rng = epoch_rng(seed, 0, 0xA070)
+    # Design: vary (n_blocks, rows) across probes and least-squares the model.
+    rows_grid = [probe_rows // 4, probe_rows, probe_rows, probe_rows * 2]
+    blocks_grid = [rows_grid[0], 1, rows_grid[2], 8]  # fully-random, contiguous, random, blocky
+    X, y = [], []
+    for _ in range(probes):
+        for rows, nb in zip(rows_grid, blocks_grid):
+            rows = min(rows, n)
+            nb = min(nb, rows)
+            bsz = max(1, rows // nb)
+            starts = np.sort(rng.integers(0, max(1, n - bsz), size=nb))
+            idx = np.concatenate([np.arange(s, s + bsz) for s in starts])[:rows]
+            idx = np.unique(idx)
+            t0 = time.perf_counter()
+            read_rows(idx)
+            dt = time.perf_counter() - t0
+            X.append([1.0, float(nb), float(len(idx) * row_bytes)])
+            y.append(dt)
+    X = np.asarray(X)
+    y = np.asarray(y)
+    coef, *_ = np.linalg.lstsq(X, y, rcond=None)
+    c0, c_seek, c_byte = (max(0.0, float(c)) for c in coef)
+    return IOCostModel(c0=c0, c_seek=c_seek, c_byte=c_byte, row_bytes=row_bytes)
+
+
+@dataclasses.dataclass
+class Recommendation:
+    block_size: int
+    fetch_factor: int
+    modeled_samples_per_sec: float
+    entropy_lower_bound: float
+    buffer_bytes: float
+    rationale: str
+
+
+def recommend(
+    cost: IOCostModel,
+    *,
+    batch_size: int = 64,
+    num_classes: int = 14,
+    class_probs: Optional[Sequence[float]] = None,
+    mem_budget_bytes: float = 2e9,
+    entropy_slack_bits: float = 0.1,
+    b_grid: Sequence[int] = (1, 4, 16, 64, 256, 1024),
+    f_grid: Sequence[int] = (1, 4, 16, 64, 256, 1024),
+) -> Recommendation:
+    """Pick (b, f) maximizing modeled throughput under memory + diversity limits."""
+    m = batch_size
+    K = num_classes
+    if class_probs is not None:
+        from .theory import distribution_entropy
+
+        K = int(np.count_nonzero(np.asarray(class_probs)))
+    # Thm 3.1 deficit at IID: (K-1)/(2 m ln2). We demand the *effective* deficit
+    # (K-1)/(2 S_eff ln2) be within entropy_slack of it, where S_eff is the
+    # effective sample size min(m, f*m/b) (blocks contributing to a batch).
+    best: Optional[Recommendation] = None
+    iid_deficit = (K - 1) / (2.0 * m * _LN2)
+    for b in b_grid:
+        for f in f_grid:
+            buffer_bytes = m * f * cost.row_bytes
+            if buffer_bytes > mem_budget_bytes:
+                continue
+            s_eff = min(m, max(1, (f * m) // max(1, b)))
+            deficit = (K - 1) / (2.0 * s_eff * _LN2)
+            if deficit - iid_deficit > entropy_slack_bits:
+                continue
+            sps = cost.samples_per_sec(m, f, b)
+            if best is None or sps > best.modeled_samples_per_sec:
+                best = Recommendation(
+                    block_size=b,
+                    fetch_factor=f,
+                    modeled_samples_per_sec=sps,
+                    entropy_lower_bound=-deficit,
+                    buffer_bytes=buffer_bytes,
+                    rationale=(
+                        f"b={b},f={f}: buffer {buffer_bytes/1e6:.1f}MB <= "
+                        f"{mem_budget_bytes/1e6:.0f}MB, entropy deficit "
+                        f"{deficit:.3f} bits (IID {iid_deficit:.3f}), modeled {sps:.0f} samp/s"
+                    ),
+                )
+    if best is None:
+        raise ValueError("no (b, f) satisfies the memory/diversity constraints")
+    return best

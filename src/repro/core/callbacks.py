@@ -1,0 +1,145 @@
+"""Callback hooks and MultiIndexable (paper §3.3, Appendix A).
+
+Four optional hooks separate data-access logic from sampling logic:
+
+- ``fetch_callback(collection, indices) -> fetched``      (once per fetch)
+- ``fetch_transform(fetched) -> transformed``             (once per fetch)
+- ``batch_callback(transformed, batch_indices) -> batch`` (once per minibatch)
+- ``batch_transform(batch) -> batch``                     (once per minibatch)
+
+Chunk-level work (sparse->dense, materialization) belongs in
+``fetch_transform`` — it runs once per ``m*f`` samples; per-minibatch work
+belongs in ``batch_transform``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+__all__ = [
+    "MultiIndexable",
+    "default_fetch_callback",
+    "default_batch_callback",
+    "Callbacks",
+    "sizeof_indexable",
+]
+
+
+class MultiIndexable:
+    """Groups multiple indexables so they are always indexed in lockstep.
+
+    Wraps a dict (or kwargs) of array-likes; ``mi[rows]`` indexes every field
+    with the same rows and returns a new MultiIndexable.  Used for multi-modal
+    records (expression matrix + labels + metadata) flowing through the
+    fetch/batch pipeline (paper Appendix A.1).
+    """
+
+    def __init__(self, fields: Optional[Mapping[str, Any]] = None, /, **kw: Any):
+        merged: dict = dict(fields or {})
+        merged.update(kw)
+        if not merged:
+            raise ValueError("MultiIndexable requires at least one field")
+        self._fields = merged
+        lens = {k: _length(v) for k, v in merged.items()}
+        distinct = set(lens.values())
+        if len(distinct) > 1:
+            raise ValueError(f"field lengths differ: {lens}")
+        self._len = distinct.pop()
+
+    @property
+    def fields(self) -> Mapping[str, Any]:
+        return dict(self._fields)
+
+    def __len__(self) -> int:
+        return self._len
+
+    def keys(self):
+        return self._fields.keys()
+
+    def __contains__(self, k) -> bool:
+        return k in self._fields
+
+    def field(self, k: str) -> Any:
+        return self._fields[k]
+
+    def __getitem__(self, rows) -> "MultiIndexable":
+        if isinstance(rows, str):
+            return self._fields[rows]
+        return MultiIndexable({k: _take(v, rows) for k, v in self._fields.items()})
+
+    def map(self, fn: Callable[[str, Any], Any]) -> "MultiIndexable":
+        return MultiIndexable({k: fn(k, v) for k, v in self._fields.items()})
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{k}: {type(v).__name__}[{_length(v)}]" for k, v in self._fields.items())
+        return f"MultiIndexable({inner})"
+
+
+def _length(v: Any) -> int:
+    if hasattr(v, "shape") and getattr(v, "shape", None) is not None and len(v.shape) > 0:
+        return int(v.shape[0])
+    return len(v)
+
+
+def _take(v: Any, rows) -> Any:
+    """Row-index an arbitrary indexable.
+
+    Mappings broadcast over values (a dict-of-arrays batch); numpy fancy
+    indexing when available; falls back to per-row gather for generic
+    sequences (e.g. python lists, custom stores).
+    """
+    if isinstance(v, np.ndarray):
+        return v[rows]
+    if isinstance(v, Mapping):
+        return {k: _take(x, rows) for k, x in v.items()}
+    if hasattr(v, "__getitem__"):
+        try:
+            return v[rows]
+        except (TypeError, IndexError, KeyError):
+            pass
+    rows = np.asarray(rows)
+    return [v[int(r)] for r in rows]
+
+
+def default_fetch_callback(collection: Any, indices: np.ndarray) -> Any:
+    """``collection[indices]`` — works for numpy, MultiIndexable, CSR stores."""
+    return _take(collection, indices)
+
+
+def default_batch_callback(transformed: Any, batch_indices: np.ndarray) -> Any:
+    """``transformed[batch_indices]`` over the in-memory fetch buffer."""
+    return _take(transformed, batch_indices)
+
+
+class Callbacks:
+    """Bundle of the four hooks with defaults (identity transforms)."""
+
+    __slots__ = ("fetch_callback", "fetch_transform", "batch_callback", "batch_transform")
+
+    def __init__(
+        self,
+        fetch_callback: Optional[Callable] = None,
+        fetch_transform: Optional[Callable] = None,
+        batch_callback: Optional[Callable] = None,
+        batch_transform: Optional[Callable] = None,
+    ):
+        self.fetch_callback = fetch_callback or default_fetch_callback
+        self.fetch_transform = fetch_transform or (lambda x: x)
+        self.batch_callback = batch_callback or default_batch_callback
+        self.batch_transform = batch_transform or (lambda x: x)
+
+
+def sizeof_indexable(x: Any) -> int:
+    """Approximate in-memory bytes of a fetched buffer (for autotuning)."""
+    if isinstance(x, np.ndarray):
+        return x.nbytes
+    if isinstance(x, MultiIndexable):
+        return sum(sizeof_indexable(v) for v in x.fields.values())
+    if isinstance(x, (list, tuple)):
+        return sum(sizeof_indexable(v) for v in x)
+    if isinstance(x, dict):
+        return sum(sizeof_indexable(v) for v in x.values())
+    if hasattr(x, "nbytes"):
+        return int(x.nbytes)
+    return 0

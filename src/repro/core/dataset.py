@@ -1,0 +1,236 @@
+"""ScDataset — block sampling with batched fetching (paper Algorithm 1).
+
+The JAX-native adaptation of the paper's PyTorch ``IterableDataset``:
+
+- A :class:`~repro.core.sampling.SamplingStrategy` emits the deterministic
+  global index sequence for the epoch (Alg. 1 lines 1–4).
+- The sequence is split into *fetches* of ``batch_size * fetch_factor``
+  indices (line 5).
+- Fetches are assigned round-robin across ``world_size`` ranks and, within a
+  rank, across prefetch workers (paper Appendix B) — every rank computes the
+  same global sequence from the shared seed, so no coordination is needed.
+- Per fetch: indices are sorted ascending (line 7) so the storage backend can
+  coalesce reads, data is loaded in ONE backend call (line 8), reshuffled in
+  memory (line 9), split into ``fetch_factor`` minibatches (line 10), and
+  yielded (lines 11–12).
+
+State is three integers (epoch, fetch cursor, seed): checkpointable,
+restartable mid-epoch, identical across ranks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterator, Optional
+
+import numpy as np
+
+from .callbacks import Callbacks, MultiIndexable, default_batch_callback
+from .sampling import BlockShuffling, SamplingStrategy, epoch_rng
+
+__all__ = ["ScDataset", "LoaderState"]
+
+
+@dataclasses.dataclass
+class LoaderState:
+    """Everything needed to resume sampling exactly where it stopped.
+
+    ``fetch_cursor`` indexes THIS RANK's fetch list; ``batch_cursor`` counts
+    minibatches already delivered from the current fetch, so a checkpoint
+    taken mid-fetch resumes on the exact next minibatch (no replay, no skip —
+    the bitwise-restart test depends on this).
+    """
+
+    seed: int
+    epoch: int
+    fetch_cursor: int
+    batch_cursor: int = 0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "LoaderState":
+        return LoaderState(int(d["seed"]), int(d["epoch"]),
+                           int(d["fetch_cursor"]), int(d.get("batch_cursor", 0)))
+
+
+class ScDataset:
+    """Iterable over minibatches drawn quasi-randomly from an on-disk collection.
+
+    Parameters mirror the paper: ``batch_size`` = m, ``fetch_factor`` = f, and
+    the block size lives inside the strategy.  ``rank``/``world_size`` give
+    DDP semantics; ``num_workers`` controls the prefetch pool (see
+    :mod:`repro.core.prefetch` for the threaded executor — iteration here is
+    synchronous and deterministic, the pool wraps it).
+    """
+
+    def __init__(
+        self,
+        collection: Any,
+        strategy: Optional[SamplingStrategy] = None,
+        *,
+        batch_size: int = 64,
+        fetch_factor: int = 1,
+        seed: int = 0,
+        rank: int = 0,
+        world_size: int = 1,
+        drop_last: bool = True,
+        callbacks: Optional[Callbacks] = None,
+        fetch_callback: Optional[Callable] = None,
+        fetch_transform: Optional[Callable] = None,
+        batch_callback: Optional[Callable] = None,
+        batch_transform: Optional[Callable] = None,
+        sort_fetch_indices: bool = True,
+    ):
+        if batch_size <= 0 or fetch_factor <= 0:
+            raise ValueError("batch_size and fetch_factor must be positive")
+        if not (0 <= rank < world_size):
+            raise ValueError(f"rank {rank} out of range for world_size {world_size}")
+        self.collection = collection
+        self.strategy = strategy or BlockShuffling(block_size=16)
+        self.batch_size = int(batch_size)
+        self.fetch_factor = int(fetch_factor)
+        self.seed = int(seed)
+        self.rank = int(rank)
+        self.world_size = int(world_size)
+        self.drop_last = bool(drop_last)
+        self.sort_fetch_indices = bool(sort_fetch_indices)
+        if callbacks is not None and any(
+            cb is not None
+            for cb in (fetch_callback, fetch_transform, batch_callback, batch_transform)
+        ):
+            raise ValueError("pass either a Callbacks bundle or individual hooks, not both")
+        self.callbacks = callbacks or Callbacks(
+            fetch_callback, fetch_transform, batch_callback, batch_transform
+        )
+        self._state = LoaderState(seed=self.seed, epoch=0, fetch_cursor=0)
+        self._order_cache: tuple[int, np.ndarray] | None = None  # (epoch, order)
+
+    # ------------------------------------------------------------------ sizes
+    def __len__(self) -> int:
+        """Minibatches yielded by THIS RANK per epoch."""
+        return len(self._rank_fetch_slices()) * self.fetch_factor
+
+    @property
+    def n(self) -> int:
+        return len(self.collection)
+
+    @property
+    def fetch_size(self) -> int:
+        return self.batch_size * self.fetch_factor
+
+    # -------------------------------------------------------------- plan
+    def _epoch_order(self, epoch: int) -> np.ndarray:
+        """Epoch index sequence, cached — pure function of (strategy, seed, epoch)."""
+        if self._order_cache is None or self._order_cache[0] != epoch:
+            self._order_cache = (epoch, self.strategy.epoch_indices(self.n, self.seed, epoch))
+        return self._order_cache[1]
+
+    def _global_fetch_count(self) -> int:
+        total = self.strategy.epoch_len(self.n)
+        if self.drop_last:
+            return total // self.fetch_size
+        return (total + self.fetch_size - 1) // self.fetch_size
+
+    def _rank_fetch_slices(self) -> list[int]:
+        """Global fetch ids owned by this rank (round-robin, Appendix B)."""
+        g = self._global_fetch_count()
+        return list(range(self.rank, g, self.world_size))
+
+    def plan_epoch(self, epoch: Optional[int] = None) -> dict:
+        """Introspection: the epoch's fetch plan without touching data."""
+        epoch = self._state.epoch if epoch is None else epoch
+        order = self._epoch_order(epoch)
+        g = self._global_fetch_count()
+        return {
+            "epoch": epoch,
+            "order_len": len(order),
+            "global_fetches": g,
+            "rank_fetches": self._rank_fetch_slices(),
+            "fetch_size": self.fetch_size,
+        }
+
+    # -------------------------------------------------------------- state
+    def state(self) -> LoaderState:
+        return dataclasses.replace(self._state)
+
+    def load_state(self, state: LoaderState) -> None:
+        if state.seed != self.seed:
+            raise ValueError(
+                f"checkpointed loader seed {state.seed} != configured seed {self.seed}; "
+                "resuming with a different seed would silently change the data order"
+            )
+        self._state = dataclasses.replace(state)
+
+    def set_epoch(self, epoch: int) -> None:
+        self._state = LoaderState(self.seed, int(epoch), 0)
+
+    # -------------------------------------------------------------- fetch
+    def fetch(self, epoch: int, global_fetch_id: int) -> list:
+        """Materialize ONE fetch: Alg. 1 lines 7–10.  Returns f minibatches.
+
+        Deterministic in ``(seed, epoch, global_fetch_id)`` alone — this is
+        what makes work stealing and straggler re-issue idempotent.
+        """
+        order = self._epoch_order(epoch)
+        lo = global_fetch_id * self.fetch_size
+        hi = min(lo + self.fetch_size, len(order))
+        fetch_idx = order[lo:hi]
+        if len(fetch_idx) == 0:
+            return []
+        cbs = self.callbacks
+
+        if self.sort_fetch_indices:
+            sort_perm = np.argsort(fetch_idx, kind="stable")  # line 7
+            sorted_idx = fetch_idx[sort_perm]
+        else:
+            sorted_idx = fetch_idx
+
+        fetched = cbs.fetch_callback(self.collection, sorted_idx)  # line 8 — the ONLY disk I/O
+        fetched = cbs.fetch_transform(fetched)
+
+        rng = epoch_rng(self.seed, epoch, 0xF37C, global_fetch_id)
+        perm = rng.permutation(len(sorted_idx))  # line 9 — in-memory reshuffle
+
+        batches = []
+        m = self.batch_size
+        nb = len(perm) // m if self.drop_last else (len(perm) + m - 1) // m
+        for j in range(nb):  # line 10
+            rows = perm[j * m : (j + 1) * m]
+            if len(rows) == 0:
+                continue
+            batch = cbs.batch_callback(fetched, rows)
+            batches.append(cbs.batch_transform(batch))
+        return batches
+
+    # -------------------------------------------------------------- iterate
+    def __iter__(self) -> Iterator:
+        """Yield minibatches, resuming from the checkpointed cursor.
+
+        State is updated BEFORE each yield (to the position of the next
+        batch) so a checkpoint taken while the consumer holds batch j
+        resumes at batch j+1 even though this generator is suspended.
+        """
+        epoch = self._state.epoch
+        my_fetches = self._rank_fetch_slices()
+        cursor = self._state.fetch_cursor
+        skip = self._state.batch_cursor
+        while cursor < len(my_fetches):
+            gid = my_fetches[cursor]
+            batches = self.fetch(epoch, gid)
+            for j, batch in enumerate(batches):
+                if j < skip:
+                    continue
+                if j + 1 < len(batches):
+                    self._state = LoaderState(self.seed, epoch, cursor, j + 1)
+                else:
+                    self._state = LoaderState(self.seed, epoch, cursor + 1, 0)
+                yield batch
+            skip = 0
+            cursor += 1
+        # epoch finished -> advance
+        self._state = LoaderState(self.seed, epoch + 1, 0, 0)
+
+    def epochs(self, num_epochs: int) -> Iterator:
+        for _ in range(num_epochs):
+            yield from iter(self)

@@ -1,0 +1,212 @@
+"""Sampling strategies — the index-generation half of scDataset (paper §3.1, §3.3).
+
+A strategy maps (dataset size, epoch seed) -> a global index sequence for one
+epoch.  Everything downstream (batched fetching, distributed round-robin
+assignment, in-memory reshuffle) consumes this sequence; strategies never touch
+data.  This is the paper's separation of *what to sample* from *how to access
+data* (Appendix A/B).
+
+All strategies are deterministic functions of ``(seed, epoch)`` so that every
+DDP rank / worker regenerates the identical global sequence from a shared seed
+(paper Appendix B) — the foundation for distributed training, work stealing,
+and exact mid-epoch resumption.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "SamplingStrategy",
+    "Streaming",
+    "BlockShuffling",
+    "BlockWeightedSampling",
+    "ClassBalancedSampling",
+    "epoch_rng",
+]
+
+
+def epoch_rng(seed: int, epoch: int, *extra: int) -> np.random.Generator:
+    """A reproducible RNG namespaced by (seed, epoch, *extra).
+
+    Uses numpy SeedSequence spawning semantics: independent streams for
+    different tuples, identical streams for identical tuples on every
+    rank/worker/restart.
+    """
+    return np.random.default_rng(np.random.SeedSequence((seed, epoch, *extra)))
+
+
+def _block_starts(n: int, block_size: int) -> np.ndarray:
+    """Start offsets of the contiguous blocks partitioning ``range(n)``."""
+    if block_size <= 0:
+        raise ValueError(f"block_size must be positive, got {block_size}")
+    return np.arange(0, n, block_size, dtype=np.int64)
+
+
+def _blocks_to_indices(starts: np.ndarray, block_size: int, n: int) -> np.ndarray:
+    """Expand block start offsets to the concatenated per-sample indices.
+
+    Vectorized Algorithm 1 line 4: ``B_{sigma(0)} || ... || B_{sigma(k-1)}``.
+    The final block may be ragged when ``n % block_size != 0``.
+    """
+    # Fast path: all blocks full.
+    if n % block_size == 0:
+        offs = np.arange(block_size, dtype=np.int64)
+        return (starts[:, None] + offs[None, :]).reshape(-1)
+    lengths = np.minimum(starts + block_size, n) - starts
+    total = int(lengths.sum())
+    out = np.empty(total, dtype=np.int64)
+    pos = 0
+    # Ragged tail blocks are rare (at most one per epoch order); loop is fine.
+    offs = np.arange(block_size, dtype=np.int64)
+    full = lengths == block_size
+    # Expand full blocks vectorized, ragged ones individually, preserving order.
+    if full.all():
+        return (starts[:, None] + offs[None, :]).reshape(-1)
+    for s, ln in zip(starts.tolist(), lengths.tolist()):
+        out[pos : pos + ln] = np.arange(s, s + ln, dtype=np.int64)
+        pos += ln
+    return out
+
+
+class SamplingStrategy:
+    """Base class.  Subclasses implement :meth:`epoch_indices`."""
+
+    def epoch_indices(self, n: int, seed: int, epoch: int) -> np.ndarray:
+        raise NotImplementedError
+
+    # Number of samples yielded per epoch (== len(epoch_indices)).  Weighted
+    # strategies may oversample; default is exactly n.
+    def epoch_len(self, n: int) -> int:
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class Streaming(SamplingStrategy):
+    """Sequential order, optionally decorrelated by a shuffle buffer.
+
+    ``shuffle_buffer == 0`` is pure sequential streaming.  A positive buffer
+    emulates the WebDataset/Ray-Data sliding shuffle buffer *on indices*: the
+    emitted order is distributed identically to running a size-``S`` reservoir
+    over the sequential stream, which lets the benchmark in paper §4.4 compare
+    against buffered streaming without a separate data path.
+    """
+
+    shuffle_buffer: int = 0
+
+    def epoch_indices(self, n: int, seed: int, epoch: int) -> np.ndarray:
+        idx = np.arange(n, dtype=np.int64)
+        S = int(self.shuffle_buffer)
+        if S <= 1:
+            return idx
+        rng = epoch_rng(seed, epoch, 0xB0FF)
+        out = np.empty(n, dtype=np.int64)
+        buf = idx[: min(S, n)].copy()
+        fill = len(buf)
+        nxt = fill
+        pos = 0
+        # Fill phase: emit a uniformly random buffer element, replace it with
+        # the next stream element.  `fill` is constant here, so picks can be
+        # pre-sampled in chunks.
+        while nxt < n:
+            chunk = min(n - nxt, 65536)
+            picks = rng.integers(0, fill, size=chunk)
+            for p in picks:
+                out[pos] = buf[p]
+                pos += 1
+                buf[p] = idx[nxt]
+                nxt += 1
+        # Drain phase: emitting random buffer elements without replacement is
+        # distributionally a uniform shuffle of the remainder.
+        rng.shuffle(buf[:fill])
+        out[pos : pos + fill] = buf[:fill]
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockShuffling(SamplingStrategy):
+    """Algorithm 1, lines 1–4: shuffle contiguous blocks, keep within-block order.
+
+    ``block_size=1`` degenerates to true random sampling (paper §4.4 baseline).
+    """
+
+    block_size: int = 16
+
+    def epoch_indices(self, n: int, seed: int, epoch: int) -> np.ndarray:
+        starts = _block_starts(n, self.block_size)
+        rng = epoch_rng(seed, epoch, 0xB10C)
+        rng.shuffle(starts)
+        return _blocks_to_indices(starts, self.block_size, n)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockWeightedSampling(SamplingStrategy):
+    """Weighted sampling with block-level I/O efficiency.
+
+    Per-sample weights are averaged per block; blocks are drawn *with
+    replacement* proportionally to their mean weight.  One epoch draws
+    ``ceil(n / block_size)`` blocks, so epoch length stays ~n while the
+    marginal inclusion probability of each sample is proportional to its
+    block's weight.  This composes with DDP sharding unchanged (paper
+    Appendix B resolves the DistributedSampler × WeightedRandomSampler
+    exclusivity).
+    """
+
+    block_size: int
+    weights: np.ndarray = dataclasses.field(repr=False, default=None)
+
+    def __post_init__(self):
+        if self.weights is None:
+            raise ValueError("BlockWeightedSampling requires per-sample weights")
+        w = np.asarray(self.weights, dtype=np.float64)
+        if (w < 0).any() or not np.isfinite(w).all() or w.sum() <= 0:
+            raise ValueError("weights must be finite, non-negative, not all zero")
+        object.__setattr__(self, "weights", w)
+
+    def _block_weights(self, n: int) -> np.ndarray:
+        if len(self.weights) != n:
+            raise ValueError(f"weights length {len(self.weights)} != dataset size {n}")
+        b = self.block_size
+        k = (n + b - 1) // b
+        pad = k * b - n
+        w = np.pad(self.weights, (0, pad))
+        bw = w.reshape(k, b).sum(axis=1)
+        return bw / bw.sum()
+
+    def epoch_indices(self, n: int, seed: int, epoch: int) -> np.ndarray:
+        starts = _block_starts(n, self.block_size)
+        p = self._block_weights(n)
+        rng = epoch_rng(seed, epoch, 0x3E16)
+        drawn = rng.choice(len(starts), size=len(starts), replace=True, p=p)
+        return _blocks_to_indices(starts[drawn], self.block_size, n)
+
+
+def class_balanced_weights(labels: Sequence) -> np.ndarray:
+    """Inverse-frequency weights: every class contributes equal expected mass."""
+    labels = np.asarray(labels)
+    _, inv, counts = np.unique(labels, return_inverse=True, return_counts=True)
+    return (1.0 / counts)[inv]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassBalancedSampling(SamplingStrategy):
+    """Automatic class balancing = BlockWeightedSampling with 1/freq weights."""
+
+    block_size: int
+    labels: np.ndarray = dataclasses.field(repr=False, default=None)
+
+    def __post_init__(self):
+        if self.labels is None:
+            raise ValueError("ClassBalancedSampling requires per-sample labels")
+
+    def _inner(self, n: int) -> BlockWeightedSampling:
+        if len(self.labels) != n:
+            raise ValueError(f"labels length {len(self.labels)} != dataset size {n}")
+        return BlockWeightedSampling(
+            block_size=self.block_size, weights=class_balanced_weights(self.labels)
+        )
+
+    def epoch_indices(self, n: int, seed: int, epoch: int) -> np.ndarray:
+        return self._inner(n).epoch_indices(n, seed, epoch)

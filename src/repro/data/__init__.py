@@ -1,0 +1,22 @@
+"""repro.data — storage substrates: on-disk CSR (AnnData-like), tokens, synthetic."""
+from .csr_store import CSRBatch, CSRStore, ShardedCSRStore, write_csr_shard
+from .iostats import CLOUD_OBJECT, NVME_SSD, SATA_SSD, IOStats, StorageModel
+from .synth import TAHOE_PLATE_FRACS, generate_tahoe_like, load_tahoe_like
+from .tokens import TokenStore, generate_token_corpus
+
+__all__ = [
+    "CSRBatch",
+    "CSRStore",
+    "ShardedCSRStore",
+    "write_csr_shard",
+    "IOStats",
+    "StorageModel",
+    "SATA_SSD",
+    "NVME_SSD",
+    "CLOUD_OBJECT",
+    "generate_tahoe_like",
+    "load_tahoe_like",
+    "TAHOE_PLATE_FRACS",
+    "TokenStore",
+    "generate_token_corpus",
+]

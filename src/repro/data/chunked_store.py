@@ -1,0 +1,103 @@
+"""Zarr-v3-style chunked dense store (paper §5's "future storage formats").
+
+The paper anticipates zarr-backed AnnData: fixed-size row chunks, each an
+independent object (cloud-friendly, concurrently readable).  This backend
+implements those semantics — one ``.npy`` per chunk of ``chunk_rows`` rows —
+so the interaction between scDataset's block size and the storage chunk size
+is measurable:
+
+- a fetch touches ``ceil(distinct_chunks)`` objects; IOStats counts one run
+  per touched chunk (object-store request semantics, unlike the CSR mmap
+  backend's extent semantics);
+- block sampling aligned to chunk boundaries (b == chunk_rows) touches the
+  theoretical minimum number of objects: bench/test assert this.
+
+Drops into ScDataset like any collection; rows return dense float32.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Optional
+
+import numpy as np
+
+from .iostats import IOStats
+
+__all__ = ["ChunkedStore", "write_chunked_store"]
+
+
+def write_chunked_store(
+    path: str,
+    X: np.ndarray,  # (n, d) dense
+    obs: Optional[dict] = None,
+    *,
+    chunk_rows: int = 256,
+) -> str:
+    os.makedirs(path, exist_ok=True)
+    n, d = X.shape
+    n_chunks = -(-n // chunk_rows)
+    for c in range(n_chunks):
+        lo, hi = c * chunk_rows, min((c + 1) * chunk_rows, n)
+        np.save(os.path.join(path, f"chunk_{c:06d}.npy"),
+                np.asarray(X[lo:hi], np.float32))
+    np.savez(os.path.join(path, "obs.npz"),
+             **{k: np.asarray(v) for k, v in (obs or {}).items()})
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"n": int(n), "d": int(d), "chunk_rows": int(chunk_rows),
+                   "n_chunks": int(n_chunks)}, f)
+    return path
+
+
+class ChunkedStore:
+    def __init__(self, path: str, iostats: Optional[IOStats] = None,
+                 cache_chunks: int = 0):
+        self.path = path
+        with open(os.path.join(path, "meta.json")) as f:
+            m = json.load(f)
+        self.n, self.d = m["n"], m["d"]
+        self.chunk_rows = m["chunk_rows"]
+        self.n_chunks = m["n_chunks"]
+        obs = np.load(os.path.join(path, "obs.npz"), allow_pickle=False)
+        self.obs = {k: obs[k] for k in obs.files}
+        self.iostats = iostats if iostats is not None else IOStats()
+        self._cache: dict[int, np.ndarray] = {}
+        self._cache_max = cache_chunks
+
+    def __len__(self) -> int:
+        return self.n
+
+    @property
+    def avg_row_bytes(self) -> float:
+        return float(self.d * 4)
+
+    def _load_chunk(self, c: int) -> np.ndarray:
+        if c in self._cache:
+            return self._cache[c]
+        arr = np.load(os.path.join(self.path, f"chunk_{c:06d}.npy"))
+        if self._cache_max:
+            if len(self._cache) >= self._cache_max:
+                self._cache.pop(next(iter(self._cache)))
+            self._cache[c] = arr
+        return arr
+
+    def __getitem__(self, rows) -> np.ndarray:
+        """One object read per distinct chunk touched (request semantics)."""
+        t0 = time.perf_counter()
+        rows = np.asarray(rows, dtype=np.int64)
+        if rows.ndim == 0:
+            rows = rows[None]
+        chunks = rows // self.chunk_rows
+        uniq = np.unique(chunks)
+        out = np.empty((len(rows), self.d), np.float32)
+        nbytes = 0
+        for c in uniq.tolist():
+            arr = self._load_chunk(int(c))
+            nbytes += arr.nbytes
+            mask = chunks == c
+            out[mask] = arr[rows[mask] - c * self.chunk_rows]
+        self.iostats.record(runs=len(uniq), rows=len(rows),
+                            bytes_read=nbytes,
+                            wall_s=time.perf_counter() - t0)
+        return out

@@ -1,0 +1,328 @@
+"""On-disk CSR cell-by-gene store — the AnnData-equivalent substrate.
+
+An AnnData .h5ad holds X as CSR (data / indices / indptr) plus obs metadata.
+Without h5py in this container we store the same three arrays as raw ``.npy``
+files opened with ``mmap_mode='r'`` — identical asymptotics: per-call
+overhead, random-extent penalty, contiguous-read advantage.  The store is the
+``collection`` an :class:`repro.core.ScDataset` indexes.
+
+Two key classes:
+
+- :class:`CSRStore` — one shard (= one "plate file" in Tahoe-100M terms).
+- :class:`ShardedCSRStore` — lazy concatenation of shards, mirroring
+  ``anndata.experimental.AnnCollection`` over the 14 Tahoe plate files.
+
+Indexing ``store[rows]`` (rows sorted or not) performs run-coalesced reads:
+sorted rows are grouped into maximal contiguous runs, each run is ONE slice
+read of the memmaps.  ``IOStats.runs`` therefore counts exactly the random
+accesses of the paper's cost model, and block sampling reduces it by
+construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .iostats import IOStats
+
+__all__ = ["CSRBatch", "CSRStore", "ShardedCSRStore", "write_csr_shard"]
+
+
+@dataclasses.dataclass
+class CSRBatch:
+    """A materialized batch of sparse rows (local CSR) + aligned obs columns.
+
+    Supports row indexing so it can flow through ScDataset's in-memory
+    reshuffle/batching (Algorithm 1 lines 9–10) without densification;
+    ``to_dense`` is the fetch_transform hot-spot (Pallas kernel on TPU —
+    see repro.kernels.csr_to_dense).
+    """
+
+    data: np.ndarray  # (nnz,) float32
+    indices: np.ndarray  # (nnz,) int32 gene ids
+    indptr: np.ndarray  # (rows+1,) int64
+    n_var: int
+    obs: dict  # column -> (rows,) array
+
+    def __len__(self) -> int:
+        return len(self.indptr) - 1
+
+    def __getitem__(self, rows) -> "CSRBatch":
+        rows = np.asarray(rows)
+        if rows.dtype == bool:
+            rows = np.flatnonzero(rows)
+        starts = self.indptr[rows]
+        ends = self.indptr[rows + 1]
+        lens = ends - starts
+        new_indptr = np.zeros(len(rows) + 1, dtype=np.int64)
+        np.cumsum(lens, out=new_indptr[1:])
+        gather = _ranges_concat(starts, lens)
+        return CSRBatch(
+            data=self.data[gather],
+            indices=self.indices[gather],
+            indptr=new_indptr,
+            n_var=self.n_var,
+            obs={k: v[rows] for k, v in self.obs.items()},
+        )
+
+    def to_dense(self) -> np.ndarray:
+        """Dense (rows, n_var).  Assumes canonical CSR (unique columns per
+        row, as AnnData guarantees) — duplicate columns would overwrite, not
+        accumulate; ``to_ell`` + the Pallas kernel accumulate."""
+        out = np.zeros((len(self), self.n_var), dtype=np.float32)
+        rows = np.repeat(
+            np.arange(len(self)), np.diff(self.indptr).astype(np.int64)
+        )
+        out[rows, self.indices.astype(np.int64)] = self.data
+        return out
+
+    def to_ell(self, k_max: Optional[int] = None) -> tuple[np.ndarray, np.ndarray]:
+        """Pad to ELL format (rows, K): (values, cols) with col=-1 padding.
+
+        This is the TPU-friendly layout consumed by the csr_to_dense Pallas
+        kernel (see DESIGN.md §2).
+        """
+        lens = np.diff(self.indptr).astype(np.int64)
+        K = int(lens.max() if k_max is None else k_max)
+        r = len(self)
+        vals = np.zeros((r, K), dtype=np.float32)
+        cols = np.full((r, K), -1, dtype=np.int32)
+        row_ids = np.repeat(np.arange(r), np.minimum(lens, K))
+        # within-row positions
+        pos = _within_run_positions(np.minimum(lens, K))
+        src = _ranges_concat(self.indptr[:-1], np.minimum(lens, K))
+        vals[row_ids, pos] = self.data[src]
+        cols[row_ids, pos] = self.indices[src]
+        return vals, cols
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.data.nbytes + self.indices.nbytes + self.indptr.nbytes)
+
+
+def _ranges_concat(starts: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """Concatenate [s, s+len) ranges — vectorized (no per-row python loop)."""
+    lens = lens.astype(np.int64)
+    total = int(lens.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64)
+    # classic trick: cumulative offsets with resets at range boundaries
+    out = np.ones(total, dtype=np.int64)
+    ends = np.cumsum(lens)
+    out[0] = starts[0]
+    nz = lens > 0
+    first_pos = np.concatenate(([0], ends[:-1]))[nz]
+    starts_nz = starts[nz]
+    prev_end = starts_nz[:-1] + lens[nz][:-1]
+    out[first_pos[0]] = starts_nz[0]
+    if len(starts_nz) > 1:
+        out[first_pos[1:]] = starts_nz[1:] - prev_end + 1
+    return np.cumsum(out)
+
+
+def _within_run_positions(lens: np.ndarray) -> np.ndarray:
+    """[0..l0), [0..l1), ... concatenated."""
+    lens = lens.astype(np.int64)
+    total = int(lens.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64)
+    ids = np.repeat(np.arange(len(lens)), lens)
+    offsets = np.concatenate(([0], np.cumsum(lens)[:-1]))
+    return np.arange(total) - offsets[ids]
+
+
+def _contiguous_runs(sorted_rows: np.ndarray) -> list[tuple[int, int]]:
+    """Maximal [start, stop) runs in an ascending-sorted unique-ish index array."""
+    if len(sorted_rows) == 0:
+        return []
+    breaks = np.flatnonzero(np.diff(sorted_rows) != 1)
+    starts = np.concatenate(([0], breaks + 1))
+    stops = np.concatenate((breaks + 1, [len(sorted_rows)]))
+    return [(int(sorted_rows[a]), int(sorted_rows[b - 1]) + 1) for a, b in zip(starts, stops)]
+
+
+class CSRStore:
+    """One on-disk CSR shard: data.npy / indices.npy / indptr.npy / obs.npz / meta.json."""
+
+    def __init__(self, path: str, iostats: Optional[IOStats] = None):
+        self.path = path
+        with open(os.path.join(path, "meta.json")) as f:
+            self.meta = json.load(f)
+        self.n_obs = int(self.meta["n_obs"])
+        self.n_var = int(self.meta["n_var"])
+        self._data = np.load(os.path.join(path, "data.npy"), mmap_mode="r")
+        self._indices = np.load(os.path.join(path, "indices.npy"), mmap_mode="r")
+        self._indptr = np.load(os.path.join(path, "indptr.npy"))  # small; in RAM
+        obs_npz = np.load(os.path.join(path, "obs.npz"), allow_pickle=False)
+        self._obs = {k: obs_npz[k] for k in obs_npz.files}
+        self.iostats = iostats if iostats is not None else IOStats()
+        self._row_bytes = (
+            (self._data.nbytes + self._indices.nbytes) / max(1, self.n_obs)
+        )
+
+    def __len__(self) -> int:
+        return self.n_obs
+
+    @property
+    def obs(self) -> dict:
+        return self._obs
+
+    @property
+    def avg_row_bytes(self) -> float:
+        return self._row_bytes
+
+    def __getitem__(self, rows) -> CSRBatch:
+        """Run-coalesced batched read (Algorithm 1 line 8).
+
+        One memmap slice copy per contiguous run; IOStats.runs counts them.
+        Rows may be unsorted or contain duplicates (weighted sampling); data
+        is returned in the order given.
+        """
+        t0 = time.perf_counter()
+        rows = np.asarray(rows, dtype=np.int64)
+        if rows.ndim == 0:
+            rows = rows[None]
+        order = np.argsort(rows, kind="stable")
+        srows = rows[order]
+        uniq = np.unique(srows)
+        runs = _contiguous_runs(uniq)
+
+        # Read each run once (the only disk I/O), concatenating into one buffer.
+        run_data, run_idx = [], []
+        run_buf_off = np.zeros(len(runs), dtype=np.int64)  # run -> offset in buf
+        run_lo = np.zeros(len(runs), dtype=np.int64)  # run -> indptr offset of run start
+        bytes_read = 0
+        cum = 0
+        for k, (a, b) in enumerate(runs):
+            lo, hi = int(self._indptr[a]), int(self._indptr[b])
+            d = np.asarray(self._data[lo:hi])
+            i = np.asarray(self._indices[lo:hi])
+            bytes_read += d.nbytes + i.nbytes
+            run_data.append(d)
+            run_idx.append(i)
+            run_buf_off[k] = cum
+            run_lo[k] = lo
+            cum += hi - lo
+        buf_data = np.concatenate(run_data) if run_data else np.empty(0, self._data.dtype)
+        buf_idx = np.concatenate(run_idx) if run_idx else np.empty(0, self._indices.dtype)
+
+        # Vectorized assembly (handles duplicates & arbitrary original order):
+        # each requested row maps to a source span inside the run buffer.
+        lens_all = np.diff(self._indptr)
+        out_lens = lens_all[rows].astype(np.int64)
+        out_indptr = np.zeros(len(rows) + 1, dtype=np.int64)
+        np.cumsum(out_lens, out=out_indptr[1:])
+        run_stops_arr = np.array([b for _, b in runs], dtype=np.int64)
+        which_run = np.searchsorted(run_stops_arr, rows, side="right")
+        src_starts = run_buf_off[which_run] + (self._indptr[rows] - run_lo[which_run])
+        gather = _ranges_concat(src_starts, out_lens)
+        data = buf_data[gather]
+        indices = buf_idx[gather]
+
+        obs = {k: v[rows] for k, v in self._obs.items()}
+        self.iostats.record(
+            runs=len(runs), rows=len(rows), bytes_read=bytes_read,
+            wall_s=time.perf_counter() - t0,
+        )
+        return CSRBatch(data=data, indices=indices, indptr=out_indptr,
+                        n_var=self.n_var, obs=obs)
+
+
+class ShardedCSRStore:
+    """Lazy concatenation of CSR shards (the 14 Tahoe plate files).
+
+    Global row ids map to (shard, local row); a batched read dispatches each
+    shard's rows in one call, preserving the caller's row order on return.
+    """
+
+    def __init__(self, shard_paths: Sequence[str], iostats: Optional[IOStats] = None):
+        if not shard_paths:
+            raise ValueError("need at least one shard")
+        self.iostats = iostats if iostats is not None else IOStats()
+        self.shards = [CSRStore(p, iostats=self.iostats) for p in shard_paths]
+        n_vars = {s.n_var for s in self.shards}
+        if len(n_vars) != 1:
+            raise ValueError(f"shards disagree on n_var: {n_vars}")
+        self.n_var = n_vars.pop()
+        sizes = np.array([len(s) for s in self.shards], dtype=np.int64)
+        self.offsets = np.concatenate(([0], np.cumsum(sizes)))
+        self.n_obs = int(self.offsets[-1])
+
+    def __len__(self) -> int:
+        return self.n_obs
+
+    @property
+    def avg_row_bytes(self) -> float:
+        return float(np.mean([s.avg_row_bytes for s in self.shards]))
+
+    @property
+    def obs_keys(self) -> list[str]:
+        return list(self.shards[0].obs.keys())
+
+    def obs_column(self, key: str) -> np.ndarray:
+        """Materialize a full metadata column across shards (small)."""
+        return np.concatenate([s.obs[key] for s in self.shards])
+
+    def __getitem__(self, rows) -> CSRBatch:
+        rows = np.asarray(rows, dtype=np.int64)
+        if rows.ndim == 0:
+            rows = rows[None]
+        shard_ids = np.searchsorted(self.offsets, rows, side="right") - 1
+        batches: list[Optional[CSRBatch]] = [None] * len(self.shards)
+        back_perm = np.empty(len(rows), dtype=np.int64)
+        cursor = 0
+        for sid in np.unique(shard_ids):
+            mask = shard_ids == sid
+            local = rows[mask] - self.offsets[sid]
+            batches[sid] = self.shards[sid][local]
+            back_perm[np.flatnonzero(mask)] = np.arange(cursor, cursor + mask.sum())
+            cursor += int(mask.sum())
+        got = [b for b in batches if b is not None]
+        merged = _concat_batches(got, self.n_var)
+        # restore original order
+        return merged[back_perm]
+
+
+def _concat_batches(batches: Sequence[CSRBatch], n_var: int) -> CSRBatch:
+    if len(batches) == 1:
+        return batches[0]
+    data = np.concatenate([b.data for b in batches])
+    indices = np.concatenate([b.indices for b in batches])
+    lens = np.concatenate([np.diff(b.indptr) for b in batches])
+    indptr = np.zeros(len(lens) + 1, dtype=np.int64)
+    np.cumsum(lens, out=indptr[1:])
+    keys = batches[0].obs.keys()
+    obs = {k: np.concatenate([b.obs[k] for b in batches]) for k in keys}
+    return CSRBatch(data=data, indices=indices, indptr=indptr, n_var=n_var, obs=obs)
+
+
+def write_csr_shard(
+    path: str,
+    data: np.ndarray,
+    indices: np.ndarray,
+    indptr: np.ndarray,
+    n_var: int,
+    obs: dict,
+    extra_meta: Optional[dict] = None,
+) -> None:
+    """Write one shard to disk (atomically enough for tests: tmp dir + rename)."""
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    np.save(os.path.join(tmp, "data.npy"), np.asarray(data, dtype=np.float32))
+    np.save(os.path.join(tmp, "indices.npy"), np.asarray(indices, dtype=np.int32))
+    np.save(os.path.join(tmp, "indptr.npy"), np.asarray(indptr, dtype=np.int64))
+    np.savez(os.path.join(tmp, "obs.npz"), **{k: np.asarray(v) for k, v in obs.items()})
+    meta = {"n_obs": int(len(indptr) - 1), "n_var": int(n_var)}
+    meta.update(extra_meta or {})
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(path):
+        import shutil
+
+        shutil.rmtree(path)
+    os.rename(tmp, path)

@@ -1,0 +1,91 @@
+"""I/O instrumentation and a calibratable storage-latency model.
+
+The container's filesystem (page-cached mmap on a VM disk) does not expose the
+SATA-SSD random-access penalty the paper measures, so every backend threads an
+:class:`IOStats` through its reads.  It records the quantities the paper's
+cost argument is built on — number of backend calls, number of *random runs*
+(distinct contiguous extents touched = seeks), and bytes moved — and can
+optionally *simulate* a storage regime by sleeping ``seek_s`` per run and
+``1/bw_Bps`` per byte.  Benchmarks report both measured wall-clock and the
+modeled time so the reproduction is explicit about what is real and what is
+calibrated (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+__all__ = ["IOStats", "StorageModel", "SATA_SSD", "NVME_SSD", "CLOUD_OBJECT"]
+
+
+@dataclasses.dataclass
+class StorageModel:
+    """Per-run (seek/request) latency and streaming bandwidth."""
+
+    name: str
+    seek_s: float  # cost of one random access / request round-trip
+    bw_Bps: float  # sequential streaming bandwidth
+
+    def seconds(self, runs: int, bytes_read: int) -> float:
+        return runs * self.seek_s + bytes_read / self.bw_Bps
+
+
+# Calibrated so that ~20 samples/sec emerge for one-random-row-per-sample reads
+# of ~50KB sparse rows, matching the paper's AnnLoader baseline on SATA SSD
+# (paper §1: ~20 samples/sec, §4.1).  0.05s/seek is the effective per-call
+# HDF5+SATA latency implied by that number; raw device seek is lower but the
+# paper's figure folds in HDF5 chunk decode per call.
+SATA_SSD = StorageModel("sata_ssd_hdf5", seek_s=0.048, bw_Bps=450e6)
+NVME_SSD = StorageModel("nvme_ssd", seek_s=0.0008, bw_Bps=3.2e9)
+CLOUD_OBJECT = StorageModel("cloud_object", seek_s=0.030, bw_Bps=1.0e9)
+
+
+@dataclasses.dataclass
+class IOStats:
+    """Counters threaded through backend reads.
+
+    ``simulate`` — if set, reads sleep according to the model (scaled by
+    ``simulate_scale`` so CI stays fast while ratios are preserved).
+    """
+
+    calls: int = 0
+    runs: int = 0  # contiguous extents touched == random accesses
+    rows: int = 0
+    bytes_read: int = 0
+    wall_s: float = 0.0
+    simulate: Optional[StorageModel] = None
+    simulate_scale: float = 1.0
+    modeled_s: float = 0.0
+
+    def record(self, *, runs: int, rows: int, bytes_read: int, wall_s: float) -> None:
+        self.calls += 1
+        self.runs += runs
+        self.rows += rows
+        self.bytes_read += bytes_read
+        self.wall_s += wall_s
+        if self.simulate is not None:
+            dt = self.simulate.seconds(runs, bytes_read)
+            self.modeled_s += dt
+            if self.simulate_scale > 0:
+                time.sleep(dt * self.simulate_scale)
+
+    def reset(self) -> None:
+        self.calls = self.runs = self.rows = self.bytes_read = 0
+        self.wall_s = self.modeled_s = 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "calls": self.calls,
+            "runs": self.runs,
+            "rows": self.rows,
+            "bytes_read": self.bytes_read,
+            "wall_s": self.wall_s,
+            "modeled_s": self.modeled_s,
+        }
+
+    def total_seconds(self) -> float:
+        """Wall time plus any un-slept modeled time (simulate_scale < 1)."""
+        if self.simulate is None:
+            return self.wall_s
+        return self.wall_s + self.modeled_s * max(0.0, 1.0 - self.simulate_scale)

@@ -1,0 +1,86 @@
+"""Gradient compression for cross-pod (DCN) reduction — error-feedback int8.
+
+At 1000+ nodes the pod-to-pod gradient all-reduce crosses DCN, ~10x slower
+than ICI.  Quantizing gradients to int8 with per-block scales cuts those
+bytes 2x vs bf16 (4x vs fp32) at equal step count; error feedback keeps the
+quantization bias from accumulating (residual carried between steps).
+
+Usage (off by default; wired in via ``make_compressed_update``)::
+
+    q, scale, new_resid = quantize_ef(grad_leaf, resid_leaf)
+    # all-reduce q (int8) + scale (f32) across the 'pod' axis, then:
+    g_hat = dequantize(q_sum, scale_sum)
+
+This is deliberately demo-grade: the quantizer is validated by property tests
+(tests/test_compression.py) for shape/dtype invariants and bounded error;
+it is exercised in the multi-pod dry-run via a rules variant, not in the
+default path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_ef", "dequantize", "compress_tree", "decompress_tree"]
+
+_BLOCK = 256
+
+
+def _pad_to_block(x: jax.Array) -> tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def quantize_ef(
+    g: jax.Array, residual: Optional[jax.Array] = None
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (int8 codes (N/B, B), f32 scales (N/B,), new residual like g)."""
+    gf = g.astype(jnp.float32)
+    if residual is not None:
+        gf = gf + residual.astype(jnp.float32)
+    flat, _ = _pad_to_block(gf)
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[: gf.size]
+    new_residual = (gf - deq.reshape(gf.shape)).astype(gf.dtype)
+    return q, scale, new_residual
+
+
+def dequantize(q: jax.Array, scale: jax.Array, shape: tuple, dtype) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_tree(grads, residuals=None):
+    """Quantize every leaf; returns (codes, scales, residuals) trees."""
+    leaves, tdef = jax.tree.flatten(grads)
+    res_leaves = tdef.flatten_up_to(residuals) if residuals is not None else [None] * len(leaves)
+    qs, ss, rs = [], [], []
+    for g, r in zip(leaves, res_leaves):
+        q, s, nr = quantize_ef(g, r)
+        qs.append(q)
+        ss.append(s)
+        rs.append(nr)
+    return (jax.tree.unflatten(tdef, qs), jax.tree.unflatten(tdef, ss),
+            jax.tree.unflatten(tdef, rs))
+
+
+def decompress_tree(codes, scales, template):
+    leaves_t, tdef = jax.tree.flatten(template)
+    leaves_q = tdef.flatten_up_to(codes)
+    leaves_s = tdef.flatten_up_to(scales)
+    out = [
+        dequantize(q, s, t.shape, t.dtype)
+        for q, s, t in zip(leaves_q, leaves_s, leaves_t)
+    ]
+    return jax.tree.unflatten(tdef, out)

@@ -1,0 +1,58 @@
+"""Trace-time sharding context for activation constraints.
+
+Models are mesh-agnostic; they call :func:`constrain_act` with *logical* axis
+names at GSPMD-propagation-critical points (post-embedding, q/k/v, MoE
+dispatch, logits...).  When the launch layer traces a step inside
+``sharding_context(mesh, rules)`` these become
+``jax.lax.with_sharding_constraint``; with no context they are no-ops, so
+smoke tests and single-device examples run unchanged.
+
+Why this exists: sharding propagation through gathers/scans is heuristic —
+e.g. the token-embedding gather prefers passing through the table's FSDP
+sharding and DROPS the batch sharding of the indices, silently replicating
+every activation downstream (measured: 801GB/device for smollm-360m before
+constraints, 3.4GB after).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+
+from .sharding import Rules, sharding_for_axes
+
+__all__ = ["sharding_context", "constrain_act", "current_context"]
+
+_TLS = threading.local()
+
+
+def current_context():
+    return getattr(_TLS, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh, rules: Rules):
+    prev = current_context()
+    _TLS.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def constrain_act(x: jax.Array, axes: Sequence[Optional[str]]):
+    """Logical with_sharding_constraint; identity when no context is set."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(axes) != x.ndim:
+        raise ValueError(f"axes {axes} vs rank-{x.ndim} array {x.shape}")
+    from jax.sharding import NamedSharding
+
+    from .sharding import spec_for_axes
+
+    spec = spec_for_axes(axes, rules, mesh, x.shape, strict=False)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

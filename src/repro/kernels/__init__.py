@@ -1,0 +1,9 @@
+"""repro.kernels — Pallas TPU kernels for the perf-critical layers.
+
+<name>.py holds the pl.pallas_call + BlockSpec kernel, ref.py the pure-jnp
+oracle, ops.py the dispatching wrappers.  Validated in interpret mode on CPU
+(tests/test_kernels_*.py); compiled for real on TPU.
+"""
+from .ops import default_backend, ell_to_dense, flash_attention, ssm_scan
+
+__all__ = ["ell_to_dense", "flash_attention", "ssm_scan", "default_backend"]

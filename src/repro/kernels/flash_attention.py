@@ -1,0 +1,144 @@
+"""Flash attention (forward) — Pallas TPU kernel with online softmax.
+
+Tiling: grid (B·H, S/BQ, T/BK); the KV axis is the innermost ("arbitrary")
+dimension so the (m, l, acc) running statistics live in VMEM scratch across
+KV tiles of the same query tile (the classic revisiting pattern).  GQA is
+handled in the *index map* — the kv block for query head h is h // group —
+so grouped K/V are never materialized at H width.  Causal and sliding-window
+masks are applied per-tile from absolute positions; fully-masked tiles still
+execute (masked) — tile skipping is a recorded §Perf follow-up.
+
+VMEM per program: BQ·D (q) + 2·BK·D (k,v) + BQ·BK f32 (scores) + BQ·D f32
+(acc) + 2·BQ (m, l) — at (BQ, BK, D) = (256, 512, 128): ≈ 1.2 MB, well
+under the ~16 MB v5e VMEM with headroom for double buffering; the two
+dot_generals hit the 128×128 MXU with aligned tiles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            block_q: int, block_k: int, n_k: int, q_offset: int, t_valid: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (BQ, D)
+    k = k_ref[0, 0]  # (BK, D)
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (BQ, BK)
+
+    qpos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = kpos < t_valid  # padded keys never attend
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]  # (BQ, 1)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_prev * alpha + p.sum(axis=1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (BQ, D)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret",
+                     "q_offset"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, Hkv, T, D)
+    v: jax.Array,  # (B, Hkv, T, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (B, H, S, D) attention output; GQA via Hkv < H."""
+    B, H, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    assert H % Hkv == 0, (H, Hkv)
+    g = H // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    Sp = -(-S // block_q) * block_q
+    Tp = -(-T // block_k) * block_k
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    qf = q.reshape(B * H, Sp, D)
+    n_k = Tp // block_k
+    grid = (B * H, Sp // block_q, n_k)
+
+    def kv_index(bh, qi, ki):
+        return (bh // H, (bh % H) // g, ki, 0)
+
+    kernel = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(D), causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k, q_offset=q_offset,
+        t_valid=T,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D), kv_index),
+            pl.BlockSpec((1, 1, block_k, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running denom l
+            pltpu.VMEM((block_q, D), jnp.float32),  # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(qf, k, v)
+    return out.reshape(B, H, Sp, D)[:, :, :S, :]

@@ -1,0 +1,326 @@
+"""Flash attention backward — Pallas TPU kernels + custom_vjp wiring.
+
+Forward saves only (out, lse) per row (O(B·H·S·(D+1)) — no S×T scores);
+backward recomputes probabilities per tile (the flash recipe):
+
+    p   = exp(q·kᵀ·scale − lse)
+    dv  = pᵀ · dO
+    dp  = dO · vᵀ
+    ds  = p ⊙ (dp − Δ),   Δ = rowsum(dO ⊙ O)
+    dq  = ds · k · scale ;  dk = dsᵀ · q · scale
+
+Two kernels with the same tiling discipline as the forward:
+- ``_dq_kernel``: grid (B·H, S/BQ, T/BK), revisits the dq tile across KV
+  tiles (VMEM scratch accumulator);
+- ``_dkv_kernel``: grid (B·H, T/BK, S/BQ), revisits (dk, dv) tiles across
+  query tiles.
+
+GQA: the vjp reduces dk/dv over the query-head group outside the kernel
+(sum over the group axis), keeping the kernels MHA-shaped.
+``flash_attention_vjp`` is the differentiable entry point; oracle =
+``jax.grad`` of ``ref.flash_attention_ref`` (tests/test_kernels_bwd.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .flash_attention import flash_attention as _fwd_noresid
+
+__all__ = ["flash_attention_vjp", "flash_attention_fwd_lse"]
+
+_NEG = -1e30
+
+
+# ------------------------------------------------------------------ fwd+lse
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref, *,
+                scale, causal, window, block_q, block_k, n_k, t_valid):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q, k, v = q_ref[0], k_ref[0, 0], v_ref[0, 0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < t_valid
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_prev * alpha + p.sum(axis=1, keepdims=True)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...], l_ref[...] = m_new, l_new
+
+    @pl.when(ki == n_k - 1)
+    def _():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse_ref[0] = (m_ref[...] + jnp.log(l))[:, 0]
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_ref, *, scale, causal, window, block_q, block_k, n_k, t_valid):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q, k, v = q_ref[0], k_ref[0, 0], v_ref[0, 0]
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0][:, None]
+    delta = delta_ref[0][:, None]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < t_valid
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)
+    dp = jax.lax.dot_general(do, v.astype(jnp.float32), (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta)
+    acc_ref[...] += jax.lax.dot_general(
+        ds, k.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+    @pl.when(ki == n_k - 1)
+    def _():
+        dq_ref[0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc, *,
+                scale, causal, window, block_q, block_k, n_q, t_valid):
+    ki, qi = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q, k, v = q_ref[0, 0], k_ref[0], v_ref[0]
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0][:, None]
+    delta = delta_ref[0, 0][:, None]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < t_valid
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)  # (BQ, BK)
+    dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v.astype(jnp.float32), (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta)  # (BQ, BK)
+    dk_acc[...] += jax.lax.dot_general(
+        ds, q.astype(jnp.float32), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+    @pl.when(qi == n_q - 1)
+    def _():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+# ------------------------------------------------------------------ plumbing
+def _pad_to(x, n, axis):
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def flash_attention_fwd_lse(q, k, v, *, causal, window, block_q, block_k,
+                            interpret):
+    """(out, lse); q (BH, S, D), k/v (B, Hkv, T, D) expanded via index map."""
+    BH, S, D = q.shape
+    B, Hkv, T, _ = k.shape
+    H = BH // B
+    g = H // Hkv
+    Sp = -(-S // block_q) * block_q
+    Tp = -(-T // block_k) * block_k
+    q = _pad_to(q, Sp, 1)
+    k = _pad_to(k, Tp, 2)
+    v = _pad_to(v, Tp, 2)
+    n_k = Tp // block_k
+    grid = (BH, Sp // block_q, n_k)
+
+    def kv_index(bh, qi, ki):
+        return (bh // H, (bh % H) // g, ki, 0)
+
+    kern = functools.partial(
+        _fwd_kernel, scale=1.0 / math.sqrt(D), causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k, t_valid=T)
+    out, lse = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D), kv_index),
+            pl.BlockSpec((1, 1, block_k, D), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sp, D), q.dtype),
+            jax.ShapeDtypeStruct((BH, Sp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S], lse[:, :S]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_vjp(q, k, v, causal=True, window=None, block_q=128,
+                        block_k=128, interpret=False):
+    """Differentiable flash attention.  q (B,H,S,D), k/v (B,Hkv,T,D)."""
+    out, _ = _vjp_fwd(q, k, v, causal, window, block_q, block_k, interpret)
+    return out
+
+
+def _vjp_fwd(q, k, v, causal, window, block_q, block_k, interpret):
+    B, H, S, D = q.shape
+    qf = q.reshape(B * H, S, D)
+    out, lse = flash_attention_fwd_lse(
+        qf, k, v, causal=causal, window=window,
+        block_q=min(block_q, S), block_k=min(block_k, k.shape[2]),
+        interpret=interpret)
+    return out.reshape(B, H, S, D), (q, k, v, out.reshape(B, H, S, D), lse)
+
+
+def _vjp_bwd(causal, window, block_q, block_k, interpret, resid, dout):
+    q, k, v, out, lse = resid
+    B, H, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    g = H // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    scale = 1.0 / math.sqrt(D)
+
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1).reshape(B * H, S)  # (BH, S)
+    qf = q.reshape(B * H, S, D)
+    dof = dout.reshape(B * H, S, D)
+
+    Sp = -(-S // block_q) * block_q
+    Tp = -(-T // block_k) * block_k
+    qp = _pad_to(qf, Sp, 1)
+    dop = _pad_to(dof, Sp, 1)
+    lsep = _pad_to(lse, Sp, 1)
+    dlt = _pad_to(delta, Sp, 1)
+    kp = _pad_to(k, Tp, 2)
+    vp = _pad_to(v, Tp, 2)
+    n_k, n_q = Tp // block_k, Sp // block_q
+
+    def kv_index(bh, qi, ki):
+        return (bh // H, (bh % H) // g, ki, 0)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          n_k=n_k, t_valid=T),
+        grid=(B * H, Sp // block_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D), kv_index),
+            pl.BlockSpec((1, 1, block_k, D), kv_index),
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
+            pl.BlockSpec((1, block_q), lambda bh, qi, ki: (bh, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+        interpret=interpret,
+    )(qp, kp, vp, dop, lsep, dlt)
+
+    # dk/dv at query-head resolution (BH, Tp, D); grid revisits over q tiles
+    qg = qp.reshape(B * H, Sp, D)
+
+    def q_index(bh, ki, qi):
+        return (bh, qi, 0)
+
+    def kv_index2(bh, ki, qi):
+        return (bh // H, (bh % H) // g, ki, 0)
+
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          n_q=n_q, t_valid=T),
+        grid=(B * H, Tp // block_k, n_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda bh, ki, qi: (bh, 0, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, ki, qi: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, ki, qi: (bh, ki, 0)),
+            pl.BlockSpec((1, 1, block_q, D), lambda bh, ki, qi: (bh, 0, qi, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda bh, ki, qi: (bh, 0, qi)),
+            pl.BlockSpec((1, 1, block_q), lambda bh, ki, qi: (bh, 0, qi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, D), lambda bh, ki, qi: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, ki, qi: (bh, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Tp, D), k.dtype),
+            jax.ShapeDtypeStruct((B * H, Tp, D), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, D), jnp.float32),
+            pltpu.VMEM((block_k, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        qg[:, None], _expand_bh(kp, B, H, g), _expand_bh(vp, B, H, g),
+        dop[:, None], lsep[:, None], dlt[:, None],
+    )
+    # reduce over the query-head group -> kv heads
+    dk = dk_h[:, :T].reshape(B, Hkv, g, T, D).sum(axis=2)
+    dv = dv_h[:, :T].reshape(B, Hkv, g, T, D).sum(axis=2)
+    return dq[:, :S].reshape(B, H, S, D), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+def _expand_bh(kv, B, H, g):
+    """(B, Hkv, Tp, D) -> (B*H, Tp, D) by repeating each kv head g times."""
+    Bk, Hkv, Tp, D = kv.shape
+    return jnp.repeat(kv, g, axis=1).reshape(B * H, Tp, D)
+
+
+flash_attention_vjp.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,54 @@
+"""Public kernel entry points with platform dispatch.
+
+``use_pallas='auto'`` picks the Pallas kernel on TPU and the pure-jnp
+reference elsewhere (the CPU backend cannot compile Mosaic TPU kernels;
+interpret mode is for validation, not production).  Models call these so the
+hot paths switch implementation per deployment without touching model code.
+"""
+from __future__ import annotations
+
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .csr_to_dense import ell_to_dense as _ell_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .ssm_scan import ssm_scan as _ssm_pallas
+
+__all__ = ["ell_to_dense", "flash_attention", "ssm_scan", "default_backend"]
+
+Backend = Literal["pallas", "ref", "interpret", "auto"]
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve(backend: Backend) -> str:
+    return default_backend() if backend == "auto" else backend
+
+
+def ell_to_dense(vals, cols, *, n_cols: int, backend: Backend = "auto", **kw):
+    b = _resolve(backend)
+    if b == "ref":
+        return _ref.ell_to_dense_ref(vals, cols, n_cols)
+    return _ell_pallas(vals, cols, n_cols=n_cols, interpret=(b == "interpret"), **kw)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, backend: Backend = "auto", **kw):
+    b = _resolve(backend)
+    if b == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                        q_offset=q_offset)
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         q_offset=q_offset, interpret=(b == "interpret"), **kw)
+
+
+def ssm_scan(x, dt, A, Bc, Cc, D, h0=None, *, backend: Backend = "auto", **kw):
+    b = _resolve(backend)
+    if b == "ref":
+        return _ref.ssm_scan_ref(x, dt, A, Bc, Cc, D, h0)
+    return _ssm_pallas(x, dt, A, Bc, Cc, D, h0, interpret=(b == "interpret"), **kw)

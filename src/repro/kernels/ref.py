@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Each function is the semantic spec; kernels must match these within dtype
+tolerance across the shape/dtype sweeps in tests/test_kernels_*.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ell_to_dense_ref", "flash_attention_ref", "ssm_scan_ref"]
+
+
+def ell_to_dense_ref(vals: jax.Array, cols: jax.Array, n_cols: int) -> jax.Array:
+    """ELL (padded CSR) -> dense.
+
+    vals (R, K) float; cols (R, K) int32, -1 = padding.  Duplicate columns
+    accumulate.  Returns (R, n_cols) in vals.dtype.
+    """
+    R, K = vals.shape
+    valid = cols >= 0
+    safe_cols = jnp.where(valid, cols, 0)
+    v = jnp.where(valid, vals, 0)
+    out = jnp.zeros((R, n_cols), vals.dtype)
+    rows = jnp.broadcast_to(jnp.arange(R)[:, None], (R, K))
+    return out.at[rows.reshape(-1), safe_cols.reshape(-1)].add(v.reshape(-1))
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, Hkv, T, D)
+    v: jax.Array,  # (B, Hkv, T, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Softmax attention with GQA head-grouping, causal and SWA masks."""
+    B, H, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    g = H // Hkv
+    kk = jnp.repeat(k, g, axis=1) if g > 1 else k
+    vv = jnp.repeat(v, g, axis=1) if g > 1 else v
+    s = jnp.einsum("bhsd,bhtd->bhst", q, kk, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(D)
+    qpos = q_offset + jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p.astype(v.dtype), vv)
+
+
+def ssm_scan_ref(
+    x: jax.Array,  # (B, S, D)
+    dt: jax.Array,  # (B, S, D) fp32
+    A: jax.Array,  # (D, N) fp32 (negative)
+    Bc: jax.Array,  # (B, S, N) fp32
+    Cc: jax.Array,  # (B, S, N) fp32
+    D: jax.Array,  # (D,)
+    h0: Optional[jax.Array] = None,  # (B, D, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential selective-scan recurrence (the exact semantics):
+
+      h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+      y_t = C_t . h_t + D * x_t
+    """
+    Bsz, S, Dm = x.shape
+    N = A.shape[1]
+    h = h0 if h0 is not None else jnp.zeros((Bsz, Dm, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt[..., None] * A[None])  # (B, D, N)
+        dBx = (dtt * xt.astype(jnp.float32))[..., None] * Bt[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, Ct)
+        return h, y
+
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1), Bc.swapaxes(0, 1), Cc.swapaxes(0, 1))
+    h, ys = jax.lax.scan(step, h, xs)
+    y = ys.swapaxes(0, 1).astype(x.dtype) + x * D[None, None].astype(x.dtype)
+    return y, h

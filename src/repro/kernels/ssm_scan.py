@@ -1,0 +1,129 @@
+"""Selective-scan (Mamba-1) — Pallas TPU kernel, chunked recurrence.
+
+Tiling: grid (B, D/BD, S/chunk).  The sequence axis is the innermost
+("arbitrary") grid dimension; the (BD, N) SSM state lives in VMEM scratch and
+persists across chunk iterations of the same (batch, channel-block) program —
+the same revisiting pattern as flash attention.  Within a chunk the
+recurrence
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t ;  y_t = C_t . h_t
+
+runs as a ``fori_loop`` over timesteps of (BD, N) vector ops: with BD=512
+lanes and N=16 states each step is a full-width VPU op.  HBM traffic is
+exactly one read of (x, dt, B, C) and one write of y per token — the fused
+on-chip alternative to the pure-jnp path's (B, S, D, N) materialization
+(repro/models/ssm.py, which remains the oracle and the dry-run path).
+
+A log-depth block-parallel prefix within chunks is the recorded §Perf
+follow-up; the sequential inner loop is the correctness baseline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssm_scan"]
+
+
+def _kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, h0_ref, y_ref, hout_ref,
+            h_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = h0_ref[0]
+
+    x = x_ref[0]  # (chunk, BD)
+    dt = dt_ref[0]  # (chunk, BD)
+    A = A_ref[...]  # (BD, N)
+    Bc = B_ref[0]  # (chunk, N)
+    Cc = C_ref[0]  # (chunk, N)
+    Dd = D_ref[...]  # (1, BD)
+
+    def step(t, h):
+        dt_t = dt[t][:, None]  # (BD, 1)
+        x_t = x[t][:, None]
+        dA = jnp.exp(dt_t * A)  # (BD, N)
+        dBx = dt_t * x_t * Bc[t][None, :]  # (BD, N)
+        h = dA * h + dBx
+        y_t = jnp.sum(h * Cc[t][None, :], axis=1)  # (BD,)
+        y_ref[0, t, :] = (y_t + Dd[0] * x[t]).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        hout_ref[0] = h_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_d", "chunk", "interpret")
+)
+def ssm_scan(
+    x: jax.Array,  # (B, S, D)
+    dt: jax.Array,  # (B, S, D) fp32
+    A: jax.Array,  # (D, N) fp32
+    Bc: jax.Array,  # (B, S, N) fp32
+    Cc: jax.Array,  # (B, S, N) fp32
+    D: jax.Array,  # (D,)
+    h0: jax.Array | None = None,  # (B, D, N) fp32
+    *,
+    block_d: int = 512,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,D), h_final (B,D,N))."""
+    Bsz, S, Dm = x.shape
+    N = A.shape[1]
+    block_d = min(block_d, Dm)
+    chunk = min(chunk, S)
+    assert Dm % block_d == 0, (Dm, block_d)
+    if S % chunk != 0:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 -> identity step
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, Dm, N), jnp.float32)
+    D2 = D.reshape(1, Dm).astype(jnp.float32)
+    n_chunks = Sp // chunk
+    grid = (Bsz, Dm // block_d, n_chunks)
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),  # x
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),  # dt
+            pl.BlockSpec((block_d, N), lambda b, d, c: (d, 0)),  # A
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),  # B
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),  # C
+            pl.BlockSpec((1, block_d), lambda b, d, c: (0, d)),  # D
+            pl.BlockSpec((1, block_d, N), lambda b, d, c: (b, d, 0)),  # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),  # y
+            pl.BlockSpec((1, block_d, N), lambda b, d, c: (b, d, 0)),  # h_final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, Sp, Dm), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, Dm, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(x.astype(jnp.float32) if x.dtype == jnp.float64 else x,
+      dt.astype(jnp.float32), A.astype(jnp.float32),
+      Bc.astype(jnp.float32), Cc.astype(jnp.float32), D2, h0)
+    return y[:, :S, :], h_final

@@ -1,0 +1,350 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds ShapeDtypeStruct inputs (launch/specs.py — zero allocation),
+  2. resolves shardings from logical axes × rule set (distributed/sharding),
+  3. ``jit(step).lower(...).compile()`` under the production mesh,
+  4. records ``memory_analysis()`` (does it fit 16GB/chip?),
+     ``cost_analysis()`` (per-device FLOPs/bytes), and the collective
+     schedule parsed from the post-SPMD HLO,
+  5. writes results/dryrun/<mesh>__<arch>__<shape>.json.
+
+Run one cell:   python -m repro.launch.dryrun --arch smollm-360m --shape train_4k --mesh single
+Run everything: python -m repro.launch.dryrun --all   (spawns one subprocess per cell)
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import (device count locks on first backend init).
+#   Set here and ONLY here: tests/benches see the single real CPU device.
+
+import argparse
+import dataclasses
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Optional
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the post-SPMD HLO.
+
+    Sizes are per-device (the module is the per-device program).  ``-start``
+    variants are counted; their paired ``-done`` ops are skipped to avoid
+    double counting.  Returns totals per op kind + the 10 largest sites.
+    """
+    totals = {k: 0 for k in _COLL_OPS}
+    counts = {k: 0 for k in _COLL_OPS}
+    largest: list[tuple[int, str, str]] = []
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "-done(" in ls or "-done." in ls.split(" = ")[0]:
+            continue
+        for op in _COLL_OPS:
+            if f" {op}(" in ls or f" {op}-start(" in ls:
+                lhs = ls.split(f" {op}", 1)[0]
+                nbytes = sum(_shape_bytes(m) for m in _SHAPE_RE.finditer(lhs))
+                totals[op] += nbytes
+                counts[op] += 1
+                largest.append((nbytes, op, lhs[:120]))
+                break
+    largest.sort(reverse=True)
+    return {
+        "bytes_by_op": totals,
+        "count_by_op": counts,
+        "total_bytes": int(sum(totals.values())),
+        "largest": [
+            {"bytes": b, "op": o, "site": s} for b, o, s in largest[:10]
+        ],
+    }
+
+
+def _mesh_for(name: str):
+    from repro.launch.mesh import make_production_mesh
+
+    return make_production_mesh(multi_pod=(name == "multi"))
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, *, rules_variant: str = "default",
+             overrides: Optional[dict] = None, preset: str = "",
+             microbatches: int = 1, moment_dtype: str = "float32",
+             remat: Optional[str] = None,
+             target_group_tokens: Optional[int] = None) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.distributed.context import sharding_context
+    from repro.distributed.sharding import (
+        RULES_DECODE, RULES_DECODE_LONG, RULES_DECODE_WS, RULES_TRAIN,
+        tree_shardings,
+    )
+    from repro.launch.specs import Cell, cell_specs
+    from repro.models import Model, active_param_count, param_count
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.step import make_serve_steps, make_train_state, make_train_step
+
+    t_start = time.time()
+    mesh = _mesh_for(mesh_name)
+    cell = Cell(arch, shape)
+    sp = cell_specs(cell)
+    cfg, model, kind = sp["cfg"], sp["model"], sp["kind"]
+    if remat is not None or target_group_tokens is not None:
+        moe = cfg.moe
+        if target_group_tokens is not None and moe is not None:
+            moe = dataclasses.replace(moe, target_group_tokens=target_group_tokens)
+        cfg = dataclasses.replace(cfg, remat=remat or cfg.remat, moe=moe)
+        model = Model(cfg)
+        sp = cell_specs(cell)
+        sp["cfg"], sp["model"] = cfg, model
+
+    from repro.models.flags import paper_baseline as _pb
+
+    if kind == "train":
+        rules = RULES_TRAIN
+    elif shape == "long_500k":
+        rules = RULES_DECODE_LONG
+    elif kind == "decode" and not _pb():
+        rules = RULES_DECODE_WS  # weight-stationary decode (§Perf)
+    else:
+        rules = RULES_DECODE
+    if preset == "dp_only":
+        # pure data parallelism over all 256/512 chips: no TP axes at all —
+        # the right layout for small models (smollm §Perf)
+        rules = rules.override(
+            "dp_only",
+            batch=("pod", "data", "model"),
+            groups=("pod", "data", "model"),
+            vocab=None, embed=None, heads=None, mlp=None, experts=None,
+            dinner=None, act_heads=None, act_mlp=None, act_vocab=None,
+            act_dinner=None, act_experts=None,
+        )
+    if overrides:
+        rules = rules.override(**overrides)
+
+    param_ax = model.param_axes()
+
+    def shard(axes_tree, shapes_tree):
+        return tree_shardings(axes_tree, rules, mesh, shapes_tree)
+
+    with mesh, sharding_context(mesh, rules):
+        if kind == "train":
+            opt_cfg = AdamWConfig(moment_dtype=moment_dtype)
+            state_shapes = jax.eval_shape(
+                lambda k: make_train_state(model, k, opt_cfg), jax.random.PRNGKey(0)
+            )
+            state_axes = {
+                "params": param_ax,
+                "opt": {"m": param_ax, "v": param_ax, "count": ()},
+                "step": (),
+            }
+            state_sh = shard(state_axes, state_shapes)
+            batch_sh = shard(sp["batch_axes"], sp["batch_shapes"])
+            from repro.models.flags import paper_baseline
+
+            step_fn = make_train_step(
+                model, opt_cfg, num_microbatches=microbatches,
+                grad_shardings=None if paper_baseline() else state_sh["params"],
+            )
+            jfn = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                          out_shardings=(state_sh, None), donate_argnums=(0,))
+            lowered = jfn.lower(state_shapes, sp["batch_shapes"])
+        elif kind == "prefill":
+            params_shapes = model.param_shapes()
+            params_sh = shard(param_ax, params_shapes)
+            batch_sh = shard(sp["batch_axes"], sp["batch_shapes"])
+            cache_sh = shard(sp["cache_axes"], sp["cache_shapes"])
+            prefill_step, _ = make_serve_steps(model)
+            jfn = jax.jit(prefill_step,
+                          in_shardings=(params_sh, batch_sh, cache_sh),
+                          out_shardings=(None, cache_sh), donate_argnums=(2,))
+            lowered = jfn.lower(params_shapes, sp["batch_shapes"], sp["cache_shapes"])
+        else:  # decode
+            params_shapes = model.param_shapes()
+            params_sh = shard(param_ax, params_shapes)
+            cache_sh = shard(sp["cache_axes"], sp["cache_shapes"])
+            _, decode_step = make_serve_steps(model)
+            pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            jfn = jax.jit(decode_step,
+                          in_shardings=(params_sh, None, cache_sh, None),
+                          out_shardings=(None, None, cache_sh), donate_argnums=(2,))
+            lowered = jfn.lower(params_shapes, sp["token_shape"],
+                                sp["cache_shapes"], pos_spec)
+
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)  # NOT loop-corrected (reference only)
+    from repro.launch.hlo_cost import parse_hlo_costs
+
+    lc = parse_hlo_costs(hlo)  # loop-corrected dot flops / bytes / collectives
+
+    chips = mesh.size
+    n_tokens = {"train": sp["batch"] * sp["seq_len"],
+                "prefill": sp["batch"] * sp["seq_len"],
+                "decode": sp["batch"]}[kind]
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "mesh_shape": dict(zip(mesh.axis_names, (mesh.devices.shape))),
+        "kind": kind,
+        "rules": rules.name,
+        "variant": rules_variant,
+        "knobs": {"preset": preset, "microbatches": microbatches,
+                  "moment_dtype": moment_dtype, "remat": remat,
+                  "target_group_tokens": target_group_tokens},
+        "chips": chips,
+        "seq_len": sp["seq_len"],
+        "global_batch": sp["batch"],
+        "tokens_per_step": n_tokens,
+        "n_params": param_count(cfg),
+        "n_active_params": active_param_count(cfg),
+        # loop-corrected, per-device (launch/hlo_cost.py; cost_analysis counts
+        # while bodies once — unusable for scanned layers).  *_eq = TPU-bf16
+        # equivalent bytes (CPU FloatNormalization inflates f32; see parser):
+        "flops_per_device": float(lc["flops"]),
+        "dot_bytes_per_device": float(lc["dot_bytes"]),
+        "dot_bytes_eq_per_device": float(lc["dot_bytes_eq"]),
+        "collective_bytes_per_device": float(lc["collective_bytes"]),
+        "collective_bytes_eq_per_device": float(lc["collective_bytes_eq"]),
+        "collective_by_op": {k: float(v) for k, v in lc["collective_by_op"].items()},
+        # raw (NOT loop-corrected) references:
+        "raw_cost_analysis_flops": float(cost.get("flops", -1.0)),
+        "raw_bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "collectives_uncorrected": coll,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "hlo_chars": len(hlo),
+        "lower_s": round(t_lower - t_start, 2),
+        "compile_s": round(t_compile - t_lower, 2),
+    }
+    return result
+
+
+def result_path(arch: str, shape: str, mesh_name: str, variant: str = "default") -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = "" if variant == "default" else f"__{variant}"
+    return os.path.join(RESULTS_DIR, f"{mesh_name}__{arch}__{shape}{suffix}.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true", help="orchestrate all cells (subprocesses)")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="default")
+    ap.add_argument("--override", action="append", default=[],
+                    help="logical=mesh_axis rule override, e.g. cache_seq=model")
+    ap.add_argument("--preset", default="", choices=["", "dp_only"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--remat", default=None, choices=[None, "full", "dots", "none"])
+    ap.add_argument("--target-group-tokens", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    if args.all:
+        from repro.launch.specs import all_cells
+
+        cells = all_cells()
+        meshes = args.meshes.split(",")
+        todo = [(c, m) for m in meshes for c in cells]
+        print(f"[dryrun] {len(todo)} cells")
+        failed = []
+        for i, (c, m) in enumerate(todo):
+            path = result_path(c.arch, c.shape, m, args.variant)
+            if os.path.exists(path) and not args.force:
+                print(f"[{i+1}/{len(todo)}] SKIP {m} {c.key} (cached)")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", c.arch, "--shape", c.shape, "--mesh", m,
+                   "--variant", args.variant]
+            for ov in args.override:
+                cmd += ["--override", ov]
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            ok = r.returncode == 0
+            print(f"[{i+1}/{len(todo)}] {'OK  ' if ok else 'FAIL'} {m} {c.key} "
+                  f"({time.time()-t0:.0f}s)")
+            if not ok:
+                failed.append((c.key, m, r.stdout[-2000:] + r.stderr[-2000:]))
+        if failed:
+            print(f"\n{len(failed)} FAILURES:")
+            for k, m, err in failed:
+                print(f"--- {m} {k} ---\n{err}\n")
+            return 1
+        return 0
+
+    # single cell
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        overrides[k] = tuple(v.split("+")) if "+" in v else (None if v == "none" else v)
+    path = result_path(args.arch, args.shape, args.mesh, args.variant)
+    if os.path.exists(path) and not args.force:
+        print(f"cached: {path}")
+        return 0
+    try:
+        res = run_cell(args.arch, args.shape, args.mesh,
+                       overrides=overrides or None, rules_variant=args.variant,
+                       preset=args.preset, microbatches=args.microbatches,
+                       moment_dtype=args.moment_dtype, remat=args.remat,
+                       target_group_tokens=args.target_group_tokens)
+    except Exception:
+        traceback.print_exc()
+        return 1
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    mem_gb = res["memory"]["peak_estimate_bytes"] / 1e9
+    print(f"{args.mesh} {args.arch} {args.shape}: "
+          f"flops/dev={res['flops_per_device']:.3e} "
+          f"coll={res['collective_bytes_per_device']/1e6:.1f}MB "
+          f"peak_mem={mem_gb:.2f}GB "
+          f"(lower {res['lower_s']}s compile {res['compile_s']}s)")
+    print(json.dumps(res["memory"]))
+    print({k: f"{v/1e6:.1f}MB" for k, v in res["collective_by_op"].items()})
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,244 @@
+"""Loop-corrected cost extraction from post-SPMD HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count (measured: a 10-iteration scan of a matmul reports 1.002x one
+iteration's flops).  Since every model here scans over layers, naive
+cost_analysis under-reports by ~num_layers.  This module re-derives costs
+from the compiled module text with loop correction:
+
+1. split the module into named computation blocks;
+2. per block, build an SSA symbol table (%name -> shape) so dot operands can
+   be resolved (instruction lines reference operand NAMES, not shapes);
+3. per block, sum
+   - dot/convolution flops: 2 x prod(output dims) x contraction size,
+   - dot bytes: operand + output sizes (HBM-traffic proxy),
+   - collective bytes: result-shape bytes of all-gather / all-reduce /
+     reduce-scatter / all-to-all / collective-permute (``-start`` counted,
+     ``-done`` skipped);
+4. roll up the call graph bottom-up: fusion/call sites count once, ``while``
+   bodies multiply by the trip count parsed from the condition block's
+   comparison constant.
+
+Everything is per-device (the compiled module is the per-device SPMD
+program).  Elementwise flops are excluded (softmax/norm add ~2% for these
+models — noted in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+__all__ = ["parse_hlo_costs", "BlockCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)"
+    r"\[([0-9,]*)\]"
+)
+_BLOCK_START = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{$")
+_WHILE_RE = re.compile(r"\bwhile\(")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls=|to_apply=)%?([\w\.\-]+)")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def _dims(s: str) -> list[int]:
+    return [int(x) for x in s.split(",")] if s else []
+
+
+def _first_shape(text: str) -> Optional[tuple[str, list[int]]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return m.group(1), _dims(m.group(2))
+
+
+def _elems(dims: list[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class BlockCost:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    dot_bytes_eq: float = 0.0  # bf16-equivalent (see parse_hlo_costs doc)
+    coll_bytes: float = 0.0
+    coll_bytes_eq: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+    calls: list = dataclasses.field(default_factory=list)
+
+
+# The CPU backend's FloatNormalization pass rewrites bf16 fusion regions to
+# f32, so bytes parsed from CPU-compiled HLO over-count what a TPU build
+# moves.  *_eq metrics cap float tensors at 2 bytes/element (all intentional
+# f32 crossings in these models are tiny norm/CE scalars) — the
+# TPU-equivalent traffic.  Raw numbers are kept alongside.
+def _eq_bytes_per_elem(dtype: str) -> int:
+    return min(_DTYPE_BYTES[dtype], 2) if dtype in ("f64", "f32") else _DTYPE_BYTES[dtype]
+
+
+def _split_blocks(hlo: str) -> tuple[dict[str, list[str]], Optional[str]]:
+    blocks: dict[str, list[str]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    depth = 0
+    for raw in hlo.splitlines():
+        ls = raw.strip()
+        if cur is None:
+            m = _BLOCK_START.match(ls)
+            if m:
+                cur = m.group(2)
+                if m.group(1):
+                    entry = cur
+                blocks[cur] = []
+                depth = 1
+            continue
+        depth += ls.count("{") - ls.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        blocks[cur].append(ls)
+    return blocks, entry
+
+
+def _analyze_block(lines: list[str]) -> BlockCost:
+    bc = BlockCost(coll_by_op={k: 0.0 for k in _COLL_OPS})
+    symtab: dict[str, tuple[str, list[int]]] = {}
+    for ls in lines:
+        dm = _DEF_RE.match(ls)
+        lhs_name = dm.group(1) if dm else None
+        if lhs_name:
+            rhs = ls.split("=", 1)[1]
+            sh = _first_shape(rhs)
+            if sh:
+                symtab[lhs_name] = sh
+
+        # ---- dots / convolutions
+        if " dot(" in ls or " convolution(" in ls:
+            opname = "dot(" if " dot(" in ls else "convolution("
+            rhs = ls.split("=", 1)[1] if "=" in ls else ls
+            out = _first_shape(rhs)
+            args_str = rhs.split(opname, 1)[1]
+            ops = _OPERANDS_RE.findall(args_str.split(")")[0])
+            if out:
+                out_elems = _elems(out[1])
+                flops = 2.0 * out_elems
+                k = 1
+                lhs_shape = symtab.get(ops[0]) if ops else None
+                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ls)
+                if cm and lhs_shape:
+                    for i in _dims(cm.group(1)):
+                        if i < len(lhs_shape[1]):
+                            k *= lhs_shape[1][i]
+                    flops = 2.0 * out_elems * k
+                elif " convolution(" in ls and lhs_shape:
+                    # conv flops approx: 2 * out * (in_elems/out_spatial)
+                    flops = 2.0 * out_elems * max(1, _elems(lhs_shape[1]) // max(1, out_elems))
+                nbytes = out_elems * _DTYPE_BYTES[out[0]]
+                nbytes_eq = out_elems * _eq_bytes_per_elem(out[0])
+                for o in ops[:2]:
+                    osh = symtab.get(o)
+                    if osh:
+                        nbytes += _elems(osh[1]) * _DTYPE_BYTES[osh[0]]
+                        nbytes_eq += _elems(osh[1]) * _eq_bytes_per_elem(osh[0])
+                bc.dot_flops += flops
+                bc.dot_bytes += nbytes
+                bc.dot_bytes_eq += nbytes_eq
+
+        # ---- collectives
+        if not (lhs_name and "-done" in lhs_name) and "-done(" not in ls:
+            for op in _COLL_OPS:
+                if f" {op}(" in ls or f" {op}-start(" in ls:
+                    lhs = ls.split(f" {op}", 1)[0]
+                    nbytes = sum(
+                        _elems(_dims(m.group(2))) * _DTYPE_BYTES[m.group(1)]
+                        for m in _SHAPE_RE.finditer(lhs)
+                    )
+                    nbytes_eq = sum(
+                        _elems(_dims(m.group(2))) * _eq_bytes_per_elem(m.group(1))
+                        for m in _SHAPE_RE.finditer(lhs)
+                    )
+                    bc.coll_bytes += nbytes
+                    bc.coll_bytes_eq += nbytes_eq
+                    bc.coll_by_op[op] += nbytes
+                    break
+
+        # ---- call-graph edges
+        if _WHILE_RE.search(ls):
+            cm, bm = _COND_RE.search(ls), _BODY_RE.search(ls)
+            if cm and bm:
+                bc.calls.append((bm.group(1), ("trip", cm.group(1))))
+        elif "calls=" in ls or "to_apply=" in ls:
+            fm = _CALLS_RE.search(ls)
+            if fm:
+                bc.calls.append((fm.group(1), 1))
+    return bc
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    consts = []
+    for ls in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", ls):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def parse_hlo_costs(hlo: str) -> dict:
+    blocks, entry = _split_blocks(hlo)
+    costs = {name: _analyze_block(lines) for name, lines in blocks.items()}
+    trips = {name: _trip_count(lines) for name, lines in blocks.items()}
+    memo: dict[str, tuple] = {}
+
+    def rollup(name: str, stack=()) -> tuple:
+        if name in memo:
+            return memo[name]
+        if name not in costs or name in stack:
+            return (0.0, 0.0, 0.0, 0.0, 0.0, {k: 0.0 for k in _COLL_OPS})
+        bc = costs[name]
+        f, b, be = bc.dot_flops, bc.dot_bytes, bc.dot_bytes_eq
+        c, ce = bc.coll_bytes, bc.coll_bytes_eq
+        by_op = dict(bc.coll_by_op)
+        for callee, mult in bc.calls:
+            if isinstance(mult, tuple):
+                mult = trips.get(mult[1], 1)
+            cf, cb, cbe, cc, cce, cby = rollup(callee, stack + (name,))
+            f += cf * mult
+            b += cb * mult
+            be += cbe * mult
+            c += cc * mult
+            ce += cce * mult
+            for k in by_op:
+                by_op[k] += cby.get(k, 0.0) * mult
+        memo[name] = (f, b, be, c, ce, by_op)
+        return memo[name]
+
+    if entry is None:
+        entry = max(blocks, key=lambda k: len(blocks[k])) if blocks else None
+    if entry is None:
+        return {"flops": 0.0, "dot_bytes": 0.0, "dot_bytes_eq": 0.0,
+                "collective_bytes": 0.0, "collective_bytes_eq": 0.0,
+                "collective_by_op": {}, "entry": None, "num_blocks": 0}
+    f, b, be, c, ce, by_op = rollup(entry)
+    return {
+        "flops": f,
+        "dot_bytes": b,
+        "dot_bytes_eq": be,
+        "collective_bytes": c,
+        "collective_bytes_eq": ce,
+        "collective_by_op": by_op,
+        "entry": entry,
+        "num_blocks": len(blocks),
+    }

@@ -1,0 +1,142 @@
+"""Input specs per (architecture × shape) — ShapeDtypeStruct stand-ins.
+
+The 4 assigned LM shapes:
+
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill serve step
+  decode_32k   seq 32,768  global_batch 128   -> decode serve step (1 token)
+  long_500k    seq 524,288 global_batch 1     -> decode serve step (1 token)
+
+``long_500k`` is only emitted for sub-quadratic archs (SSM / hybrid / SWA);
+pure full-attention archs skip it (DESIGN.md §Shape-coverage).  All specs are
+weak-type-correct and carry logical axes for sharding resolution; nothing is
+allocated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.models import Model, ModelConfig
+
+__all__ = ["SHAPES", "Cell", "cell_specs", "all_cells", "supports_long_context"]
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def supports_long_context(cfg: ModelConfig) -> bool:
+    """SSM, hybrid, and sliding-window archs handle 500k decode state."""
+    if cfg.family in ("ssm", "hybrid"):
+        return True
+    if cfg.family == "encdec":
+        return False  # whisper decoder context is architecturally ~448
+    return cfg.sliding_window is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+
+    @property
+    def kind(self) -> str:
+        return SHAPES[self.shape]["kind"]
+
+    @property
+    def key(self) -> str:
+        return f"{self.arch}__{self.shape}"
+
+
+def all_cells(include_skipped: bool = False) -> list[Cell]:
+    cells = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if shape == "long_500k" and not supports_long_context(cfg):
+                if include_skipped:
+                    cells.append(Cell(arch, shape))
+                continue
+            cells.append(Cell(arch, shape))
+    return cells
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, seq_len: int, batch: int):
+    """(shapes, logical axes) of one training batch for this family."""
+    tok_ax = ("batch", "seq")
+    if cfg.family == "vlm":
+        s_text = seq_len - cfg.num_patches
+        shapes = {
+            "tokens": _sds((batch, s_text), jnp.int32),
+            "labels": _sds((batch, s_text), jnp.int32),
+            "patch_embeds": _sds((batch, cfg.num_patches, cfg.d_model),
+                                 cfg.compute_dtype),
+        }
+        axes = {"tokens": tok_ax, "labels": tok_ax,
+                "patch_embeds": ("batch", "seq", "act_embed")}
+        return shapes, axes
+    if cfg.family == "encdec":
+        shapes = {
+            "frames": _sds((batch, seq_len, cfg.d_model), cfg.compute_dtype),
+            "tokens": _sds((batch, seq_len), jnp.int32),
+            "labels": _sds((batch, seq_len), jnp.int32),
+        }
+        axes = {"frames": ("batch", "seq", "act_embed"),
+                "tokens": tok_ax, "labels": tok_ax}
+        return shapes, axes
+    shapes = {
+        "tokens": _sds((batch, seq_len), jnp.int32),
+        "labels": _sds((batch, seq_len), jnp.int32),
+    }
+    return shapes, {"tokens": tok_ax, "labels": tok_ax}
+
+
+def prefill_batch_specs(cfg: ModelConfig, seq_len: int, batch: int):
+    """Prefill consumes the same batch minus labels."""
+    shapes, axes = batch_specs(cfg, seq_len, batch)
+    shapes.pop("labels", None)
+    axes.pop("labels", None)
+    if cfg.family == "encdec":
+        # serving prefill only needs frames (prompt tokens begin decoding)
+        shapes.pop("tokens", None)
+        axes.pop("tokens", None)
+    return shapes, axes
+
+
+def cache_specs(model: Model, batch: int, max_len: int):
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    return shapes, model.cache_axes()
+
+
+def cell_specs(cell: Cell):
+    """Everything the dry-run needs for one cell (no allocation).
+
+    Returns dict with: cfg, model, kind, and per-kind spec/axes trees.
+    """
+    cfg = get_config(cell.arch)
+    model = Model(cfg)
+    info = SHAPES[cell.shape]
+    S, B, kind = info["seq_len"], info["global_batch"], info["kind"]
+    out: dict[str, Any] = {"cfg": cfg, "model": model, "kind": kind,
+                           "seq_len": S, "batch": B}
+    if kind == "train":
+        out["batch_shapes"], out["batch_axes"] = batch_specs(cfg, S, B)
+    elif kind == "prefill":
+        out["batch_shapes"], out["batch_axes"] = prefill_batch_specs(cfg, S, B)
+        out["cache_shapes"], out["cache_axes"] = cache_specs(model, B, S)
+    else:  # decode
+        out["token_shape"] = _sds((B,), jnp.int32)
+        out["cache_shapes"], out["cache_axes"] = cache_specs(model, B, S)
+    return out

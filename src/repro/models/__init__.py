@@ -1,0 +1,12 @@
+"""repro.models — pure-JAX model zoo for the assigned architectures."""
+from .api import Model
+from .config import ModelConfig, MoEConfig, SSMConfig, active_param_count, param_count
+
+__all__ = [
+    "Model",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "param_count",
+    "active_param_count",
+]

@@ -1,0 +1,114 @@
+"""Family-dispatching model API.
+
+``Model`` wraps a ModelConfig with uniform entry points used by the trainer,
+the server, and the dry-run — regardless of family:
+
+  init(key)                      -> (params, axes)
+  forward(params, batch)         -> (logits, aux)        # training
+  init_cache(batch, max_len)     -> (cache, axes)        # serving
+  prefill(params, batch, cache)  -> (logits, cache)
+  decode(params, token, cache, pos) -> (logits, cache)   # serve_step
+
+Batch contract (all arrays numpy/jax):
+  lm families:  {"tokens": (B,S) int32, "labels": (B,S) int32}
+  vlm:          + {"patch_embeds": (B, num_patches, d) bf16}
+  encdec:       {"frames": (B,S,d) bf16, "tokens": (B,S), "labels": (B,S)}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec as _ed
+from . import transformer as _tr
+from .config import ModelConfig, active_param_count, param_count
+
+__all__ = ["Model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ----------------------------------------------------------------- init
+    def init(self, key):
+        if self.cfg.family == "encdec":
+            return _ed.init_encdec(key, self.cfg)
+        return _tr.init_lm(key, self.cfg)
+
+    def shapes_and_axes(self):
+        """(ShapeDtypeStruct pytree, logical-axes pytree) — no allocation.
+
+        Axes are static strings built during tracing; they leave eval_shape
+        through a closure since strings are not valid traced outputs.
+        """
+        box = {}
+
+        def f(k):
+            p, ax = self.init(k)
+            box["ax"] = ax
+            return p
+
+        shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return shapes, box["ax"]
+
+    def param_axes(self):
+        return self.shapes_and_axes()[1]
+
+    def param_shapes(self):
+        return self.shapes_and_axes()[0]
+
+    def n_params(self) -> int:
+        return param_count(self.cfg)
+
+    def n_active_params(self) -> int:
+        return active_param_count(self.cfg)
+
+    # -------------------------------------------------------------- forward
+    def forward(self, params, batch: dict):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return _ed.forward_encdec(params, cfg, batch["frames"], batch["tokens"])
+        if cfg.family == "vlm":
+            logits, aux = _tr.forward_lm(
+                params, cfg, batch["tokens"], patch_embeds=batch["patch_embeds"]
+            )
+            # text token j sits at position num_patches + j; drop the prefix
+            return logits[:, cfg.num_patches:], aux
+        return _tr.forward_lm(params, cfg, batch["tokens"])
+
+    # -------------------------------------------------------------- serving
+    def init_cache(self, batch_size: int, max_len: int):
+        """Allocates.  For shape-only use wrap in jax.eval_shape."""
+        if self.cfg.family == "encdec":
+            return _ed.init_decoder_cache(self.cfg, batch_size, max_len)
+        return _tr.init_cache(self.cfg, batch_size, max_len)
+
+    def cache_axes(self):
+        if self.cfg.family == "encdec":
+            return _ed.decoder_cache_axes(self.cfg)
+        return _tr.cache_axes(self.cfg)
+
+    def prefill(self, params, batch: dict, cache, pos_offset: int = 0):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            new_cache = _ed.prefill_encdec(params, cfg, batch["frames"], cache)
+            B = batch["frames"].shape[0]
+            bos = jnp.zeros((B,), jnp.int32)
+            logits, new_cache = _ed.decode_encdec(params, cfg, bos, new_cache,
+                                                  jnp.asarray(0, jnp.int32))
+            return logits, new_cache
+        if cfg.family == "vlm":
+            return _tr.prefill_lm(params, cfg, batch["tokens"], cache,
+                                  patch_embeds=batch["patch_embeds"],
+                                  pos_offset=pos_offset)
+        return _tr.prefill_lm(params, cfg, batch["tokens"], cache,
+                              pos_offset=pos_offset)
+
+    def decode(self, params, token, cache, pos, start=None):
+        if self.cfg.family == "encdec":
+            return _ed.decode_encdec(params, self.cfg, token, cache, pos)
+        return _tr.decode_lm(params, self.cfg, token, cache, pos, start=start)

@@ -1,0 +1,21 @@
+"""Paper-baseline vs optimized-path switches.
+
+``REPRO_PAPER_BASELINE=1`` disables every beyond-baseline optimization so the
+dry-run sweep can record the naive configuration; the default (unset) runs
+the optimized paths.  EXPERIMENTS.md §Perf reports both sweeps separately.
+
+Gated behaviors:
+- banded local attention for SWA prefill/train (vs full masked attention),
+- one-hot-matmul embedding under sharding contexts (vs gather),
+- bf16-from-creation MoE dispatch/combine tensors (vs f32),
+- ZeRO-2 gradient sharding constraints (vs GSPMD-chosen grad layouts).
+"""
+from __future__ import annotations
+
+import os
+
+__all__ = ["paper_baseline"]
+
+
+def paper_baseline() -> bool:
+    return os.environ.get("REPRO_PAPER_BASELINE", "") == "1"

@@ -1,0 +1,334 @@
+"""Shared neural building blocks (pure JAX; Pallas kernels swap in on TPU).
+
+Every init function returns ``(params, axes)`` where ``axes`` mirrors the
+param pytree with tuples of *logical axis names*.  The distributed layer maps
+logical names onto mesh axes (see repro/distributed/sharding.py) — models
+never mention mesh axes directly, so re-sharding experiments are pure config
+changes (the §Perf loop relies on this).
+
+Logical names used here:
+  "vocab"      — vocabulary dim (TP over model)
+  "embed"      — d_model dim of weight matrices (FSDP over data)
+  "heads"      — query-head dim (TP)
+  "kv_heads"   — kv-head dim (replicated when not divisible)
+  "mlp"        — FFN hidden dim (TP)
+  "experts"    — MoE expert dim (EP)
+  "dinner"     — SSM inner dim (TP)
+  "stack"      — scan-stacked layer dim (never sharded)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.context import constrain_act
+from .config import ModelConfig
+
+__all__ = [
+    "rmsnorm",
+    "layernorm",
+    "norm_init",
+    "dense_init",
+    "apply_rope",
+    "rope_freqs",
+    "attention",
+    "chunked_attention",
+    "decode_attention",
+    "mlp_init",
+    "mlp_apply",
+    "silu",
+    "gelu",
+]
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# ----------------------------------------------------------------- norms
+def norm_init(d: int, kind: str, dtype: str = "float32"):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), _dtype(dtype))}, {"scale": ("norm",)}
+    return (
+        {"scale": jnp.ones((d,), _dtype(dtype)), "bias": jnp.zeros((d,), _dtype(dtype))},
+        {"scale": ("norm",), "bias": ("norm",)},
+    )
+
+
+def rmsnorm(x: jax.Array, p: dict, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, p: dict, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(x: jax.Array, p: dict, kind: str) -> jax.Array:
+    return rmsnorm(x, p) if kind == "rmsnorm" else layernorm(x, p)
+
+
+# ----------------------------------------------------------------- dense
+def dense_init(key, shape: tuple, axes: tuple, dtype: str, scale: Optional[float] = None):
+    """Weight of ``shape`` with logical ``axes`` (len(axes) == len(shape))."""
+    assert len(shape) == len(axes), (shape, axes)
+    fan_in = shape[0]
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    w = jax.random.normal(key, shape, dtype=jnp.float32) * s
+    return w.astype(_dtype(dtype)), axes
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+_ACTS = {"swiglu": silu, "geglu": gelu}
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    D = x.shape[-1]
+    inv = rope_freqs(D, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]  # broadcast over heads
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+def _expand_kv(k: jax.Array, num_q_heads: int) -> jax.Array:
+    """(B,T,Hkv,D) -> (B,T,Hq,D) by repeating each kv head G times.
+
+    A gather (not a reshape) so it stays legal when the q-head dim is
+    TP-sharded and Hkv is not divisible by the shard count: each shard
+    gathers the kv heads it needs from the replicated k/v.
+    """
+    hkv = k.shape[2]
+    if hkv == num_q_heads:
+        return k
+    g = num_q_heads // hkv
+    head_map = jnp.arange(num_q_heads) // g
+    return jnp.take(k, head_map, axis=2)
+
+
+def _window_mask(q_pos: jax.Array, k_pos: jax.Array, window: Optional[int], causal: bool):
+    """(..., S, T) boolean mask: True = attend."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(dq.shape, dk.shape), dtype=bool)
+    if causal:
+        m &= dk <= dq
+    if window is not None:
+        m &= dq - dk < window
+    return m
+
+
+def attention(
+    q: jax.Array,  # (B, S, Hq, D)
+    k: jax.Array,  # (B, T, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int | jax.Array = 0,
+) -> jax.Array:
+    """Full-softmax attention (fp32 softmax), GQA via gather-expansion."""
+    B, S, Hq, D = q.shape
+    T = k.shape[1]
+    k = _expand_kv(k, Hq)
+    v = _expand_kv(v, Hq)
+    scale = 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    q_pos = q_offset + jnp.arange(S)
+    k_pos = jnp.arange(T)
+    mask = _window_mask(q_pos, k_pos, window, causal)  # (S, T)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp (lax.scan over KV chunks).
+
+    Peak memory is O(B·H·S·kv_chunk) instead of O(B·H·S·T).  This is the
+    oracle for the Pallas flash kernel (repro/kernels/flash_attention).
+    """
+    B, S, Hq, D = q.shape
+    T = k.shape[1]
+    if T % kv_chunk != 0:
+        # fall back: pad T up (masked out anyway)
+        pad = kv_chunk - T % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        T = k.shape[1]
+    k = _expand_kv(k, Hq)
+    v = _expand_kv(v, Hq)
+    scale = 1.0 / math.sqrt(D)
+    nchunk = T // kv_chunk
+    kc = k.reshape(B, nchunk, kv_chunk, Hq, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunk, kv_chunk, Hq, D).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(S)
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry  # (B,H,S), (B,H,S), (B,S,H,D)
+        kj, vj, j = xs
+        s = jnp.einsum("bshd,bthd->bhst", q, kj, preferred_element_type=jnp.float32) * scale
+        k_pos = j * kv_chunk + jnp.arange(kv_chunk)
+        mask = _window_mask(q_pos, k_pos, window, causal)
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhst,bthd->bshd", p.astype(q.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha.transpose(0, 2, 1)[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Hq, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hq, S), jnp.float32)
+    a0 = jnp.zeros((B, S, Hq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, jnp.arange(nchunk)))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def local_attention(
+    q: jax.Array,  # (B, S, Hq, D)
+    k: jax.Array,  # (B, S, Hkv, D)
+    v: jax.Array,
+    *,
+    window: int,
+) -> jax.Array:
+    """Exact banded (sliding-window causal) attention in O(S·2W) not O(S²).
+
+    Query block i (size W) attends keys [i·W - W, i·W + W): every in-window
+    key is covered and the mask removes the rest, so this equals full
+    masked attention.  ~T/(2W)x fewer score FLOPs than chunked_attention for
+    SWA prefill (mixtral at 32k/W=4096: 4x) — a §Perf optimization.
+    """
+    B, S, Hq, D = q.shape
+    W = window
+    pad_s = (-S) % W
+    if pad_s:
+        q = jnp.pad(q, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    Sp = q.shape[1]
+    nb = Sp // W
+    k = _expand_kv(k, Hq)
+    v = _expand_kv(v, Hq)
+    qb = q.reshape(B, nb, W, Hq, D)
+    kp = jnp.pad(k, ((0, 0), (W, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (W, 0), (0, 0), (0, 0)))
+    # window for block i = [i*W - W, i*W + W): previous block || current block
+    k_prev = kp[:, :Sp].reshape(B, nb, W, Hq, D)
+    k_cur = kp[:, W:].reshape(B, nb, W, Hq, D)
+    kw = jnp.concatenate([k_prev, k_cur], axis=2)  # (B, nb, 2W, Hq, D)
+    v_prev = vp[:, :Sp].reshape(B, nb, W, Hq, D)
+    v_cur = vp[:, W:].reshape(B, nb, W, Hq, D)
+    vw = jnp.concatenate([v_prev, v_cur], axis=2)
+
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bnshd,bnthd->bnhst", qb, kw,
+                   preferred_element_type=jnp.float32) * scale
+    # absolute positions: q = i*W + sq ; k = i*W - W + tk
+    sq = jnp.arange(W)[:, None]
+    tk = jnp.arange(2 * W)[None, :]
+    qpos = sq  # relative to block start
+    kpos = tk - W
+    mask = (kpos <= qpos) & (qpos - kpos < W)  # causal + window, block-invariant
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    # block 0's "previous" keys are left-padding: absolute k position
+    # i*W - W + tk must be >= 0 — a tiny (nb, 2W) mask, not (nb, W, 2W)
+    valid_k = (jnp.arange(nb)[:, None] * W - W + jnp.arange(2 * W)[None, :]) >= 0
+    s = jnp.where(valid_k[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bnhst,bnthd->bnshd", p, vw).reshape(B, Sp, Hq, D)
+    return o[:, :S]
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, Hq, D)
+    k_cache: jax.Array,  # (B, T, Hkv, D)
+    v_cache: jax.Array,
+    pos: jax.Array,  # scalar: number of valid cache entries (new token at pos)
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly model-sharded) KV cache."""
+    B, _, Hq, D = q.shape
+    T = k_cache.shape[1]
+    k = _expand_kv(k_cache, Hq)
+    v = _expand_kv(v_cache, Hq)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bshd,bthd->bhst", q, k, preferred_element_type=jnp.float32) * scale
+    k_pos = jnp.arange(T)
+    valid = k_pos <= pos
+    if window is not None:
+        valid &= pos - k_pos < window
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", p, v)
+
+
+# ----------------------------------------------------------------- MLP
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    if cfg.act in ("swiglu", "geglu"):
+        w_in, a_in = dense_init(ks[0], (d, ff), ("embed", "mlp"), dt)
+        w_gate, a_gate = dense_init(ks[1], (d, ff), ("embed", "mlp"), dt)
+        w_out, a_out = dense_init(ks[2], (ff, d), ("mlp", "embed"), dt)
+        return (
+            {"w_in": w_in, "w_gate": w_gate, "w_out": w_out},
+            {"w_in": a_in, "w_gate": a_gate, "w_out": a_out},
+        )
+    w_in, a_in = dense_init(ks[0], (d, ff), ("embed", "mlp"), dt)
+    w_out, a_out = dense_init(ks[2], (ff, d), ("mlp", "embed"), dt)
+    return {"w_in": w_in, "w_out": w_out}, {"w_in": a_in, "w_out": a_out}
+
+
+def mlp_apply(p: dict, x: jax.Array, act: str) -> jax.Array:
+    ff_axes = ("batch", "seq", "act_mlp") if x.ndim == 3 else ("batch", "act_mlp")
+    if "w_gate" in p:
+        h = constrain_act(jnp.einsum("...d,df->...f", x, p["w_in"]), ff_axes)
+        g = _ACTS[act](jnp.einsum("...d,df->...f", x, p["w_gate"]))
+        return jnp.einsum("...f,fd->...d", h * g, p["w_out"])
+    h = constrain_act(gelu(jnp.einsum("...d,df->...f", x, p["w_in"])), ff_axes)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"])

@@ -1,0 +1,141 @@
+"""Mixture-of-Experts FFN — GShard-style grouped one-hot dispatch.
+
+Tokens are reshaped into ``(groups, group_size)``; within each group, top-k
+routing with per-expert capacity ``C = ceil(group_size * k * cf / E)`` builds
+a dispatch tensor ``(G, S, E, C)`` consumed by einsums.  This avoids
+data-dependent scatters entirely, so GSPMD partitions it cleanly:
+
+- group dim  -> data axis (tokens stay local),
+- expert dim -> model axis (EP) when E % tp == 0, else the per-expert FFN
+  hidden dim -> model axis (TP-within-experts, e.g. mixtral's 8 experts on a
+  16-way axis).  The rule choice lives in repro/distributed/sharding.py.
+
+Dispatch-einsum overhead is O(S_g · k · cf / ff) relative to expert FLOPs —
+group size is the §Perf knob (`MoEConfig.group_mult`).
+
+Router aux losses: switch-transformer load-balance loss + z-loss, returned so
+the train step can weight them.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain_act
+
+from .config import ModelConfig
+from .layers import _ACTS, dense_init, gelu
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg: ModelConfig):
+    moe = cfg.moe
+    d, ff, E = cfg.d_model, cfg.d_ff, moe.num_experts
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    wr, ar = dense_init(ks[0], (d, E), ("embed", "experts_router"), dt)
+    if cfg.act in ("swiglu", "geglu"):
+        w_in, a_in = dense_init(ks[1], (E, d, ff), ("experts", "embed", "mlp"), dt)
+        w_gate, a_gate = dense_init(ks[2], (E, d, ff), ("experts", "embed", "mlp"), dt)
+        w_out, a_out = dense_init(ks[3], (E, ff, d), ("experts", "mlp", "embed"), dt)
+        p = {"router": wr, "w_in": w_in, "w_gate": w_gate, "w_out": w_out}
+        a = {"router": ar, "w_in": a_in, "w_gate": a_gate, "w_out": a_out}
+    else:
+        w_in, a_in = dense_init(ks[1], (E, d, ff), ("experts", "embed", "mlp"), dt)
+        w_out, a_out = dense_init(ks[3], (E, ff, d), ("experts", "mlp", "embed"), dt)
+        p = {"router": wr, "w_in": w_in, "w_out": w_out}
+        a = {"router": ar, "w_in": a_in, "w_out": a_out}
+    return p, a
+
+
+def moe_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, d)
+    *,
+    groups: Optional[int] = None,
+) -> tuple[jax.Array, dict]:
+    """Returns (output (B,S,d), aux {"lb_loss", "z_loss"})."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    E, k, cf = moe.num_experts, moe.top_k, moe.capacity_factor
+    T = B * S
+    from .flags import paper_baseline
+
+    if groups is not None:
+        G = groups
+    elif moe.target_group_tokens is not None and not paper_baseline():
+        # per-batch-element splitting keeps groups data-sharded; pick the
+        # largest power-of-2 split of S that lands near the token target
+        mult = 1
+        while S % (mult * 2) == 0 and S // (mult * 2) >= moe.target_group_tokens:
+            mult *= 2
+        G = B * mult
+    else:
+        G = max(1, B * moe.group_mult)
+    while T % G != 0:  # ensure divisibility
+        G -= 1
+    Sg = T // G
+    xg = constrain_act(x.reshape(G, Sg, d), ("groups", None, "act_embed"))
+
+    # ---- routing (fp32 for stability)
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (G,Sg,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- capacity assignment
+    C = int(math.ceil(Sg * k * cf / E))
+    # one-hot over experts per routing slot: (G, Sg, k, E).  f32 copy for the
+    # exact position cumsum; compute-dtype copy for the dispatch einsums so
+    # the tensors that cross the data<->expert sharding boundary are bf16
+    # FROM CREATION (an .astype after the einsum gets sunk past the
+    # all-reduce by XLA, leaving a 2.7GB/layer f32 AR — measured on mixtral
+    # prefill_32k; §Perf).
+    cd_ = cfg.compute_dtype
+    oh = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)
+    # position of each (token, slot) within its expert queue, counted over
+    # the flattened (Sg, k) order — cumulative sum trick, GShard §3.2.
+    ohf = oh.reshape(G, Sg * k, E)
+    pos = jnp.cumsum(ohf, axis=1) - ohf  # exclusive cumsum: (G, Sg*k, E)
+    pos = jnp.einsum("gte,gte->gt", pos, ohf).reshape(G, Sg, k)  # slot position
+    keep = pos < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    from .flags import paper_baseline
+
+    if paper_baseline():
+        cd_ = jnp.float32
+    oh_c = oh.astype(cd_)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C, dtype=cd_)
+    disp = jnp.einsum("gske,gskc->gsec", oh_c, pos_oh)
+    comb = jnp.einsum("gsk,gske,gskc->gsec",
+                      gate_vals.astype(cd_), oh_c, pos_oh)
+
+    # ---- expert computation (E sharded; dispatch moves tokens to experts)
+    cd = cfg.compute_dtype
+    _EXP_AXES = ("groups", "act_experts", None, "act_embed")
+    _EXP_FF = ("groups", "act_experts", None, "act_mlp")
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xg)  # (G,E,C,d)
+    xe = constrain_act(xe, _EXP_AXES)  # the EP all-to-all happens here
+    if "w_gate" in p:
+        h = constrain_act(jnp.einsum("gecd,edf->gecf", xe, p["w_in"]), _EXP_FF)
+        g = _ACTS[cfg.act](jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+        he = h * g
+    else:
+        he = constrain_act(gelu(jnp.einsum("gecd,edf->gecf", xe, p["w_in"])), _EXP_FF)
+    ye = jnp.einsum("gecf,efd->gecd", he, p["w_out"])
+    ye = constrain_act(ye, _EXP_AXES)
+    y = jnp.einsum("gsec,gecd->gsd", comb, ye)
+
+    # ---- aux losses (switch transformer)
+    me = probs.mean(axis=(0, 1))  # mean router prob per expert
+    ce = oh.sum(axis=2).mean(axis=(0, 1)) / k  # fraction dispatched per expert
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return y.reshape(B, S, d), {"lb_loss": lb_loss, "z_loss": z_loss}

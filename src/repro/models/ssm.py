@@ -1,0 +1,206 @@
+"""Mamba-1 selective SSM block (falcon-mamba / jamba mixer).
+
+Chunked selective scan: the sequence is cut into ``cfg.ssm.chunk``-sized
+chunks processed by an outer ``lax.scan`` (carrying the (d_inner, d_state)
+state) with an inner ``associative_scan`` inside each chunk.  Peak activation
+memory is O(B · chunk · d_inner · d_state) instead of O(B · S · d_inner ·
+d_state) — the same tiling a TPU Pallas kernel uses (repro/kernels/ssm_scan
+is the fused on-chip version; this file is its oracle and the dry-run path).
+
+Decode is a single recurrence step: h' = exp(dt·A)·h + dt·B·x (O(1) in
+sequence length — the reason falcon-mamba/jamba own the long_500k cells).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain_act
+
+from .config import ModelConfig
+from .layers import dense_init, silu
+
+__all__ = ["ssm_init", "ssm_apply", "ssm_decode_step", "ssm_state_init"]
+
+
+def ssm_init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    dtr = s.resolved_dt_rank(d)
+    n = s.d_state
+    ks = jax.random.split(key, 6)
+    dt = cfg.param_dtype
+
+    w_in, a_in = dense_init(ks[0], (d, 2 * d_in), ("embed", "dinner"), dt)
+    w_conv = jax.random.normal(ks[1], (s.d_conv, d_in), jnp.float32) * (1.0 / math.sqrt(s.d_conv))
+    w_x, a_x = dense_init(ks[2], (d_in, dtr + 2 * n), ("dinner", "ssm_proj"), dt)
+    w_dt, a_dt = dense_init(ks[3], (dtr, d_in), ("ssm_proj", "dinner"), dt)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba init)
+    u = jax.random.uniform(ks[4], (d_in,), jnp.float32)
+    dt_init = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    # A: (d_in, n) = -(1..n) per channel (S4D-real init); stored as log
+    A_log = jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (d_in, 1)))
+    D = jnp.ones((d_in,), jnp.float32)
+    w_out, a_out = dense_init(ks[5], (d_in, d), ("dinner", "embed"), dt)
+
+    p = {
+        "w_in": w_in, "w_conv": w_conv.astype(dt), "w_x": w_x, "w_dt": w_dt,
+        "dt_bias": dt_bias, "A_log": A_log, "D": D, "w_out": w_out,
+    }
+    a = {
+        "w_in": a_in, "w_conv": ("conv_k", "dinner"), "w_x": a_x, "w_dt": a_dt,
+        "dt_bias": ("dinner",), "A_log": ("dinner", "ssm_state"), "D": ("dinner",),
+        "w_out": a_out,
+    }
+    return p, a
+
+
+def ssm_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    """(conv_state, ssm_state) for decoding."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    conv = jnp.zeros((batch, s.d_conv - 1, d_in), jnp.dtype(cfg.compute_dtype))
+    h = jnp.zeros((batch, d_in, s.d_state), dtype)
+    return {"conv": conv, "h": h}
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq.  x (B,S,d_in), w (K,d_in)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # sum_k w[k] * x[t-K+1+k] — small K, unrolled adds fuse well on TPU
+    out = jnp.zeros_like(x)
+    for k in range(K):
+        out = out + xp[:, k : k + x.shape[1], :] * w[k][None, None, :]
+    return out
+
+
+def _chunk_scan(Abar: jax.Array, Bx: jax.Array, h0: jax.Array):
+    """Within-chunk associative scan.
+
+    Abar, Bx: (B, L, d_in, n); h0: (B, d_in, n).
+    h_t = Abar_t * h_{t-1} + Bx_t;  returns (h (B,L,d,n), h_last).
+    """
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+
+    cumA, cumB = jax.lax.associative_scan(combine, (Abar, Bx), axis=1)
+    h = cumA * h0[:, None] + cumB
+    return h, h[:, -1]
+
+
+def selective_scan(
+    x: jax.Array,  # (B, S, d_in)
+    dt: jax.Array,  # (B, S, d_in) fp32
+    A: jax.Array,  # (d_in, n) fp32 (negative)
+    Bc: jax.Array,  # (B, S, n) fp32
+    Cc: jax.Array,  # (B, S, n) fp32
+    D: jax.Array,  # (d_in,)
+    chunk: int,
+    h0: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,d_in), h_final (B,d_in,n))."""
+    B_, S, d_in = x.shape
+    n = A.shape[1]
+    if S % chunk != 0:
+        chunk = S  # degenerate: single chunk (small S)
+    nchunks = S // chunk
+    xc = x.reshape(B_, nchunks, chunk, d_in).swapaxes(0, 1)
+    dtc = dt.reshape(B_, nchunks, chunk, d_in).swapaxes(0, 1)
+    Bcc = Bc.reshape(B_, nchunks, chunk, n).swapaxes(0, 1)
+    Ccc = Cc.reshape(B_, nchunks, chunk, n).swapaxes(0, 1)
+    h_init = h0 if h0 is not None else jnp.zeros((B_, d_in, n), jnp.float32)
+
+    def outer(h, xs):
+        xj, dtj, Bj, Cj = xs
+        dA = jnp.exp(dtj[..., None] * A[None, None])  # (B,L,d,n)
+        dBx = (dtj * xj)[..., None] * Bj[:, :, None, :]  # (B,L,d,n)
+        hseq, h_last = _chunk_scan(dA, dBx, h)
+        y = jnp.einsum("bldn,bln->bld", hseq, Cj)
+        return h_last, y.astype(x.dtype)
+
+    h_final, ys = jax.lax.scan(outer, h_init, (xc, dtc, Bcc, Ccc))
+    y = ys.swapaxes(0, 1).reshape(B_, S, d_in)
+    y = y + x * D[None, None].astype(x.dtype)
+    return y, h_final
+
+
+def ssm_apply(
+    p: dict,
+    cfg: ModelConfig,
+    h: jax.Array,  # (B, S, d_model)
+    state: Optional[dict] = None,
+) -> tuple[jax.Array, Optional[dict]]:
+    """Full-sequence mamba mixer.  If ``state`` given, it is threaded (prefill)."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dtr = s.resolved_dt_rank(cfg.d_model)
+    n = s.d_state
+
+    xz = constrain_act(jnp.einsum("bsd,de->bse", h, p["w_in"]),
+                       ("batch", "seq", "act_dinner"))
+    x, z = jnp.split(xz, 2, axis=-1)
+    if state is not None:
+        full = jnp.concatenate([state["conv"].astype(x.dtype), x], axis=1)
+        new_conv = full[:, -(s.d_conv - 1):, :]
+        x = _causal_conv(full, p["w_conv"])[:, state["conv"].shape[1]:, :]
+    else:
+        new_conv = None
+        x = _causal_conv(x, p["w_conv"])
+    x = silu(x)
+
+    xdb = jnp.einsum("bse,ef->bsf", x, p["w_x"]).astype(jnp.float32)
+    dt_r, Bc, Cc = jnp.split(xdb, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_r, p["w_dt"].astype(jnp.float32)) + p["dt_bias"]
+    )
+    A = -jnp.exp(p["A_log"])
+    h0 = state["h"] if state is not None else None
+    y, h_final = selective_scan(x, dt, A, Bc, Cc, p["D"], s.chunk, h0)
+    y = y * silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    new_state = {"conv": new_conv, "h": h_final} if state is not None else None
+    return out, new_state
+
+
+def ssm_decode_step(
+    p: dict,
+    cfg: ModelConfig,
+    h: jax.Array,  # (B, 1, d_model)
+    state: dict,  # {"conv": (B, K-1, d_in), "h": (B, d_in, n)}
+) -> tuple[jax.Array, dict]:
+    """O(1) single-token recurrence."""
+    s = cfg.ssm
+    dtr = s.resolved_dt_rank(cfg.d_model)
+    n = s.d_state
+
+    xz = jnp.einsum("bsd,de->bse", h, p["w_in"])
+    x, z = jnp.split(xz, 2, axis=-1)  # (B,1,d_in)
+    # conv over (state || x)
+    window = jnp.concatenate([state["conv"].astype(x.dtype), x], axis=1)  # (B,K,d_in)
+    xc = jnp.einsum("bkd,kd->bd", window, p["w_conv"])[:, None, :]
+    new_conv = window[:, 1:, :]
+    xc = silu(xc)
+
+    xdb = jnp.einsum("bse,ef->bsf", xc, p["w_x"]).astype(jnp.float32)
+    dt_r, Bc, Cc = jnp.split(xdb, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_r, p["w_dt"].astype(jnp.float32)) + p["dt_bias"]
+    )  # (B,1,d_in)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A[None])  # (B,d_in,n)
+    dBx = (dt * xc.astype(jnp.float32))[:, 0, :, None] * Bc[:, 0][:, None, :]
+    h_new = dA * state["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h_new, Cc[:, 0])[:, None, :]
+    y = y.astype(x.dtype) + xc * p["D"][None, None].astype(x.dtype)
+    y = y * silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, {"conv": new_conv, "h": h_new}

@@ -1,0 +1,461 @@
+"""Decoder-only LM covering dense / MoE / SSM / hybrid / VLM families.
+
+Layers are stacked and iterated with ``lax.scan`` so the lowered HLO is one
+compact loop regardless of depth.  Hybrids (jamba) scan over *super-blocks*
+of ``attn_period`` layers — every super-block has the identical sub-layer
+schedule (e.g. jamba: 7 mamba + 1 attn, MoE on odd sub-layers), so the pytree
+stays homogeneous while the published 1:7 interleave is preserved.
+
+Three entry points per model:
+  forward   — training: full-sequence causal logits
+  prefill   — build a KV/SSM cache from a prompt, return last-position logits
+  decode    — one token against the cache (``serve_step``)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain_act
+
+from .config import ModelConfig
+from .layers import (
+    _expand_kv,
+    apply_norm,
+    apply_rope,
+    attention,
+    chunked_attention,
+    decode_attention,
+    dense_init,
+    local_attention,
+    mlp_apply,
+    mlp_init,
+    norm_init,
+)
+from .moe import moe_apply, moe_init
+from .ssm import ssm_apply, ssm_decode_step, ssm_init, ssm_state_init
+
+__all__ = [
+    "stack_period",
+    "init_lm",
+    "forward_lm",
+    "init_cache",
+    "prefill_lm",
+    "decode_lm",
+]
+
+
+def stack_period(cfg: ModelConfig) -> int:
+    return cfg.attn_period if cfg.family == "hybrid" else 1
+
+
+def _sub_kinds(cfg: ModelConfig) -> list[tuple[bool, bool]]:
+    """[(is_attn, is_moe)] for one super-block."""
+    P = stack_period(cfg)
+    return [(cfg.is_attn_layer(i), cfg.is_moe_layer(i)) for i in range(P)]
+
+
+# ===================================================================== init
+def _attn_init(key, cfg: ModelConfig):
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    wq, aq = dense_init(ks[0], (d, hq, hd), ("embed", "heads", "head_dim"), dt)
+    wk, ak = dense_init(ks[1], (d, hkv, hd), ("embed", "kv_heads", "head_dim"), dt)
+    wv, av = dense_init(ks[2], (d, hkv, hd), ("embed", "kv_heads", "head_dim"), dt)
+    wo, ao = dense_init(ks[3], (hq, hd, d), ("heads", "head_dim", "embed"), dt,
+                        scale=1.0 / math.sqrt(hq * hd))
+    return ({"wq": wq, "wk": wk, "wv": wv, "wo": wo},
+            {"wq": aq, "wk": ak, "wv": av, "wo": ao})
+
+
+def _sublayer_init(key, cfg: ModelConfig, is_attn: bool, is_moe: bool):
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["norm1"], a["norm1"] = norm_init(cfg.d_model, cfg.norm)
+    if is_attn:
+        p["attn"], a["attn"] = _attn_init(ks[0], cfg)
+    else:
+        p["ssm"], a["ssm"] = ssm_init(ks[0], cfg)
+    if cfg.family == "ssm":
+        return p, a  # mamba1: the mixer IS the layer (no separate FFN)
+    p["norm2"], a["norm2"] = norm_init(cfg.d_model, cfg.norm)
+    if is_moe:
+        p["moe"], a["moe"] = moe_init(ks[1], cfg)
+    else:
+        p["mlp"], a["mlp"] = mlp_init(ks[1], cfg)
+    return p, a
+
+
+def init_lm(key, cfg: ModelConfig):
+    """Returns (params, axes) with blocks stacked (n_super, ...)."""
+    cfg.validate()
+    P = stack_period(cfg)
+    if cfg.num_layers % P != 0:
+        raise ValueError(f"{cfg.name}: num_layers {cfg.num_layers} % period {P} != 0")
+    n_super = cfg.num_layers // P
+    kinds = _sub_kinds(cfg)
+    k_embed, k_head, k_blocks = jax.random.split(key, 3)
+
+    params: dict = {}
+    axes: dict = {}
+    emb, _ = dense_init(k_embed, (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                        cfg.param_dtype, scale=0.02)
+    params["embed"], axes["embed"] = emb, ("vocab", "embed")
+    if not cfg.tie_embeddings:
+        params["lm_head"], axes["lm_head"] = dense_init(
+            k_head, (cfg.d_model, cfg.vocab_size), ("embed", "vocab"), cfg.param_dtype
+        )
+    params["final_norm"], axes["final_norm"] = norm_init(cfg.d_model, cfg.norm)
+
+    blocks_p, blocks_a = {}, {}
+    sub_keys = jax.random.split(k_blocks, P)
+    for i, (is_attn, is_moe) in enumerate(kinds):
+        keys = jax.random.split(sub_keys[i], n_super)
+        stacked = jax.vmap(lambda k: _sublayer_init(k, cfg, is_attn, is_moe)[0])(keys)
+        _, sub_axes = _sublayer_init(sub_keys[i], cfg, is_attn, is_moe)
+        blocks_p[f"sub_{i}"] = stacked
+        blocks_a[f"sub_{i}"] = jax.tree.map(
+            lambda ax: ("stack", *ax), sub_axes, is_leaf=lambda x: isinstance(x, tuple)
+        )
+    params["blocks"], axes["blocks"] = blocks_p, blocks_a
+    return params, axes
+
+
+def param_axes(cfg: ModelConfig):
+    """Axes pytree without materializing params (eval_shape on init)."""
+    _, ax = jax.eval_shape(lambda k: init_lm(k, cfg), jax.random.PRNGKey(0))
+    return ax
+
+
+# ===================================================================== apply
+_QKV_AXES = ("batch", "seq", "act_heads", "head_dim")
+
+
+def _attn_apply(p, cfg: ModelConfig, x: jax.Array, *, q_offset=0) -> jax.Array:
+    """Training/prefill self-attention over a full (B,S,d) sequence."""
+    S = x.shape[1]
+    q = constrain_act(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), _QKV_AXES)
+    k = constrain_act(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), _QKV_AXES)
+    v = constrain_act(jnp.einsum("bsd,dhk->bshk", x, p["wv"]), _QKV_AXES)
+    if cfg.use_rope:
+        pos = q_offset + jnp.arange(S)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    from .flags import paper_baseline
+
+    W = cfg.sliding_window
+    if W is not None and S > 2 * W and not paper_baseline():
+        o = local_attention(q, k, v, window=W)  # banded: O(S·2W), §Perf
+    elif S > 4096:
+        o = chunked_attention(q, k, v, causal=True, window=W)
+    else:
+        o = attention(q, k, v, causal=True, window=W)
+    o = constrain_act(o, _QKV_AXES)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), (k, v)
+
+
+def _ffn_apply(p, cfg: ModelConfig, x: jax.Array):
+    """FFN half of a sub-layer; returns (out, aux)."""
+    if "moe" in p:
+        return moe_apply(p["moe"], cfg, x)
+    return mlp_apply(p["mlp"], x, cfg.act), None
+
+
+def _sublayer_fwd(p, cfg: ModelConfig, h: jax.Array, aux_acc: dict):
+    h = constrain_act(h, ("batch", "seq", "act_embed"))
+    x = apply_norm(h, p["norm1"], cfg.norm)
+    if "attn" in p:
+        o, _ = _attn_apply(p["attn"], cfg, x)
+    else:
+        o, _ = ssm_apply(p["ssm"], cfg, x)
+    h = h + o
+    if "norm2" in p:
+        x2 = apply_norm(h, p["norm2"], cfg.norm)
+        f, aux = _ffn_apply(p, cfg, x2)
+        h = h + f
+        if aux is not None:
+            aux_acc = {k: aux_acc.get(k, 0.0) + v for k, v in aux.items()}
+    return h, aux_acc
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _embed_lookup(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    """Token embedding lookup.
+
+    Under a sharding context the lookup is a one-hot contraction instead of a
+    gather: a gather from a (vocab/model, d/data)-sharded table cannot be
+    resharded to batch-sharded output efficiently (XLA "involuntary full
+    rematerialization" — measured as replicated f32 (B,S,d) buffers on
+    jamba); the dot contracts vocab locally per shard and reduces, keeping
+    everything distributed.  The one-hot never materializes (fused
+    iota-compare).
+    """
+    from repro.distributed.context import current_context
+    from .flags import paper_baseline
+
+    table = params["embed"]
+    n_tokens = tokens.shape[0] * tokens.shape[1]
+    # One-hot reads the WHOLE table (vs one row per token for gather): only
+    # profitable when the token count amortizes it (training/prefill, not
+    # decode — measured 3x long_500k regression with one-hot decode).
+    if current_context() is None or paper_baseline() or n_tokens < 16384:
+        return jnp.take(table, tokens, axis=0).astype(cfg.compute_dtype)
+    oh = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=cfg.compute_dtype)
+    return jnp.einsum("bsv,vd->bsd", oh, table.astype(cfg.compute_dtype))
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens: jax.Array,
+                  patch_embeds: Optional[jax.Array]) -> jax.Array:
+    h = _embed_lookup(params, cfg, tokens)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+    if cfg.family == "vlm":
+        if patch_embeds is None:
+            raise ValueError(f"{cfg.name}: vlm family requires patch_embeds")
+        # image prefix: [patches || text]  (frontend is a stub per assignment)
+        h = jnp.concatenate([patch_embeds.astype(cfg.compute_dtype), h], axis=1)
+    # The embedding gather can drop the indices' batch sharding in GSPMD
+    # propagation (table passthrough wins) — re-anchor activations here.
+    return constrain_act(h, ("batch", "seq", "act_embed"))
+
+
+def _logits(params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(cfg.compute_dtype)
+        logits = jnp.einsum("bsd,vd->bsv", h, w)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    logits = constrain_act(logits, ("batch", "seq", "act_vocab"))
+    return logits.astype(jnp.dtype(cfg.logit_dtype))
+
+
+def forward_lm(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S_text)
+    patch_embeds: Optional[jax.Array] = None,  # (B, P, d) for vlm
+) -> tuple[jax.Array, dict]:
+    """Training forward.  Returns (logits (B,S,V), aux losses)."""
+    P = stack_period(cfg)
+    h = _embed_tokens(params, cfg, tokens, patch_embeds)
+
+    def superblock(carry, block_p):
+        h, aux = carry
+        for i in range(P):
+            h, aux = _sublayer_fwd(block_p[f"sub_{i}"], cfg, h, aux)
+        return (h, aux), None
+
+    body = _remat(superblock, cfg)
+    aux0 = {"lb_loss": jnp.zeros((), jnp.float32), "z_loss": jnp.zeros((), jnp.float32)}
+    (h, aux), _ = jax.lax.scan(body, (h, aux0), params["blocks"])
+    return _logits(params, cfg, h), aux
+
+
+# ===================================================================== cache
+def cache_axes(cfg: ModelConfig) -> dict:
+    """Logical axes of the decode cache (pure python — no allocation)."""
+    axes = {}
+    for i, (is_attn, _) in enumerate(_sub_kinds(cfg)):
+        if is_attn:
+            ax = ("stack", "batch", "cache_seq", "kv_heads", "head_dim")
+            axes[f"sub_{i}"] = {"k": ax, "v": ax}
+        else:
+            axes[f"sub_{i}"] = {
+                "conv": ("stack", "batch", "conv_k", "dinner"),
+                "h": ("stack", "batch", "dinner", "ssm_state"),
+            }
+    return axes
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode cache pytree, stacked (n_super, ...) to match the scanned blocks.
+
+    Attention sub-layers get (k, v) ring/linear buffers sized
+    ``min(max_len, sliding_window or max_len)``; SSM sub-layers get
+    (conv_state, ssm_state).  Use under ``jax.eval_shape`` in the dry-run —
+    full-config caches are hundreds of GB.
+    """
+    P = stack_period(cfg)
+    n_super = cfg.num_layers // P
+    hd, hkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    cd = jnp.dtype(cfg.compute_dtype)
+    W = max_len if cfg.sliding_window is None else min(max_len, cfg.sliding_window)
+    cache = {}
+    for i, (is_attn, _) in enumerate(_sub_kinds(cfg)):
+        if is_attn:
+            shape = (n_super, batch, W, hkv, hd)
+            cache[f"sub_{i}"] = {
+                "k": jnp.zeros(shape, cd),
+                "v": jnp.zeros(shape, cd),
+            }
+        else:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            cache[f"sub_{i}"] = {
+                "conv": jnp.zeros((n_super, batch, s.d_conv - 1, d_in), cd),
+                "h": jnp.zeros((n_super, batch, d_in, s.d_state), jnp.float32),
+            }
+    return cache
+
+
+def _ring_slot(pos: jax.Array, W: int):
+    return pos % W
+
+
+def _attn_decode(p, cfg: ModelConfig, x, kv_cache, pos, start=None):
+    """x (B,1,d); kv_cache {"k","v"} (B,W,hkv,hd); pos scalar absolute position.
+
+    ``start`` (B,) optional: first absolute position owned by each batch slot
+    (continuous batching — slots joined mid-stream must not attend to stale
+    cache entries from the previous occupant).
+    """
+    W = kv_cache["k"].shape[1]
+    q = constrain_act(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), _QKV_AXES)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.use_rope:
+        ppos = pos[None] if pos.ndim == 0 else pos
+        q = apply_rope(q, ppos, cfg.rope_theta)
+        k = apply_rope(k, ppos, cfg.rope_theta)
+    slot = _ring_slot(pos, W)
+    k_cache = jax.lax.dynamic_update_slice(kv_cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(kv_cache["v"], v, (0, slot, 0, 0))
+    # absolute position held by each ring slot i: pos - ((pos - i) mod W)
+    slots = jnp.arange(W)
+    abs_pos = pos - jnp.mod(pos - slots, W)
+    valid = abs_pos >= 0
+    if cfg.sliding_window is not None:
+        valid &= pos - abs_pos < cfg.sliding_window
+    valid = valid[None, :]  # (1, W)
+    if start is not None:
+        valid = valid & (abs_pos[None, :] >= start[:, None])  # (B, W)
+    B, _, Hq, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    ke = _expand_kv(k_cache, Hq)
+    ve = _expand_kv(v_cache, Hq)
+    s = jnp.einsum("bshd,bthd->bhst", q, ke, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhst,bthd->bshd", pr, ve)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def _sublayer_decode(p, cfg: ModelConfig, h, cache_i, pos, start=None):
+    h = constrain_act(h, ("batch", "seq", "act_embed"))
+    x = apply_norm(h, p["norm1"], cfg.norm)
+    if "attn" in p:
+        o, new_cache = _attn_decode(p["attn"], cfg, x, cache_i, pos, start)
+    else:
+        o, new_cache = ssm_decode_step(p["ssm"], cfg, x, cache_i)
+    h = h + o
+    if "norm2" in p:
+        x2 = apply_norm(h, p["norm2"], cfg.norm)
+        f, _ = _ffn_apply(p, cfg, x2)
+        h = h + f
+    return h, new_cache
+
+
+def decode_lm(
+    params,
+    cfg: ModelConfig,
+    token: jax.Array,  # (B,) int32
+    cache: dict,
+    pos: jax.Array,  # scalar int32: position of the new token
+    start: Optional[jax.Array] = None,  # (B,) per-slot first owned position
+) -> tuple[jax.Array, dict]:
+    """One serving step: logits for the next token + updated cache."""
+    P = stack_period(cfg)
+    h = _embed_lookup(params, cfg, token[:, None])
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+    h = constrain_act(h, ("batch", "seq", "act_embed"))
+
+    def superblock(carry, xs):
+        h = carry
+        block_p, cache_s = xs
+        new_cache_s = {}
+        for i in range(P):
+            h, new_cache_s[f"sub_{i}"] = _sublayer_decode(
+                block_p[f"sub_{i}"], cfg, h, cache_s[f"sub_{i}"], pos, start
+            )
+        return h, new_cache_s
+
+    h, new_cache = jax.lax.scan(superblock, h, (params["blocks"], cache))
+    logits = _logits(params, cfg, h)
+    return logits[:, 0], new_cache
+
+
+def prefill_lm(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S_text)
+    cache: dict,
+    patch_embeds: Optional[jax.Array] = None,
+    pos_offset: int = 0,
+) -> tuple[jax.Array, dict]:
+    """Run the prompt through the model, filling the cache.
+
+    Returns (last-position logits (B,V), cache).  Cache buffers must be at
+    least as long as the prompt (ring semantics for SWA).  ``pos_offset``
+    places the prompt at absolute positions [offset, offset+S) — RoPE and
+    ring slots follow — so a continuous-batching scheduler can align a
+    joining request with the shared decode position.
+    """
+    P = stack_period(cfg)
+    h = _embed_tokens(params, cfg, tokens, patch_embeds)
+    S = h.shape[1]
+
+    def superblock(carry, xs):
+        h = carry
+        block_p, cache_s = xs
+        new_cache_s = {}
+        for i in range(P):
+            p = block_p[f"sub_{i}"]
+            x = apply_norm(h, p["norm1"], cfg.norm)
+            if "attn" in p:
+                o, (k, v) = _attn_apply(p["attn"], cfg, x, q_offset=pos_offset)
+                W = cache_s[f"sub_{i}"]["k"].shape[1]
+                if S >= W:
+                    # last W tokens; ring slot of token t is (offset+t) % W
+                    kw = jnp.roll(k[:, -W:], shift=(pos_offset + S - W) % W, axis=1)
+                    vw = jnp.roll(v[:, -W:], shift=(pos_offset + S - W) % W, axis=1)
+                else:
+                    pad = ((0, 0), (0, W - S), (0, 0), (0, 0))
+                    kw = jnp.roll(jnp.pad(k, pad), shift=pos_offset % W, axis=1)
+                    vw = jnp.roll(jnp.pad(v, pad), shift=pos_offset % W, axis=1)
+                new_cache_s[f"sub_{i}"] = {
+                    "k": kw.astype(cache_s[f"sub_{i}"]["k"].dtype),
+                    "v": vw.astype(cache_s[f"sub_{i}"]["v"].dtype),
+                }
+            else:
+                state0 = {
+                    "conv": cache_s[f"sub_{i}"]["conv"],
+                    "h": cache_s[f"sub_{i}"]["h"],
+                }
+                o, state = ssm_apply(p["ssm"], cfg, x, state=state0)
+                new_cache_s[f"sub_{i}"] = state
+            h = h + o
+            if "norm2" in p:
+                x2 = apply_norm(h, p["norm2"], cfg.norm)
+                f, _ = _ffn_apply(p, cfg, x2)
+                h = h + f
+        return h, new_cache_s
+
+    h, new_cache = jax.lax.scan(superblock, h, (params["blocks"], cache))
+    logits = _logits(params, cfg, h[:, -1:, :])
+    return logits[:, 0], new_cache

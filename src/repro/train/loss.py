@@ -1,0 +1,50 @@
+"""Losses: stable cross-entropy (+ z-loss) for LM training."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["softmax_cross_entropy", "lm_loss"]
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-position CE in nats.  logits (..., V) fp32, labels (...) int.
+
+    The gold logit is selected with an iota-match masked reduce rather than
+    ``take_along_axis``: a gather along a TP-sharded (and possibly uneven)
+    vocab dim makes GSPMD all-gather the full logits (measured 13.6GB/device
+    on whisper train_4k); the masked reduce keeps every shard local and
+    lowers to a tiny all-reduce.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    match = iota == labels[..., None]
+    gold = jnp.sum(jnp.where(match, logits, 0.0), axis=-1)
+    return lse - gold
+
+
+def lm_loss(
+    logits: jax.Array,  # (B, S, V)
+    labels: jax.Array,  # (B, S)
+    mask: Optional[jax.Array] = None,  # (B, S) 1 = count
+    z_loss_weight: float = 1e-4,
+) -> tuple[jax.Array, dict]:
+    ce = softmax_cross_entropy(logits, labels)
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (ce * mask).sum() / denom
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    zl = ((lse**2) * mask).sum() / denom
+    total = loss + z_loss_weight * zl
+    metrics = {
+        "ce_loss": loss,
+        "z_loss": zl,
+        "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0)),
+        "tokens": mask.sum(),
+    }
+    return total, metrics

@@ -1,0 +1,113 @@
+"""Optimizers in pure JAX (no optax in this container).
+
+AdamW with: decoupled weight decay, global-norm clipping, bias correction,
+configurable moment dtypes (fp32 default; bf16 "m8" mode halves optimizer
+HBM — a §Perf lever for the 398B-param cells), and LR schedules
+(warmup+cosine / constant).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "warmup_cosine",
+    "constant_lr",
+    "global_norm",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: str = "float32"  # "bfloat16" halves optimizer memory
+
+    def lr_at(self, step: jax.Array) -> jax.Array:
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(1, warmup)
+        prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+def constant_lr(v: float):
+    return lambda step: jnp.asarray(v, jnp.float32)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), tree), g
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    """Optimizer state pytree: first/second moments shaped like params."""
+    md = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, md)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    grad_norm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        grads, _ = clip_by_global_norm(grads, cfg.clip_norm)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+    lr = cfg.lr_at(count)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        vf = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+        step = (mf / c1) / (jnp.sqrt(vf / c2) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": grad_norm, "lr": lr}

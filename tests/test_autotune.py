@@ -1,0 +1,66 @@
+"""(b, f) autotuner: cost-model fit and constrained recommendation."""
+import numpy as np
+import pytest
+
+from repro.core.autotune import IOCostModel, probe_io_cost, recommend
+
+
+def test_cost_model_arithmetic():
+    m = IOCostModel(c0=0.01, c_seek=0.001, c_byte=1e-9, row_bytes=1000.0)
+    # 64 rows, blocks of 16 -> 4 seeks
+    t = m.fetch_seconds(64, 1, 16)
+    assert abs(t - (0.01 + 4 * 0.001 + 64 * 1000 * 1e-9)) < 1e-12
+    assert m.samples_per_sec(64, 1, 16) == pytest.approx(64 / t)
+
+
+def test_probe_recovers_seek_cost():
+    """Synthetic backend with known per-call + per-block costs."""
+    seek, base = 2e-4, 1e-3
+    clock = {"t": 0.0}
+
+    def read_rows(idx):
+        # deterministic 'cost': we cannot fake perf_counter, so emulate by
+        # spinning is too slow — instead test the lstsq path via the model.
+        return None
+
+    # direct least-squares sanity: build the design matrix the prober uses
+    rng = np.random.default_rng(0)
+    X, y = [], []
+    for _ in range(30):
+        nb = int(rng.integers(1, 64))
+        rows = nb * int(rng.integers(1, 16))
+        X.append([1.0, nb, rows * 1000.0])
+        y.append(base + seek * nb + 1e-9 * rows * 1000.0)
+    coef, *_ = np.linalg.lstsq(np.asarray(X), np.asarray(y), rcond=None)
+    assert coef[0] == pytest.approx(base, rel=0.05)
+    assert coef[1] == pytest.approx(seek, rel=0.05)
+
+
+def test_probe_on_real_store(tmp_path):
+    from repro.data import generate_tahoe_like, load_tahoe_like
+
+    generate_tahoe_like(str(tmp_path), n_cells=20000, n_genes=256, seed=0)
+    store = load_tahoe_like(str(tmp_path))
+    model = probe_io_cost(lambda idx: store[idx], len(store),
+                          row_bytes=store.avg_row_bytes, probes=2)
+    assert model.c0 >= 0 and model.c_seek >= 0 and model.c_byte >= 0
+    # block reads must be modeled at least as fast as random reads
+    assert model.fetch_seconds(64, 4, 64) <= model.fetch_seconds(64, 4, 1) + 1e-9
+
+
+def test_recommend_respects_constraints():
+    m = IOCostModel(c0=0.005, c_seek=0.048, c_byte=1 / 450e6, row_bytes=50_000)
+    rec = recommend(m, batch_size=64, num_classes=14,
+                    mem_budget_bytes=500e6, entropy_slack_bits=0.1)
+    assert rec.buffer_bytes <= 500e6
+    # diversity constraint: effective samples >= slack-implied floor
+    assert rec.fetch_factor * 64 // rec.block_size >= 16
+    # throughput must beat naive random sampling
+    naive = m.samples_per_sec(64, 1, 1)
+    assert rec.modeled_samples_per_sec > 10 * naive
+
+
+def test_recommend_infeasible_raises():
+    m = IOCostModel(c0=0.005, c_seek=0.048, c_byte=1 / 450e6, row_bytes=50_000)
+    with pytest.raises(ValueError):
+        recommend(m, batch_size=64, mem_budget_bytes=1.0)  # nothing fits

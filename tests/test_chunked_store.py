@@ -1,0 +1,60 @@
+"""Chunked (zarr-style) backend: correctness + block/chunk alignment economics."""
+import numpy as np
+import pytest
+
+from repro.core import BlockShuffling, ScDataset
+from repro.data.chunked_store import ChunkedStore, write_chunked_store
+
+
+@pytest.fixture(scope="module")
+def store(tmp_path_factory):
+    rng = np.random.default_rng(0)
+    X = rng.normal(0, 1, (4096, 32)).astype(np.float32)
+    path = str(tmp_path_factory.mktemp("zarrish") / "s")
+    write_chunked_store(path, X, {"y": np.arange(4096)}, chunk_rows=64)
+    return ChunkedStore(path), X
+
+
+def test_rows_roundtrip(store):
+    st, X = store
+    rows = np.array([0, 63, 64, 4095, 100, 100])
+    np.testing.assert_allclose(st[rows], X[rows])
+
+
+def test_request_counting(store):
+    st, X = store
+    st.iostats.reset()
+    st[np.arange(0, 64)]  # exactly one chunk
+    assert st.iostats.runs == 1
+    st.iostats.reset()
+    st[np.array([0, 64, 128, 192])]  # four chunks
+    assert st.iostats.runs == 4
+
+
+def test_block_chunk_alignment_minimizes_objects(store):
+    """b == chunk_rows touches the theoretical minimum number of objects."""
+    st, X = store
+
+    def objects_for(b):
+        ds = ScDataset(st, BlockShuffling(b), batch_size=64, fetch_factor=8, seed=0)
+        st.iostats.reset()
+        next(iter(ds))
+        return st.iostats.runs
+
+    aligned = objects_for(64)      # = chunk size
+    tiny = objects_for(1)          # random rows -> ~1 object per row
+    straddle = objects_for(32)     # half-chunk blocks straddle boundaries
+    assert aligned <= straddle <= tiny
+    # aligned fetch of 512 rows = 512/64 = 8 objects exactly
+    assert aligned == 8
+
+
+def test_through_scdataset_coverage(store):
+    st, X = store
+    ds = ScDataset(st, BlockShuffling(64), batch_size=64, fetch_factor=4, seed=1)
+    rows = []
+    for b in ds:
+        assert b.shape == (64, 32)
+        rows.append(b)
+    total = sum(r.shape[0] for r in rows)
+    assert total == (4096 // 256) * 256

@@ -1,0 +1,58 @@
+"""int8 error-feedback gradient compression: invariants + bounded error."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.compression import (
+    compress_tree,
+    decompress_tree,
+    dequantize,
+    quantize_ef,
+)
+
+
+@given(
+    n=st.integers(1, 2000),
+    scale=st.floats(1e-6, 1e3),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=30, deadline=None)
+def test_quantize_bounded_error(n, scale, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(0, scale, n), jnp.float32)
+    q, s, resid = quantize_ef(g)
+    deq = dequantize(q, s, g.shape, g.dtype)
+    # per-block max error <= scale/127 (half-step rounding -> /254, use /126 slack)
+    err = np.abs(np.asarray(deq - g))
+    per_block_bound = np.repeat(np.asarray(s), 256)[:n] * (0.5 + 1e-3)
+    assert np.all(err <= per_block_bound + 1e-9)
+    # residual is exactly the quantization error
+    np.testing.assert_allclose(np.asarray(resid), np.asarray(g - deq), atol=1e-6)
+
+
+def test_error_feedback_converges():
+    """With EF, repeated quantization of a constant gradient has zero bias."""
+    g = jnp.asarray(np.random.default_rng(0).normal(0, 1, 512), jnp.float32)
+    resid = jnp.zeros_like(g)
+    applied = jnp.zeros_like(g)
+    for step in range(50):
+        q, s, resid = quantize_ef(g, resid)
+        applied = applied + dequantize(q, s, g.shape, g.dtype)
+    # mean applied per step -> true gradient
+    np.testing.assert_allclose(np.asarray(applied / 50), np.asarray(g), atol=2e-2)
+
+
+def test_tree_roundtrip():
+    rng = np.random.default_rng(1)
+    tree = {
+        "a": jnp.asarray(rng.normal(0, 1, (33,)), jnp.float32),
+        "b": {"c": jnp.asarray(rng.normal(0, 10, (4, 7)), jnp.bfloat16)},
+    }
+    codes, scales, resid = compress_tree(tree)
+    out = decompress_tree(codes, scales, tree)
+    for k, (x, y) in enumerate(zip(jnp.asarray(tree["a"]), jnp.asarray(out["a"]))):
+        pass
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(tree["a"]), atol=0.05)
+    assert out["b"]["c"].dtype == jnp.bfloat16
+    assert codes["a"].dtype == jnp.int8

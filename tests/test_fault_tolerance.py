@@ -1,0 +1,107 @@
+"""Fault tolerance: crash → restart from checkpoint is BITWISE identical to an
+uninterrupted run (deterministic loader + checkpointed state + cursor)."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager, flatten_tree
+from repro.configs import smoke_config
+from repro.distributed.fault import HeartbeatMonitor, run_with_restarts
+from repro.launch.train import build_loader, train_loop
+from repro.models import Model
+
+
+@pytest.fixture(scope="module")
+def corpus(tmp_path_factory):
+    return str(tmp_path_factory.mktemp("corpus"))
+
+
+def _loader(corpus, seed=0):
+    return build_loader(corpus, seq_len=32, batch=4, block_size=8,
+                        fetch_factor=2, seed=seed, n_tokens=100_000,
+                        vocab_size=128)
+
+
+def _leaves(state):
+    flat, _ = flatten_tree(state["params"])
+    return {k: np.asarray(v) for k, v in flat.items()}
+
+
+def test_crash_restart_bitwise_equal(corpus, tmp_path):
+    model = Model(smoke_config("smollm-360m"))
+    steps = 14
+
+    # uninterrupted reference run
+    ref = train_loop(model, _loader(corpus), steps=steps,
+                     ckpt_dir=str(tmp_path / "ref"), ckpt_every=4, log_every=100)
+    ref_params = _leaves(ref["final_state"])
+
+    # crashing run: dies at step 9 (after the step-8 checkpoint), restarts
+    ckpt = str(tmp_path / "crashy")
+
+    def work(resume: bool):
+        return train_loop(model, _loader(corpus), steps=steps, ckpt_dir=ckpt,
+                          ckpt_every=4, log_every=100, resume=resume,
+                          crash_after=None if resume else 9)
+
+    restarts = []
+    res = run_with_restarts(work, max_restarts=2,
+                            on_restart=lambda n, e: restarts.append(str(e)))
+    assert len(restarts) == 1 and "injected crash" in restarts[0]
+    got_params = _leaves(res["final_state"])
+
+    assert ref_params.keys() == got_params.keys()
+    for k in ref_params:
+        np.testing.assert_array_equal(ref_params[k], got_params[k]), k
+
+
+def test_checkpoint_keep_n_and_atomicity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2)
+    state = {"w": jax.numpy.arange(8, dtype=jax.numpy.float32)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state, loader_state={"seed": 0, "epoch": 0, "fetch_cursor": s})
+    assert mgr.all_steps() == [3, 4]
+    restored, manifest = mgr.restore({"w": np.zeros(8, np.float32)})
+    assert manifest["step"] == 4
+    assert manifest["loader_state"]["fetch_cursor"] == 4
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(8))
+    # no tmp dirs left behind
+    assert not [d for d in os.listdir(tmp_path) if d.startswith("tmp.")]
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=3)
+    state = {"w": np.ones(16, np.float32)}
+    mgr.save(1, state, blocking=False)
+    mgr.wait()
+    assert mgr.all_steps() == [1]
+
+
+def test_restore_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": np.ones(4, np.float32)})
+    with pytest.raises(ValueError):
+        mgr.restore({"w": np.zeros(5, np.float32)})
+
+
+def test_run_with_restarts_gives_up():
+    def work(resume):
+        raise RuntimeError("always broken")
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(work, max_restarts=2)
+
+
+def test_heartbeat_monitor():
+    hb = HeartbeatMonitor(timeout_s=0.05)
+    hb.beat("w0")
+    hb.beat("w1")
+    assert set(hb.alive()) == {"w0", "w1"}
+    import time
+
+    time.sleep(0.08)
+    hb.beat("w1")
+    assert hb.suspects() == ["w0"]
+    assert hb.alive() == ["w1"]

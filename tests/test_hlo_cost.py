@@ -1,0 +1,71 @@
+"""Loop-corrected HLO cost parser vs known-FLOP programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import parse_hlo_costs
+
+X = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+W = jax.ShapeDtypeStruct((10, 256, 256), jnp.float32)
+PER_ITER = 2 * 128 * 256 * 256
+
+
+def _costs(fn, *args):
+    return parse_hlo_costs(jax.jit(fn).lower(*args).compile().as_text())
+
+
+def test_scan_trip_count():
+    def f(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    res = _costs(f, X, W)
+    assert abs(res["flops"] / (PER_ITER * 10) - 1.0) < 0.02
+
+
+def test_nested_scan_multiplies():
+    def g(x, w):
+        def outer(c, wi):
+            def inner(c2, _):
+                return c2 @ wi, None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, w)
+        return y.sum()
+
+    res = _costs(g, X, W)
+    assert abs(res["flops"] / (PER_ITER * 50) - 1.0) < 0.02
+
+
+def test_remat_counts_recompute():
+    def h(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(jax.checkpoint(body), x, w)
+        return (y * y).sum()
+
+    res = _costs(jax.grad(h, argnums=1), X, W)
+    # fwd 10 + recompute 10 + bwd 2x10 = 40 matmul-equivalents
+    assert abs(res["flops"] / (PER_ITER * 40) - 1.0) < 0.05
+
+
+def test_plain_dot_and_bytes():
+    def f(a, b):
+        return (a @ b).sum()
+
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    res = _costs(f, a, b)
+    assert res["flops"] == 2 * 64 * 128 * 32
+    expect_bytes = 4 * (64 * 128 + 128 * 32 + 64 * 32)
+    assert abs(res["dot_bytes"] - expect_bytes) <= expect_bytes * 0.01
+    # bf16-equivalent caps f32 at 2 bytes
+    assert abs(res["dot_bytes_eq"] - expect_bytes / 2) <= expect_bytes * 0.01
+
+
+def test_no_dots_no_flops():
+    res = _costs(lambda x: jnp.sin(x).sum(), X)
+    assert res["flops"] == 0.0

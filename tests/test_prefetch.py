@@ -1,0 +1,89 @@
+"""PrefetchPool: determinism, work stealing, straggler re-issue, errors."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BlockShuffling, PrefetchPool, ScDataset
+
+
+def _X(n=8192):
+    return np.arange(n * 2, dtype=np.float32).reshape(n, 2)
+
+
+def _mk(collection=None, **kw):
+    defaults = dict(batch_size=32, fetch_factor=4, seed=3)
+    defaults.update(kw)
+    return ScDataset(collection if collection is not None else _X(),
+                     BlockShuffling(8), **defaults)
+
+
+@pytest.mark.parametrize("workers", [1, 2, 4])
+def test_pool_matches_sync_iteration(workers):
+    sync = [b.copy() for b in _mk()]
+    pool = [b.copy() for b in PrefetchPool(_mk(), num_workers=workers)]
+    assert len(sync) == len(pool)
+    for a, b in zip(sync, pool):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_multiple_workers_share_fetches():
+    pool = PrefetchPool(_mk(fetch_factor=2), num_workers=2, max_outstanding=8)
+    list(pool)
+    wf = pool.stats["worker_fetches"]
+    assert sum(wf.values()) == pool.stats["fetches"]
+    assert len([w for w, c in wf.items() if c > 0]) >= 2
+
+
+def test_straggler_speculative_reissue_dedups():
+    class SlowStore:
+        def __init__(self, X):
+            self.X = X
+            self.calls = 0
+
+        def __len__(self):
+            return len(self.X)
+
+        def __getitem__(self, rows):
+            self.calls += 1
+            if self.calls == 2:
+                time.sleep(0.6)
+            return self.X[rows]
+
+    ds = _mk(SlowStore(_X()), fetch_factor=2)
+    pool = PrefetchPool(ds, num_workers=2, straggler_factor=2.0,
+                        straggler_min_latency=0.02)
+    batches = list(pool)
+    ref = list(_mk(fetch_factor=2))
+    assert len(batches) == len(ref)
+    for a, b in zip(batches, ref):
+        np.testing.assert_array_equal(a, b)
+    assert pool.stats["speculative_reissues"] >= 1
+
+
+def test_worker_errors_propagate():
+    class BrokenStore:
+        def __len__(self):
+            return 4096
+
+        def __getitem__(self, rows):
+            raise IOError("disk on fire")
+
+    with pytest.raises(IOError):
+        list(PrefetchPool(_mk(BrokenStore()), num_workers=2))
+
+
+def test_pool_resumes_from_cursor():
+    ds = _mk()
+    it = iter(PrefetchPool(ds, num_workers=2))
+    consumed = [next(it) for _ in range(ds.fetch_factor * 2)]  # 2 full fetches
+    state = ds.state()
+    assert state.fetch_cursor >= 1
+    ds2 = _mk()
+    ds2.load_state(state)
+    rest = [b.copy() for b in PrefetchPool(ds2, num_workers=2)]
+    full = [b.copy() for b in _mk()]
+    tail = full[state.fetch_cursor * ds.fetch_factor:]
+    assert len(rest) == len(tail)
+    for a, b in zip(tail, rest):
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,87 @@
+"""Sharding-rule resolution: strict vs waste-guard, fallthrough, dedup.
+
+Uses a fake Mesh-like object so no jax devices are touched.
+"""
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (
+    RULES_DECODE,
+    RULES_DECODE_LONG,
+    RULES_TRAIN,
+    Rules,
+    spec_for_axes,
+)
+
+
+class FakeMesh:
+    def __init__(self, shape: dict):
+        self._shape = shape
+
+    @property
+    def shape(self):
+        return self._shape
+
+    @property
+    def axis_names(self):
+        return tuple(self._shape.keys())
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_basic_param_spec():
+    spec = spec_for_axes(("vocab", "embed"), RULES_TRAIN, MESH, (32000, 4096))
+    assert spec == P("model", "data")
+
+
+def test_strict_refuses_uneven():
+    spec = spec_for_axes(("stack", "embed", "heads", "head_dim"),
+                         RULES_TRAIN, MESH, (32, 960, 15, 64))
+    assert spec == P(None, "data")  # heads 15 % 16 != 0 -> replicated
+
+
+def test_nonstrict_pads_mildly_uneven():
+    spec = spec_for_axes(("batch", "seq", "act_heads", "head_dim"),
+                         RULES_TRAIN, MESH, (256, 4096, 15, 64), strict=False)
+    assert spec == P("data", None, "model")  # 15 on 16: 6.7% pad, allowed
+
+
+def test_fallthrough_expert_dim():
+    # mixtral: 8 experts on a 16-way axis -> ff picks up "model" instead
+    spec = spec_for_axes(("experts", "embed", "mlp"), RULES_TRAIN, MESH,
+                         (8, 4096, 14336), strict=False)
+    assert spec == P(None, "data", "model")
+    # phi3.5: 16 experts divide evenly -> EP on experts, ff replicated
+    spec = spec_for_axes(("experts", "embed", "mlp"), RULES_TRAIN, MESH,
+                         (16, 4096, 6400), strict=False)
+    assert spec == P("model", "data")
+
+
+def test_axis_used_once():
+    # both dims want "model": second falls back
+    r = Rules({"a": "model", "b": "model"})
+    assert spec_for_axes(("a", "b"), r, MESH, (16, 16)) == P("model")
+
+
+def test_missing_mesh_axes_dropped():
+    spec = spec_for_axes(("batch", "seq"), RULES_TRAIN, MESH, (256, 4096))
+    assert spec == P("data")  # ("pod","data") -> pod absent -> ("data",)
+    spec = spec_for_axes(("batch", "seq"), RULES_TRAIN, MESH_POD, (256, 4096))
+    assert spec == P(("pod", "data"))
+
+
+def test_decode_rules_cache_seq():
+    ax = ("stack", "batch", "cache_seq", "kv_heads", "head_dim")
+    spec = spec_for_axes(ax, RULES_DECODE, MESH, (32, 128, 32768, 8, 128))
+    assert spec == P(None, "data", "model")
+    spec = spec_for_axes(ax, RULES_DECODE_LONG, MESH, (9, 1, 524288, 8, 128))
+    assert spec == P(None, None, ("data", "model"))
+
+
+def test_override_is_nondestructive():
+    r2 = RULES_TRAIN.override(vocab=None)
+    assert r2.get("vocab") is None
+    assert RULES_TRAIN.get("vocab") == "model"
+    assert r2.get("mlp") == "model"

@@ -1,0 +1,78 @@
+"""Theory (§3.4): bounds hold against Monte-Carlo simulation (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.theory import (
+    batch_entropy,
+    distribution_entropy,
+    entropy_bounds,
+    expected_entropy_f1,
+    expected_entropy_large_f,
+    plugin_entropy,
+    simulate_expected_entropy,
+    tahoe_plate_distribution,
+)
+
+
+def test_paper_eq5_numbers():
+    """Paper Eq. (5): m=64, b=16 on the Tahoe plate distribution."""
+    p = tahoe_plate_distribution()
+    assert abs(distribution_entropy(p) - 3.78) < 0.02
+    lo, hi = entropy_bounds(p, m=64, b=16)
+    assert abs(lo - 1.43) < 0.05
+    assert abs(hi - 3.63) < 0.05
+
+
+def test_paper_section34_empirical_match():
+    p = tahoe_plate_distribution()
+    m1, s1 = simulate_expected_entropy(p, 64, 16, 1, trials=400,
+                                       rng=np.random.default_rng(0))
+    assert abs(m1 - 1.76) < 0.15  # paper: 1.76 +/- 0.33
+    m256, s256 = simulate_expected_entropy(p, 64, 16, 256, trials=200,
+                                           rng=np.random.default_rng(0))
+    assert abs(m256 - 3.61) < 0.05  # paper: 3.61 +/- 0.08
+
+
+@given(
+    k=st.integers(2, 12),
+    b=st.sampled_from([1, 2, 4, 8, 16]),
+    f=st.sampled_from([1, 2, 8, 64]),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=25, deadline=None)
+def test_sandwich_bound_holds(k, b, f, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.dirichlet(np.full(k, 5.0))
+    m = 64
+    mean, std = simulate_expected_entropy(p, m, b, f, trials=150, rng=rng)
+    lo, hi = entropy_bounds(p, m, b)
+    slack = 3 * std / np.sqrt(150) + 0.08  # MC error + O(B^-2) truncation
+    assert lo - slack <= mean <= hi + slack, (lo, mean, hi)
+
+
+@given(k=st.integers(2, 10), seed=st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_monotone_in_f(k, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.dirichlet(np.full(k, 5.0))
+    m, b = 64, 16
+    means = [simulate_expected_entropy(p, m, b, f, trials=200,
+                                       rng=np.random.default_rng(seed))[0]
+             for f in (1, 8, 64)]
+    assert means[0] <= means[1] + 0.1
+    assert means[1] <= means[2] + 0.1
+
+
+def test_theorem_limits_consistency():
+    p = tahoe_plate_distribution()
+    lo, hi = entropy_bounds(p, 64, 16)
+    assert abs(expected_entropy_f1(p, 64, 16) - lo) < 1e-9
+    assert abs(expected_entropy_large_f(p, 64) - hi) < 1e-9
+
+
+def test_plugin_entropy_edges():
+    assert plugin_entropy(np.array([0, 0, 64])) == 0.0
+    assert abs(plugin_entropy(np.array([32, 32])) - 1.0) < 1e-12
+    assert plugin_entropy(np.zeros(4)) == 0.0
+    assert batch_entropy(np.array([1, 1, 1, 1])) == 0.0
