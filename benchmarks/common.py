@@ -23,7 +23,13 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import BlockShuffling, ScDataset, Streaming  # noqa: E402
-from repro.data import SATA_SSD, IOStats, generate_tahoe_like, load_tahoe_like  # noqa: E402
+from repro.data import (  # noqa: E402
+    SATA_SSD,
+    IOStats,
+    generate_tahoe_like,
+    load_tahoe_like,
+    open_collection,
+)
 
 BENCH_DATA_DIR = os.environ.get("BENCH_DATA_DIR", "/tmp/repro_bench_data")
 N_CELLS = int(os.environ.get("BENCH_N_CELLS", "150000"))
@@ -39,6 +45,31 @@ def dataset(simulate_sata: bool = True):
     stats = IOStats(simulate=SATA_SSD if simulate_sata else None, simulate_scale=0.0)
     store = load_tahoe_like(BENCH_DATA_DIR, iostats=stats)
     return store, stats
+
+
+def planned_dataset(
+    simulate_sata: bool = True,
+    *,
+    cache_bytes: int = 64 << 20,
+    block_rows: int = 256,
+    max_extent_rows: int = 32768,
+):
+    """(collection, iostats) through the unified backend layer.
+
+    Same on-disk fixture as :func:`dataset`, but fetches run through the
+    cross-shard read planner + LRU block cache, and IOStats (runs / bytes /
+    cache hits) is recorded once at the planner level.
+    """
+    generate_tahoe_like(BENCH_DATA_DIR, n_cells=N_CELLS, n_genes=N_GENES, seed=0)
+    stats = IOStats(simulate=SATA_SSD if simulate_sata else None, simulate_scale=0.0)
+    col = open_collection(
+        "sharded-csr://" + BENCH_DATA_DIR,
+        iostats=stats,
+        cache_bytes=cache_bytes,
+        block_rows=block_rows,
+        max_extent_rows=max_extent_rows,
+    )
+    return col, stats
 
 
 def timed_samples_per_sec(
@@ -70,6 +101,9 @@ def timed_samples_per_sec(
         "io_runs": stats.runs,
         "io_calls": stats.calls,
         "bytes_read": stats.bytes_read,
+        "cache_hits": stats.cache_hits,
+        "cache_misses": stats.cache_misses,
+        "cache_hit_rate": stats.cache_hit_rate,
     }
 
 

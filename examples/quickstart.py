@@ -1,9 +1,11 @@
 """Quickstart: scDataset on a synthetic Tahoe-like cell atlas.
 
-Covers the paper's core API in ~40 lines: open an on-disk sharded CSR store
-(the AnnData stand-in), pick a sampling strategy, set (batch_size, fetch
-factor), and iterate dense minibatches — then show what block sampling did
-to the I/O pattern and to minibatch diversity.
+Covers the paper's core API in ~40 lines: open an on-disk collection
+through the unified backend layer (``open_collection`` — here the sharded
+CSR store, the AnnData stand-in), pick a sampling strategy, set
+(batch_size, fetch factor), and iterate dense minibatches — then show what
+block sampling plus the shared read planner / block cache did to the I/O
+pattern and to minibatch diversity.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,17 +18,21 @@ import numpy as np
 
 from repro.core import BlockShuffling, ScDataset
 from repro.core.theory import entropy_bounds, mean_batch_entropy
-from repro.data import generate_tahoe_like, load_tahoe_like
+from repro.data import generate_tahoe_like, open_collection
 
 DATA = "/tmp/quickstart_cells"
 
 
 def main():
-    # 1. a 50k-cell, 14-plate on-disk dataset (reused across runs)
+    # 1. a 50k-cell, 14-plate on-disk dataset (reused across runs), opened
+    #    behind the Collection protocol: fetches go through the cross-shard
+    #    read planner and a 32MB LRU block cache
     generate_tahoe_like(DATA, n_cells=50_000, n_genes=1024, seed=0)
-    store = load_tahoe_like(DATA)
-    print(f"dataset: {store.n_obs} cells x {store.n_var} genes, "
-          f"{len(store.shards)} plate shards")
+    store = open_collection("sharded-csr://" + DATA, cache_bytes=32 << 20,
+                            block_rows=256)
+    sch = store.schema
+    print(f"dataset: {sch['n_obs']} cells x {sch['n_var']} genes, "
+          f"{sch['n_shards']} plate shards ({sch['kind']} backend)")
 
     # 2. quasi-random loader: blocks of 16, fetch 64 minibatches at once
     ds = ScDataset(
@@ -49,13 +55,14 @@ def main():
         if i >= 49:
             break
 
-    # 4. what block sampling bought us
+    # 4. what block sampling + the planner bought us
     st = store.iostats
-    print(f"I/O: {st.calls} backend calls, {st.runs} random extents for "
-          f"{st.rows} rows ({st.rows / max(st.runs, 1):.1f} rows per seek)")
+    print(f"I/O: {st.calls} planned fetches, {st.runs} random extents for "
+          f"{st.rows} rows ({st.rows / max(st.runs, 1):.1f} rows per seek), "
+          f"block-cache hit rate {st.cache_hit_rate:.0%}")
     mean, std = mean_batch_entropy(plates_seen)
-    sizes = np.array([len(s) for s in store.shards], np.float64)
-    lo, hi = entropy_bounds(sizes / sizes.sum(), 64, 16)
+    plate_counts = np.bincount(store.obs_column("plate")).astype(np.float64)
+    lo, hi = entropy_bounds(plate_counts / plate_counts.sum(), 64, 16)
     print(f"diversity: plate entropy {mean:.2f}±{std:.2f} "
           f"(Cor 3.3 bounds [{lo:.2f}, {hi:.2f}]; IID would be ~{hi:.2f})")
 

@@ -103,7 +103,26 @@ def _take(v: Any, rows) -> Any:
 
 
 def default_fetch_callback(collection: Any, indices: np.ndarray) -> Any:
-    """``collection[indices]`` — works for numpy, MultiIndexable, CSR stores."""
+    """Batched read of ``indices`` from any collection.
+
+    Collections implementing the unified backend protocol
+    (:class:`repro.data.backend.Collection` — e.g. anything returned by
+    ``open_collection``) are read through their ``fetch`` method, so the
+    shared read planner / block cache / IOStats accounting engage; plain
+    indexables (numpy, MultiIndexable, raw stores) fall back to
+    ``collection[indices]``.
+    """
+    # Structural check mirroring repro.data.backend.Collection (fetch +
+    # nbytes_of + schema) rather than a bare `fetch` attribute: an unrelated
+    # collection that happens to expose fetch(url)-style methods must keep
+    # taking the `collection[indices]` path.  Checked here by attributes so
+    # repro.core stays import-independent of repro.data.
+    if (
+        callable(getattr(collection, "fetch", None))
+        and hasattr(collection, "nbytes_of")
+        and hasattr(collection, "schema")
+    ):
+        return collection.fetch(indices)
     return _take(collection, indices)
 
 

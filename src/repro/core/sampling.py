@@ -145,8 +145,15 @@ class BlockShuffling(SamplingStrategy):
 class BlockWeightedSampling(SamplingStrategy):
     """Weighted sampling with block-level I/O efficiency.
 
-    Per-sample weights are averaged per block; blocks are drawn *with
-    replacement* proportionally to their mean weight.  One epoch draws
+    Per-sample weights are **summed** per block; blocks are drawn *with
+    replacement* proportionally to their total weight.  Summing (not
+    averaging) is the correct rule for the ragged tail: a tail block holding
+    only ``n % block_size`` samples competes with exactly the probability
+    mass its members would carry under per-sample weighted sampling, so
+    aggregate mass balance (what :class:`ClassBalancedSampling` relies on)
+    is preserved, and ``block_size=1`` degenerates exactly to
+    WeightedRandomSampler.  A mean over the tail's (fewer) members would
+    inflate its draw probability per unit of weight.  One epoch draws
     ``ceil(n / block_size)`` blocks, so epoch length stays ~n while the
     marginal inclusion probability of each sample is proportional to its
     block's weight.  This composes with DDP sharding unchanged (paper
@@ -166,6 +173,11 @@ class BlockWeightedSampling(SamplingStrategy):
         object.__setattr__(self, "weights", w)
 
     def _block_weights(self, n: int) -> np.ndarray:
+        """Normalized per-block draw probabilities: SUM of member weights.
+
+        Zero-padding the ragged tail before the reshape is exactly the sum
+        over the tail's real members — padding contributes no mass.
+        """
         if len(self.weights) != n:
             raise ValueError(f"weights length {len(self.weights)} != dataset size {n}")
         b = self.block_size

@@ -1,6 +1,59 @@
-"""repro.data — storage substrates: on-disk CSR (AnnData-like), tokens, synthetic."""
+"""repro.data — storage substrates behind one unified backend layer.
+
+Formats: on-disk CSR (AnnData-like, single or sharded), Zarr-style chunked
+dense, flat token streams, plus the synthetic Tahoe-like generator.  All of
+them are reachable through the **Collection protocol** via
+:func:`open_collection`, which wraps the format's adapter in a
+:class:`~repro.data.backend.PlannedCollection`: fetches are coalesced by the
+shared cross-shard read planner and served through a byte-budgeted LRU block
+cache, with one :class:`IOStats` counting runs / bytes / cache hits
+uniformly (see :mod:`repro.data.readplan`).
+
+Backend-registry contract — what a new storage format must implement
+--------------------------------------------------------------------
+Subclass :class:`~repro.data.backend.StorageAdapter` and register an opener:
+
+1. ``__len__()`` — total rows.
+2. ``read_range(start, stop)`` — ONE contiguous physical read returning the
+   format's batch type (CSRBatch, ndarray, dict of arrays).  It never
+   crosses an interior boundary and must NOT record IOStats — the planner
+   accounts for every read it issues.
+3. ``boundaries()`` — ascending offsets ``[0, ..., n]`` of physical extents
+   (shard/chunk edges); the planner splits runs there.  ``None`` = one
+   uninterrupted extent.
+4. ``take(piece, rows)`` / ``concat(pieces)`` — row-index (duplicates and
+   order preserved) and concatenate the batch type.
+5. ``nbytes_of(rows)`` / ``avg_row_bytes`` — payload size estimates (cache
+   budgeting, autotuning).
+6. ``schema`` (+ optional ``obs_keys`` / ``obs_column``) — what a batch
+   looks like, for consumers that introspect.
+7. Register it: ``@register_backend("myformat")`` on an opener
+   ``(path, **query_opts) -> StorageAdapter``; users then call
+   ``open_collection("myformat://path?opt=x")``.
+
+Planner/cache knobs on :func:`open_collection`: ``cache_bytes`` (LRU byte
+budget; 0 disables caching), ``block_rows`` (cache granularity; fetches are
+rounded to block extents), ``max_extent_rows`` (cap on a single physical
+read; None = unbounded).  Knobs may also ride in the URI query string
+(``...?cache_bytes=0&max_extent_rows=none``); explicit keyword arguments
+win, and unknown query keys are rejected by the opener, never dropped.
+"""
+from .backend import (
+    ChunkedAdapter,
+    Collection,
+    CSRAdapter,
+    PlannedCollection,
+    ShardedCSRAdapter,
+    StorageAdapter,
+    TokenAdapter,
+    open_collection,
+    register_backend,
+    registered_schemes,
+)
+from .chunked_store import ChunkedStore, write_chunked_store
 from .csr_store import CSRBatch, CSRStore, ShardedCSRStore, write_csr_shard
 from .iostats import CLOUD_OBJECT, NVME_SSD, SATA_SSD, IOStats, StorageModel
+from .readplan import BlockCache, coalesce_rows, plan_reads
 from .synth import TAHOE_PLATE_FRACS, generate_tahoe_like, load_tahoe_like
 from .tokens import TokenStore, generate_token_corpus
 
@@ -9,11 +62,26 @@ __all__ = [
     "CSRStore",
     "ShardedCSRStore",
     "write_csr_shard",
+    "ChunkedStore",
+    "write_chunked_store",
     "IOStats",
     "StorageModel",
     "SATA_SSD",
     "NVME_SSD",
     "CLOUD_OBJECT",
+    "Collection",
+    "StorageAdapter",
+    "CSRAdapter",
+    "ShardedCSRAdapter",
+    "ChunkedAdapter",
+    "TokenAdapter",
+    "PlannedCollection",
+    "open_collection",
+    "register_backend",
+    "registered_schemes",
+    "BlockCache",
+    "coalesce_rows",
+    "plan_reads",
     "generate_tahoe_like",
     "load_tahoe_like",
     "TAHOE_PLATE_FRACS",

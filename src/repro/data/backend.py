@@ -1,0 +1,611 @@
+"""Unified storage-backend layer: one Collection protocol over every format.
+
+The paper's pitch is "seamless integration across diverse storage formats";
+before this module each backend (CSR shards, chunked dense, token streams)
+privately reimplemented read coalescing and IOStats accounting, and nothing
+composed across them.  This module is the substrate they all plug into:
+
+- :class:`StorageAdapter` — the small contract a storage format implements
+  (contiguous ``read_range`` + ``take``/``concat`` on its batch type, shard
+  ``boundaries``, byte estimates, obs/schema access).
+- a **backend registry** — formats register under a URI scheme; callers do
+  ``open_collection("csr:///data/plate_00")`` and never touch format classes.
+- :class:`PlannedCollection` — the :class:`Collection` every consumer sees.
+  It routes fetches through the shared cross-shard read planner and the
+  byte-budgeted LRU block cache of :mod:`repro.data.readplan`, and threads a
+  single :class:`~repro.data.iostats.IOStats` so runs / bytes / cache hits
+  are counted once, uniformly, for every backend.
+
+Adding a new storage format (h5ad, cloud bucket, Zarr...) means writing one
+adapter subclass and one ``@register_backend("scheme")`` opener — the
+planner, cache, accounting, ScDataset/PrefetchPool integration and the
+benchmarks come for free.  See :mod:`repro.data` for the written contract.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import urllib.parse
+from typing import Any, Callable, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from .chunked_store import ChunkedStore
+from .csr_store import CSRBatch, CSRStore, ShardedCSRStore, _concat_batches
+from .iostats import IOStats
+from .readplan import (
+    BlockCache,
+    blocks_to_row_spans,
+    split_at_boundaries,
+    split_max_extent,
+)
+from .tokens import TokenStore
+
+__all__ = [
+    "Collection",
+    "StorageAdapter",
+    "CSRAdapter",
+    "ShardedCSRAdapter",
+    "ChunkedAdapter",
+    "TokenAdapter",
+    "PlannedCollection",
+    "register_backend",
+    "registered_schemes",
+    "open_collection",
+    "piece_nbytes",
+]
+
+DEFAULT_CACHE_BYTES = 64 << 20
+DEFAULT_BLOCK_ROWS = 256
+DEFAULT_MAX_EXTENT_ROWS = 32768
+
+
+@runtime_checkable
+class Collection(Protocol):
+    """What ScDataset / PrefetchPool require of a data collection."""
+
+    def __len__(self) -> int: ...
+
+    def fetch(self, rows) -> Any:
+        """Batched read of ``rows`` (any order, duplicates allowed)."""
+        ...
+
+    def nbytes_of(self, rows) -> int:
+        """Estimated on-disk bytes of ``rows`` (autotuning / cache budgets)."""
+        ...
+
+    @property
+    def schema(self) -> dict:
+        """Shape/kind description of what ``fetch`` returns."""
+        ...
+
+
+def piece_nbytes(piece: Any) -> int:
+    """In-memory bytes of a backend batch (CSRBatch / ndarray / dict)."""
+    if hasattr(piece, "nbytes"):
+        return int(piece.nbytes)
+    if isinstance(piece, dict):
+        return int(sum(int(v.nbytes) for v in piece.values()))
+    raise TypeError(f"cannot size {type(piece).__name__}")
+
+
+class StorageAdapter:
+    """The contract a storage format implements to join the unified layer.
+
+    Subclasses supply contiguous physical reads and batch algebra on their
+    native batch type; the planner/cache in :class:`PlannedCollection` never
+    inspects batches beyond these methods.
+    """
+
+    def __len__(self) -> int:
+        raise NotImplementedError
+
+    def boundaries(self) -> Optional[np.ndarray]:
+        """Ascending physical-extent offsets ``[0, ..., n]`` (shards/chunks);
+        None means one uninterrupted extent."""
+        return None
+
+    def read_range(self, start: int, stop: int) -> Any:
+        """ONE contiguous read of rows ``[start, stop)`` — never crosses an
+        interior boundary (the planner guarantees it).  No stats recording."""
+        raise NotImplementedError
+
+    def take(self, piece: Any, rows: np.ndarray) -> Any:
+        """Row-index a batch (relative indices; duplicates/order preserved)."""
+        raise NotImplementedError
+
+    def concat(self, pieces: Sequence[Any]) -> Any:
+        """Concatenate batches in order."""
+        raise NotImplementedError
+
+    def nbytes_of(self, rows: np.ndarray) -> int:
+        """Estimated payload bytes of ``rows`` without reading them."""
+        raise NotImplementedError
+
+    @property
+    def avg_row_bytes(self) -> float:
+        raise NotImplementedError
+
+    @property
+    def schema(self) -> dict:
+        raise NotImplementedError
+
+    # Optional obs/metadata access (formats without metadata return nothing).
+    def obs_keys(self) -> list[str]:
+        return []
+
+    def obs_column(self, key: str) -> np.ndarray:
+        raise KeyError(key)
+
+
+# --------------------------------------------------------------------- CSR
+class CSRAdapter(StorageAdapter):
+    """Single CSR shard (one AnnData-like file)."""
+
+    def __init__(self, store: CSRStore):
+        self.store = store
+
+    def __len__(self) -> int:
+        return len(self.store)
+
+    def read_range(self, start: int, stop: int) -> CSRBatch:
+        return self.store.read_range(start, stop)
+
+    def take(self, piece: CSRBatch, rows: np.ndarray) -> CSRBatch:
+        return piece[rows]
+
+    def concat(self, pieces: Sequence[CSRBatch]) -> CSRBatch:
+        return _concat_batches(list(pieces), self.store.n_var)
+
+    def nbytes_of(self, rows: np.ndarray) -> int:
+        rows = np.asarray(rows, dtype=np.int64)
+        nnz = (self.store._indptr[rows + 1] - self.store._indptr[rows]).sum()
+        per = self.store._data.dtype.itemsize + self.store._indices.dtype.itemsize
+        return int(nnz) * per
+
+    @property
+    def avg_row_bytes(self) -> float:
+        return self.store.avg_row_bytes
+
+    @property
+    def schema(self) -> dict:
+        return {
+            "kind": "csr",
+            "n_obs": self.store.n_obs,
+            "n_var": self.store.n_var,
+            "obs_keys": list(self.store.obs.keys()),
+        }
+
+    def obs_keys(self) -> list[str]:
+        return list(self.store.obs.keys())
+
+    def obs_column(self, key: str) -> np.ndarray:
+        return self.store.obs[key]
+
+
+class ShardedCSRAdapter(StorageAdapter):
+    """Sharded CSR (the 14 Tahoe plate files) — boundaries at shard edges."""
+
+    def __init__(self, store: ShardedCSRStore):
+        self.store = store
+
+    def __len__(self) -> int:
+        return len(self.store)
+
+    def boundaries(self) -> np.ndarray:
+        return self.store.offsets
+
+    def read_range(self, start: int, stop: int) -> CSRBatch:
+        offs = self.store.offsets
+        sid = int(np.searchsorted(offs, start, side="right") - 1)
+        off = int(offs[sid])
+        return self.store.shards[sid].read_range(start - off, stop - off)
+
+    def take(self, piece: CSRBatch, rows: np.ndarray) -> CSRBatch:
+        return piece[rows]
+
+    def concat(self, pieces: Sequence[CSRBatch]) -> CSRBatch:
+        return _concat_batches(list(pieces), self.store.n_var)
+
+    def nbytes_of(self, rows: np.ndarray) -> int:
+        rows = np.asarray(rows, dtype=np.int64)
+        offs = self.store.offsets
+        sids = np.searchsorted(offs, rows, side="right") - 1
+        total = 0
+        for sid in np.unique(sids):
+            shard = self.store.shards[int(sid)]
+            local = rows[sids == sid] - int(offs[sid])
+            nnz = (shard._indptr[local + 1] - shard._indptr[local]).sum()
+            per = shard._data.dtype.itemsize + shard._indices.dtype.itemsize
+            total += int(nnz) * per
+        return total
+
+    @property
+    def avg_row_bytes(self) -> float:
+        return self.store.avg_row_bytes
+
+    @property
+    def schema(self) -> dict:
+        return {
+            "kind": "csr",
+            "n_obs": self.store.n_obs,
+            "n_var": self.store.n_var,
+            "n_shards": len(self.store.shards),
+            "obs_keys": self.store.obs_keys,
+        }
+
+    def obs_keys(self) -> list[str]:
+        return self.store.obs_keys
+
+    def obs_column(self, key: str) -> np.ndarray:
+        return self.store.obs_column(key)
+
+
+# ----------------------------------------------------------------- chunked
+class ChunkedAdapter(StorageAdapter):
+    """Zarr-style chunked dense store — boundaries at chunk edges, so the
+    planner's run count equals objects touched (request semantics)."""
+
+    def __init__(self, store: ChunkedStore):
+        self.store = store
+
+    def __len__(self) -> int:
+        return len(self.store)
+
+    def boundaries(self) -> np.ndarray:
+        edges = np.arange(self.store.n_chunks + 1, dtype=np.int64) * self.store.chunk_rows
+        edges[-1] = self.store.n
+        return edges
+
+    def read_range(self, start: int, stop: int) -> np.ndarray:
+        return self.store.read_range(start, stop)
+
+    def take(self, piece: np.ndarray, rows: np.ndarray) -> np.ndarray:
+        return piece[rows]
+
+    def concat(self, pieces: Sequence[np.ndarray]) -> np.ndarray:
+        return np.concatenate(list(pieces))
+
+    def nbytes_of(self, rows: np.ndarray) -> int:
+        return int(len(np.asarray(rows)) * self.store.d * 4)
+
+    @property
+    def avg_row_bytes(self) -> float:
+        return self.store.avg_row_bytes
+
+    @property
+    def schema(self) -> dict:
+        return {
+            "kind": "dense",
+            "n_obs": self.store.n,
+            "n_var": self.store.d,
+            "chunk_rows": self.store.chunk_rows,
+            "obs_keys": list(self.store.obs.keys()),
+        }
+
+    def obs_keys(self) -> list[str]:
+        return list(self.store.obs.keys())
+
+    def obs_column(self, key: str) -> np.ndarray:
+        return self.store.obs[key]
+
+
+# ------------------------------------------------------------------ tokens
+class TokenAdapter(StorageAdapter):
+    """Flat token stream viewed as sequences (LM pretraining workload)."""
+
+    def __init__(self, store: TokenStore):
+        self.store = store
+
+    def __len__(self) -> int:
+        return len(self.store)
+
+    def read_range(self, start: int, stop: int) -> dict:
+        return self.store.read_range(start, stop)
+
+    def take(self, piece: dict, rows: np.ndarray) -> dict:
+        return {k: v[rows] for k, v in piece.items()}
+
+    def concat(self, pieces: Sequence[dict]) -> dict:
+        keys = pieces[0].keys()
+        return {k: np.concatenate([p[k] for p in pieces]) for k in keys}
+
+    def nbytes_of(self, rows: np.ndarray) -> int:
+        return int(len(np.asarray(rows)) * self.store.avg_row_bytes)
+
+    @property
+    def avg_row_bytes(self) -> float:
+        return self.store.avg_row_bytes
+
+    @property
+    def schema(self) -> dict:
+        return {
+            "kind": "tokens",
+            "n_seqs": self.store.n_seqs,
+            "seq_len": self.store.seq_len,
+            "vocab_size": self.store.vocab_size,
+        }
+
+
+# --------------------------------------------------------- planned wrapper
+class PlannedCollection:
+    """A :class:`Collection` that executes fetches through the shared planner.
+
+    ``fetch(rows)`` maps rows to fixed-size cache blocks, serves resident
+    blocks from the LRU byte-budgeted :class:`~repro.data.readplan.BlockCache`
+    and reads the rest as maximal contiguous runs — merged across shard
+    boundaries in planning, split back at physical boundaries and at
+    ``max_extent_rows`` for execution.  One IOStats record per fetch counts
+    runs (physical reads actually issued), bytes, rows, and block cache
+    hits/misses — identically for every backend.
+
+    Thread-safe: the BlockCache locks its own bookkeeping; reads and batch
+    assembly run unlocked so PrefetchPool workers overlap I/O and CPU (two
+    workers may rarely read the same block concurrently — last insert wins,
+    results are identical).
+
+    ``cache_bytes=0`` disables caching: fetches become pure planned reads
+    (still coalesced and boundary/extent-split, still uniformly accounted).
+    """
+
+    def __init__(
+        self,
+        adapter: StorageAdapter,
+        *,
+        iostats: Optional[IOStats] = None,
+        cache_bytes: int = DEFAULT_CACHE_BYTES,
+        block_rows: int = DEFAULT_BLOCK_ROWS,
+        max_extent_rows: Optional[int] = DEFAULT_MAX_EXTENT_ROWS,
+    ):
+        if block_rows <= 0:
+            raise ValueError("block_rows must be positive")
+        self.adapter = adapter
+        self.iostats = iostats if iostats is not None else IOStats()
+        self.cache = BlockCache(cache_bytes)
+        self.block_rows = int(block_rows)
+        self.max_extent_rows = max_extent_rows
+        self._boundaries = adapter.boundaries()
+
+    def __len__(self) -> int:
+        return len(self.adapter)
+
+    @property
+    def schema(self) -> dict:
+        return self.adapter.schema
+
+    @property
+    def avg_row_bytes(self) -> float:
+        return self.adapter.avg_row_bytes
+
+    def obs_keys(self) -> list[str]:
+        return self.adapter.obs_keys()
+
+    def obs_column(self, key: str) -> np.ndarray:
+        return self.adapter.obs_column(key)
+
+    def nbytes_of(self, rows) -> int:
+        return self.adapter.nbytes_of(np.asarray(rows, dtype=np.int64))
+
+    def _spans_for_blocks(self, blocks: np.ndarray) -> list[tuple[int, int]]:
+        """Cache-block ids -> the physical read list (shared by plan/fetch)."""
+        spans = blocks_to_row_spans(blocks, self.block_rows, len(self.adapter))
+        spans = split_at_boundaries(spans, self._boundaries)
+        return split_max_extent(spans, self.max_extent_rows)
+
+    def plan(self, rows) -> list[tuple[int, int]]:
+        """The physical reads a COLD-cache fetch of ``rows`` would issue.
+
+        Exactly the spans ``fetch`` executes when nothing is resident —
+        including the rounding of rows to ``block_rows`` cache blocks; a
+        warm cache only removes spans from this list.
+        """
+        rows = np.asarray(rows, dtype=np.int64)
+        return self._spans_for_blocks(np.unique(rows // self.block_rows))
+
+    def __getitem__(self, rows) -> Any:
+        return self.fetch(rows)
+
+    def fetch(self, rows) -> Any:
+        t0 = time.perf_counter()
+        rows = np.asarray(rows, dtype=np.int64)
+        if rows.ndim == 0:
+            rows = rows[None]
+        if len(rows) == 0:
+            raise ValueError("fetch of zero rows")
+        B = self.block_rows
+        n = len(self.adapter)
+        lo_row, hi_row = int(rows.min()), int(rows.max())
+        if lo_row < 0 or hi_row >= n:
+            # negative rows would silently wrap through numpy indexing in
+            # the adapters; catch both ends here with a real message
+            raise IndexError(
+                f"rows out of range [0, {n}): min={lo_row}, max={hi_row}"
+            )
+        blocks = np.unique(rows // B)
+
+        # ---- cache lookup (BlockCache locks internally) ------------------
+        local: dict[int, Any] = {}
+        missing: list[int] = []
+        for b in blocks.tolist():
+            piece = self.cache.get(b)
+            if piece is None:
+                missing.append(b)
+            else:
+                local[b] = piece
+        hits = len(blocks) - len(missing)
+
+        # ---- plan + execute the physical reads ---------------------------
+        bytes_read = 0
+        spans: list[tuple[int, int]] = []
+        if missing:
+            spans = self._spans_for_blocks(np.asarray(missing))
+            pending: dict[int, list] = {b: [] for b in missing}
+            for lo, hi in spans:
+                piece = self.adapter.read_range(lo, hi)
+                bytes_read += piece_nbytes(piece)
+                b0, b1 = lo // B, (hi - 1) // B
+                for bb in range(b0, b1 + 1):
+                    blo, bhi = max(lo, bb * B), min(hi, (bb + 1) * B)
+                    if blo == lo and bhi == hi:
+                        pending[bb].append(piece)
+                    else:
+                        pending[bb].append(
+                            self.adapter.take(piece, np.arange(blo - lo, bhi - lo))
+                        )
+            for bb, parts in pending.items():
+                val = parts[0] if len(parts) == 1 else self.adapter.concat(parts)
+                local[bb] = val
+                self.cache.put(bb, val, piece_nbytes(val))
+
+        # ---- assemble in the caller's row order --------------------------
+        order = np.argsort(rows, kind="stable")
+        srows = rows[order]
+        sblocks = srows // B
+        edges = np.flatnonzero(np.diff(sblocks) != 0) + 1
+        starts = np.concatenate(([0], edges))
+        stops = np.concatenate((edges, [len(srows)]))
+        parts = []
+        for a, z in zip(starts.tolist(), stops.tolist()):
+            bb = int(sblocks[a])
+            parts.append(self.adapter.take(local[bb], srows[a:z] - bb * B))
+        merged = parts[0] if len(parts) == 1 else self.adapter.concat(parts)
+        inv = np.empty(len(rows), dtype=np.int64)
+        inv[order] = np.arange(len(rows))
+        if not np.array_equal(inv, np.arange(len(rows))):
+            merged = self.adapter.take(merged, inv)
+
+        self.iostats.record(
+            runs=len(spans),
+            rows=len(rows),
+            bytes_read=bytes_read,
+            wall_s=time.perf_counter() - t0,
+            cache_hits=hits,
+            cache_misses=len(missing),
+        )
+        return merged
+
+    def stats(self) -> dict:
+        return {"io": self.iostats.snapshot(), "cache": self.cache.snapshot()}
+
+
+# ---------------------------------------------------------------- registry
+_REGISTRY: dict[str, Callable[..., StorageAdapter]] = {}
+
+
+def register_backend(scheme: str):
+    """Register an adapter opener under a URI scheme (``scheme://path``)."""
+
+    def deco(fn: Callable[..., StorageAdapter]):
+        _REGISTRY[scheme] = fn
+        return fn
+
+    return deco
+
+
+def registered_schemes() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+@register_backend("csr")
+def _open_csr(path: str) -> CSRAdapter:
+    return CSRAdapter(CSRStore(path))
+
+
+@register_backend("sharded-csr")
+def _open_sharded_csr(path: str) -> ShardedCSRAdapter:
+    if "," in path:
+        shard_paths = path.split(",")
+    else:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        shard_paths = [os.path.join(path, s) for s in manifest["shards"]]
+    return ShardedCSRAdapter(ShardedCSRStore(shard_paths))
+
+
+@register_backend("chunked")
+def _open_chunked(path: str) -> ChunkedAdapter:
+    return ChunkedAdapter(ChunkedStore(path))
+
+
+@register_backend("tokens")
+def _open_tokens(path: str, *, seq_len=None) -> TokenAdapter:
+    if seq_len is None:
+        raise ValueError("tokens:// requires seq_len (e.g. tokens:///corpus?seq_len=128)")
+    return TokenAdapter(TokenStore(path, seq_len=int(seq_len)))
+
+
+def _sniff_scheme(path: str) -> str:
+    """Detect the backend of a bare directory path from its on-disk layout."""
+    if os.path.exists(os.path.join(path, "manifest.json")):
+        return "sharded-csr"
+    meta_path = os.path.join(path, "meta.json")
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+        if "chunk_rows" in meta:
+            return "chunked"
+        if "n_obs" in meta:
+            return "csr"
+        if os.path.exists(os.path.join(path, "tokens.npy")):
+            return "tokens"
+    raise ValueError(f"cannot detect a storage backend at {path!r}")
+
+
+_UNSET = object()  # distinguishes "not passed" from meaningful None/0
+
+
+def open_collection(
+    uri: str,
+    *,
+    iostats: Optional[IOStats] = None,
+    cache_bytes=_UNSET,
+    block_rows=_UNSET,
+    max_extent_rows=_UNSET,
+    **opts,
+) -> PlannedCollection:
+    """Open any registered storage format behind the unified planned layer.
+
+    ``uri`` is ``scheme://path[?key=value...]`` (query params become opener
+    kwargs) or a bare directory path, in which case the layout is sniffed.
+    Planner knobs: ``cache_bytes`` (LRU budget; 0 disables the cache),
+    ``block_rows`` (cache granularity), ``max_extent_rows`` (largest single
+    read; None = unbounded).  The knobs may also ride in the query string
+    (``?cache_bytes=0&max_extent_rows=none``); an explicit keyword argument
+    wins over the query.  Unknown query keys reach the opener, which rejects
+    what it does not understand — nothing is silently dropped.
+    """
+    if "://" in uri:
+        scheme, rest = uri.split("://", 1)
+    else:
+        scheme, rest = _sniff_scheme(uri), uri
+    if "?" in rest:
+        rest, query = rest.split("?", 1)
+        opts = {**dict(urllib.parse.parse_qsl(query)), **opts}
+    if scheme not in _REGISTRY:
+        raise ValueError(f"unknown backend scheme {scheme!r}; known: {registered_schemes()}")
+
+    def knob(kwarg, key: str, default, allow_none: bool = False):
+        if kwarg is not _UNSET:
+            opts.pop(key, None)
+            return kwarg
+        raw = opts.pop(key, _UNSET)
+        if raw is _UNSET:
+            return default
+        if allow_none and isinstance(raw, str) and raw.lower() == "none":
+            return None
+        return int(raw)
+
+    cache_bytes = knob(cache_bytes, "cache_bytes", DEFAULT_CACHE_BYTES)
+    block_rows = knob(block_rows, "block_rows", DEFAULT_BLOCK_ROWS)
+    max_extent_rows = knob(
+        max_extent_rows, "max_extent_rows", DEFAULT_MAX_EXTENT_ROWS, allow_none=True
+    )
+    adapter = _REGISTRY[scheme](rest, **opts)
+    return PlannedCollection(
+        adapter,
+        iostats=iostats,
+        cache_bytes=int(cache_bytes),
+        block_rows=int(block_rows),
+        max_extent_rows=max_extent_rows,
+    )

@@ -82,6 +82,22 @@ class ChunkedStore:
             self._cache[c] = arr
         return arr
 
+    def read_range(self, start: int, stop: int) -> np.ndarray:
+        """Raw contiguous read of rows ``[start, stop)``; no IOStats recording.
+
+        The read planner splits runs at chunk boundaries (each chunk is an
+        independent object), so in planned execution this touches exactly one
+        chunk; standalone callers may span several.
+        """
+        c0, c1 = int(start) // self.chunk_rows, (int(stop) - 1) // self.chunk_rows
+        parts = []
+        for c in range(c0, c1 + 1):
+            arr = self._load_chunk(c)
+            lo = max(start - c * self.chunk_rows, 0)
+            hi = min(stop - c * self.chunk_rows, arr.shape[0])
+            parts.append(arr[lo:hi])
+        return parts[0].copy() if len(parts) == 1 else np.concatenate(parts)
+
     def __getitem__(self, rows) -> np.ndarray:
         """One object read per distinct chunk touched (request semantics)."""
         t0 = time.perf_counter()

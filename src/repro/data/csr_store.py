@@ -29,6 +29,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .iostats import IOStats
+from .readplan import coalesce_rows
 
 __all__ = ["CSRBatch", "CSRStore", "ShardedCSRStore", "write_csr_shard"]
 
@@ -136,16 +137,6 @@ def _within_run_positions(lens: np.ndarray) -> np.ndarray:
     return np.arange(total) - offsets[ids]
 
 
-def _contiguous_runs(sorted_rows: np.ndarray) -> list[tuple[int, int]]:
-    """Maximal [start, stop) runs in an ascending-sorted unique-ish index array."""
-    if len(sorted_rows) == 0:
-        return []
-    breaks = np.flatnonzero(np.diff(sorted_rows) != 1)
-    starts = np.concatenate(([0], breaks + 1))
-    stops = np.concatenate((breaks + 1, [len(sorted_rows)]))
-    return [(int(sorted_rows[a]), int(sorted_rows[b - 1]) + 1) for a, b in zip(starts, stops)]
-
-
 class CSRStore:
     """One on-disk CSR shard: data.npy / indices.npy / indptr.npy / obs.npz / meta.json."""
 
@@ -176,6 +167,26 @@ class CSRStore:
     def avg_row_bytes(self) -> float:
         return self._row_bytes
 
+    def read_range(self, start: int, stop: int) -> CSRBatch:
+        """Raw contiguous read of local rows ``[start, stop)`` — ONE extent.
+
+        No IOStats recording: this is the physical-read primitive the shared
+        read planner (:mod:`repro.data.readplan`) executes; the planner does
+        the accounting so runs/bytes are counted once per fetch, uniformly
+        across backends.
+        """
+        lo, hi = int(self._indptr[start]), int(self._indptr[stop])
+        # np.array (not asarray): a memmap slice is a no-copy view, and the
+        # planner CACHES what we return — a cached view would still fault
+        # pages from disk on "hits" and occupy no budgetable RAM.
+        return CSRBatch(
+            data=np.array(self._data[lo:hi]),
+            indices=np.array(self._indices[lo:hi]),
+            indptr=np.asarray(self._indptr[start : stop + 1], dtype=np.int64) - lo,
+            n_var=self.n_var,
+            obs={k: v[start:stop] for k, v in self._obs.items()},
+        )
+
     def __getitem__(self, rows) -> CSRBatch:
         """Run-coalesced batched read (Algorithm 1 line 8).
 
@@ -190,7 +201,7 @@ class CSRStore:
         order = np.argsort(rows, kind="stable")
         srows = rows[order]
         uniq = np.unique(srows)
-        runs = _contiguous_runs(uniq)
+        runs = coalesce_rows(uniq)
 
         # Read each run once (the only disk I/O), concatenating into one buffer.
         run_data, run_idx = [], []

@@ -13,6 +13,7 @@ calibrated (see DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Optional
 
@@ -53,26 +54,56 @@ class IOStats:
     runs: int = 0  # contiguous extents touched == random accesses
     rows: int = 0
     bytes_read: int = 0
+    cache_hits: int = 0  # planner block-cache hits (block granularity)
+    cache_misses: int = 0
     wall_s: float = 0.0
     simulate: Optional[StorageModel] = None
     simulate_scale: float = 1.0
     modeled_s: float = 0.0
 
-    def record(self, *, runs: int, rows: int, bytes_read: int, wall_s: float) -> None:
-        self.calls += 1
-        self.runs += runs
-        self.rows += rows
-        self.bytes_read += bytes_read
-        self.wall_s += wall_s
-        if self.simulate is not None:
-            dt = self.simulate.seconds(runs, bytes_read)
-            self.modeled_s += dt
-            if self.simulate_scale > 0:
-                time.sleep(dt * self.simulate_scale)
+    def __post_init__(self):
+        # Concurrent PrefetchPool workers record() through one shared
+        # IOStats; the bare `+=` read-modify-writes would lose updates.
+        # Not a dataclass field, so asdict/eq/replace are unaffected.
+        self._lock = threading.Lock()
+
+    def record(
+        self,
+        *,
+        runs: int,
+        rows: int,
+        bytes_read: int,
+        wall_s: float,
+        cache_hits: int = 0,
+        cache_misses: int = 0,
+    ) -> None:
+        dt = 0.0
+        with self._lock:
+            self.calls += 1
+            self.runs += runs
+            self.rows += rows
+            self.bytes_read += bytes_read
+            self.cache_hits += cache_hits
+            self.cache_misses += cache_misses
+            self.wall_s += wall_s
+            if self.simulate is not None:
+                dt = self.simulate.seconds(runs, bytes_read)
+                self.modeled_s += dt
+        # sleep OUTSIDE the lock: simulated latency must overlap across
+        # workers exactly like real storage would
+        if self.simulate is not None and self.simulate_scale > 0:
+            time.sleep(dt * self.simulate_scale)
 
     def reset(self) -> None:
-        self.calls = self.runs = self.rows = self.bytes_read = 0
-        self.wall_s = self.modeled_s = 0.0
+        with self._lock:
+            self.calls = self.runs = self.rows = self.bytes_read = 0
+            self.cache_hits = self.cache_misses = 0
+            self.wall_s = self.modeled_s = 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
 
     def snapshot(self) -> dict:
         return {
@@ -80,6 +111,8 @@ class IOStats:
             "runs": self.runs,
             "rows": self.rows,
             "bytes_read": self.bytes_read,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
             "wall_s": self.wall_s,
             "modeled_s": self.modeled_s,
         }

@@ -1,0 +1,199 @@
+"""Cross-shard read planning + byte-budgeted block cache (the shared I/O layer).
+
+Every storage backend behind :mod:`repro.data.backend` reduces a fetch to the
+same two primitives: *which contiguous row extents to read* and *which of
+those extents are already resident*.  This module owns both halves:
+
+- :func:`coalesce_rows` / :func:`plan_reads` — merge sorted row indices into
+  maximal contiguous runs in the **global** row space (so a run conceptually
+  spans shard boundaries), then split the runs at physical shard boundaries
+  (different files cannot be read in one call) and at a configurable
+  ``max_extent_rows`` (bounds the largest single read, so one giant run
+  cannot blow the fetch buffer or starve concurrent workers).
+- :class:`BlockCache` — a thread-safe LRU over fixed-size row blocks with a
+  byte budget.  Weighted / class-balanced sampling draws blocks *with
+  replacement*, so consecutive fetches overlap; cached blocks turn those
+  overlaps into memory hits instead of repeated disk runs.
+
+The planner is deliberately backend-agnostic: it works on integers only.
+Backends supply their boundary offsets and execute the resulting
+``(start, stop)`` reads; :class:`repro.data.backend.PlannedCollection` glues
+the two together and threads one :class:`~repro.data.iostats.IOStats` through
+so runs / bytes / cache hits are counted once, uniformly, for every format.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "coalesce_rows",
+    "split_at_boundaries",
+    "split_max_extent",
+    "plan_reads",
+    "block_ids_of",
+    "blocks_to_row_spans",
+    "BlockCache",
+]
+
+
+def coalesce_rows(sorted_unique: np.ndarray) -> list[tuple[int, int]]:
+    """Maximal ``[start, stop)`` runs of an ascending, duplicate-free array."""
+    if len(sorted_unique) == 0:
+        return []
+    breaks = np.flatnonzero(np.diff(sorted_unique) != 1)
+    firsts = np.concatenate(([0], breaks + 1))
+    lasts = np.concatenate((breaks, [len(sorted_unique) - 1]))
+    return [
+        (int(sorted_unique[a]), int(sorted_unique[b]) + 1)
+        for a, b in zip(firsts, lasts)
+    ]
+
+
+def split_at_boundaries(
+    spans: Sequence[tuple[int, int]], boundaries: Optional[np.ndarray]
+) -> list[tuple[int, int]]:
+    """Split row spans at physical shard boundaries.
+
+    ``boundaries`` is the ascending offset array ``[0, n_0, n_0+n_1, ..., n]``
+    (:class:`~repro.data.csr_store.ShardedCSRStore.offsets` shape).  A span
+    crossing an interior boundary becomes one span per shard touched.
+    """
+    if boundaries is None or len(boundaries) <= 2:
+        return list(spans)
+    interior = np.asarray(boundaries, dtype=np.int64)[1:-1]
+    out: list[tuple[int, int]] = []
+    for lo, hi in spans:
+        cuts = interior[(interior > lo) & (interior < hi)]
+        prev = lo
+        for c in cuts.tolist():
+            out.append((prev, int(c)))
+            prev = int(c)
+        out.append((prev, hi))
+    return out
+
+
+def split_max_extent(
+    spans: Sequence[tuple[int, int]], max_extent_rows: Optional[int]
+) -> list[tuple[int, int]]:
+    """Cap every span at ``max_extent_rows`` rows (None/<=0 = unbounded)."""
+    if not max_extent_rows or max_extent_rows <= 0:
+        return list(spans)
+    out: list[tuple[int, int]] = []
+    for lo, hi in spans:
+        for s in range(lo, hi, max_extent_rows):
+            out.append((s, min(s + max_extent_rows, hi)))
+    return out
+
+
+def plan_reads(
+    rows: np.ndarray,
+    *,
+    boundaries: Optional[np.ndarray] = None,
+    max_extent_rows: Optional[int] = None,
+) -> list[tuple[int, int]]:
+    """Sorted-unique ``rows`` -> the physical read list, in ascending order.
+
+    Coalesce first (global row space, across shard boundaries), then split at
+    boundaries, then cap extents — each returned ``(start, stop)`` is one
+    backend read touching exactly one shard.
+    """
+    runs = coalesce_rows(np.unique(np.asarray(rows, dtype=np.int64)))
+    runs = split_at_boundaries(runs, boundaries)
+    return split_max_extent(runs, max_extent_rows)
+
+
+def block_ids_of(rows: np.ndarray, block_rows: int) -> np.ndarray:
+    """Cache-block id of each row (blocks are global-row aligned)."""
+    return np.asarray(rows, dtype=np.int64) // int(block_rows)
+
+
+def blocks_to_row_spans(
+    block_ids: np.ndarray, block_rows: int, n: int
+) -> list[tuple[int, int]]:
+    """Sorted-unique block ids -> coalesced row spans, clipped to ``n``."""
+    spans = coalesce_rows(np.unique(np.asarray(block_ids, dtype=np.int64)))
+    B = int(block_rows)
+    return [(lo * B, min(hi * B, n)) for lo, hi in spans]
+
+
+class BlockCache:
+    """Byte-budgeted, thread-safe LRU over opaque cached values.
+
+    Keys are cache-block ids; values are whatever batch object the backend
+    produces for that block's rows (CSRBatch, ndarray, dict of arrays).  The
+    budget is enforced on insertion: least-recently-used blocks are evicted
+    until the new value fits.  A value larger than the whole budget is simply
+    not cached (it would evict everything for a block that cannot be reused
+    before it is evicted itself).
+
+    ``max_bytes == 0`` disables caching entirely — `get` always misses and
+    `put` is a no-op — so callers need no special-casing for the uncached
+    configuration.
+    """
+
+    def __init__(self, max_bytes: int):
+        self.max_bytes = int(max_bytes)
+        self._entries: collections.OrderedDict[Any, tuple[Any, int]] = (
+            collections.OrderedDict()
+        )
+        self._lock = threading.Lock()
+        self.cur_bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.insertions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key) -> Optional[Any]:
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return ent[0]
+
+    def put(self, key, value, nbytes: int) -> None:
+        nbytes = int(nbytes)
+        if self.max_bytes <= 0 or nbytes > self.max_bytes:
+            return
+        with self._lock:
+            if key in self._entries:
+                _, old = self._entries.pop(key)
+                self.cur_bytes -= old
+            while self._entries and self.cur_bytes + nbytes > self.max_bytes:
+                _, (_, old) = self._entries.popitem(last=False)
+                self.cur_bytes -= old
+                self.evictions += 1
+            self._entries[key] = (value, nbytes)
+            self.cur_bytes += nbytes
+            self.insertions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.cur_bytes = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "entries": len(self._entries),
+            "cur_bytes": self.cur_bytes,
+            "max_bytes": self.max_bytes,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "insertions": self.insertions,
+            "hit_rate": self.hit_rate,
+        }

@@ -54,6 +54,25 @@ class TokenStore:
     def avg_row_bytes(self) -> float:
         return float((self.seq_len + 1) * self._tokens.dtype.itemsize)
 
+    def read_range(self, start: int, stop: int) -> dict:
+        """Raw contiguous read of sequences ``[start, stop)``; no IOStats.
+
+        One memmap slice covers the whole extent (adjacent sequences overlap
+        by one label token), then windows are materialized from it — this is
+        the sequential-read advantage the planner's run merging buys.
+        """
+        L = self.seq_len
+        a, b = int(start), int(stop)
+        flat = np.asarray(self._tokens[a * L : b * L + 1])
+        offs = np.arange(b - a, dtype=np.int64)[:, None] * L + np.arange(L + 1)[None, :]
+        chunk = flat[offs]
+        src = np.asarray(self._sources[np.arange(a, b, dtype=np.int64) * L])
+        return {
+            "tokens": chunk[:, :-1].astype(np.int32),
+            "labels": chunk[:, 1:].astype(np.int32),
+            "source": src.astype(np.int32),
+        }
+
     def __getitem__(self, rows) -> dict:
         t0 = time.perf_counter()
         rows = np.asarray(rows, dtype=np.int64)

@@ -132,14 +132,22 @@ def _pad_waste(dim: int, axis: int) -> float:
 
 
 def _present(mesh: Mesh, assignment: AxisAssignment) -> Optional[AxisAssignment]:
-    """Drop mesh axes the current mesh doesn't have (e.g. 'pod' single-pod)."""
+    """Drop mesh axes the current mesh doesn't have (e.g. 'pod' single-pod).
+
+    A multi-axis assignment reduced to one surviving axis collapses to the
+    bare axis name: ``("pod", "data")`` on a pod-less mesh resolves to
+    ``"data"`` so the resulting spec is ``P("data")``, not ``P(("data",))``
+    — the tuple form is a distinct (and here unintended) PartitionSpec.
+    """
     names = set(mesh.axis_names)
     if assignment is None:
         return None
     if isinstance(assignment, str):
         return assignment if assignment in names else None
     kept = tuple(a for a in assignment if a in names)
-    return kept if kept else None
+    if not kept:
+        return None
+    return kept[0] if len(kept) == 1 else kept
 
 
 def spec_for_axes(

@@ -1,0 +1,107 @@
+"""Soft dependency on `hypothesis`: real property testing when installed,
+seeded example sweeps when not.
+
+The container this repo targets does not ship `hypothesis`, and a hard
+import made five test modules fail *collection* — the whole suite aborted.
+Importing ``given`` / ``settings`` / ``st`` from here instead degrades
+gracefully: without hypothesis, ``@given`` reruns the test over
+``max_examples`` deterministic draws (boundary values first, then seeded
+uniform draws), which keeps the property tests meaningful — just without
+shrinking or adaptive search.
+
+Only the strategy surface this suite uses is shimmed: ``st.integers``,
+``st.floats``, ``st.sampled_from``.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import inspect
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        """Draws example i of n: boundaries first, then seeded randoms."""
+
+        def __init__(self, low_fn, high_fn, draw_fn):
+            self._low = low_fn
+            self._high = high_fn
+            self._draw = draw_fn
+
+        def example(self, i: int, rng: np.random.Generator):
+            if i == 0:
+                return self._low()
+            if i == 1:
+                return self._high()
+            return self._draw(rng)
+
+    class _StrategiesShim:
+        @staticmethod
+        def integers(min_value=None, max_value=None):
+            lo = 0 if min_value is None else int(min_value)
+            hi = 2**31 - 1 if max_value is None else int(max_value)
+            return _Strategy(
+                lambda: lo,
+                lambda: hi,
+                lambda rng: int(rng.integers(lo, hi + 1)),
+            )
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy(
+                lambda: lo,
+                lambda: hi,
+                lambda rng: float(rng.uniform(lo, hi)),
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(
+                lambda: seq[0],
+                lambda: seq[-1],
+                lambda rng: seq[int(rng.integers(0, len(seq)))],
+            )
+
+    st = _StrategiesShim()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = int(max_examples)
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            n_examples = getattr(fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+
+            def runner(*args, **kw):
+                for i in range(n_examples):
+                    rng = np.random.default_rng(
+                        np.random.SeedSequence((0xC0FFEE, i))
+                    )
+                    drawn = {k: s.example(i, rng) for k, s in strategies.items()}
+                    fn(*args, **kw, **drawn)
+
+            # pytest must see the original signature MINUS the drawn params,
+            # or it would try to resolve them as fixtures.  Deliberately no
+            # functools.wraps: __wrapped__ would make pytest unwrap back to
+            # the full signature.
+            sig = inspect.signature(fn)
+            params = [
+                p for name, p in sig.parameters.items() if name not in strategies
+            ]
+            runner.__signature__ = inspect.Signature(params)
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+
+        return deco

@@ -1,0 +1,292 @@
+"""Unified backend layer: registry, cross-shard planning, LRU cache, resume.
+
+Covers the Collection protocol + read planner + block cache substrate
+(repro.data.backend / repro.data.readplan) over all four storage formats.
+"""
+import numpy as np
+import pytest
+
+from repro.core import BlockShuffling, BlockWeightedSampling, PrefetchPool, ScDataset
+from repro.data import (
+    IOStats,
+    TokenStore,
+    generate_token_corpus,
+    open_collection,
+    registered_schemes,
+    write_chunked_store,
+    write_csr_shard,
+)
+from repro.data.readplan import (
+    BlockCache,
+    coalesce_rows,
+    plan_reads,
+    split_at_boundaries,
+    split_max_extent,
+)
+
+
+def _write_csr(rng, path, n, g):
+    """One canonical CSR shard on disk + its dense reference."""
+    lens = rng.integers(1, 6, n)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(lens, out=indptr[1:])
+    total = int(indptr[-1])
+    data = rng.normal(size=total).astype(np.float32)
+    indices = np.empty(total, np.int32)
+    for i in range(n):
+        k = int(lens[i])
+        indices[indptr[i]:indptr[i + 1]] = np.sort(
+            rng.choice(g, size=k, replace=False)).astype(np.int32)
+    write_csr_shard(path, data, indices, indptr, g,
+                    {"row": np.arange(n, dtype=np.int32)})
+    dense = np.zeros((n, g), np.float32)
+    for i in range(n):
+        for j in range(indptr[i], indptr[i + 1]):
+            dense[i, indices[j]] += data[j]
+    return dense
+
+
+@pytest.fixture(scope="module")
+def two_shards(tmp_path_factory):
+    """Two 120-row CSR shards; returns (shard_paths, full_dense)."""
+    rng = np.random.default_rng(0)
+    root = tmp_path_factory.mktemp("shards")
+    denses, paths = [], []
+    for s in range(2):
+        p = str(root / f"s{s}")
+        denses.append(_write_csr(rng, p, 120, 32))
+        paths.append(p)
+    return paths, np.concatenate(denses)
+
+
+# ------------------------------------------------------------- pure planner
+def test_coalesce_and_split():
+    runs = coalesce_rows(np.array([0, 1, 2, 7, 8, 20]))
+    assert runs == [(0, 3), (7, 9), (20, 21)]
+    assert split_at_boundaries([(90, 110)], np.array([0, 100, 200])) == \
+        [(90, 100), (100, 110)]
+    assert split_max_extent([(0, 10)], 4) == [(0, 4), (4, 8), (8, 10)]
+    # plan_reads composes all three; a run crossing a boundary AND the
+    # extent cap splits at both
+    plan = plan_reads(np.arange(95, 112), boundaries=np.array([0, 100, 200]),
+                      max_extent_rows=8)
+    assert plan == [(95, 100), (100, 108), (108, 112)]
+
+
+def test_block_cache_lru_byte_budget():
+    cache = BlockCache(max_bytes=100)
+    a = np.zeros(10, np.float32)  # 40 bytes
+    cache.put(0, a, a.nbytes)
+    cache.put(1, a, a.nbytes)
+    assert cache.get(0) is a and cache.cur_bytes == 80
+    # inserting a third 40B value must evict the LRU entry — key 1
+    # (key 0 was touched by the get above)
+    cache.put(2, a, a.nbytes)
+    assert cache.evictions == 1 and cache.cur_bytes == 80
+    assert cache.get(1) is None and cache.get(2) is a
+    # an oversized value is not cached at all
+    big = np.zeros(100, np.float32)
+    cache.put(3, big, big.nbytes)
+    assert cache.get(3) is None
+    snap = cache.snapshot()
+    assert snap["cur_bytes"] <= snap["max_bytes"]
+    assert snap["hits"] == 2 and snap["misses"] == 2 and snap["insertions"] == 3
+
+
+def test_block_cache_disabled():
+    cache = BlockCache(max_bytes=0)
+    cache.put(0, "x", 1)
+    assert cache.get(0) is None and len(cache) == 0
+
+
+# -------------------------------------------------------- registry coverage
+def test_all_four_backends_reachable(two_shards, tmp_path):
+    paths, full = two_shards
+    rng = np.random.default_rng(1)
+    rows = np.array([3, 150, 150, 119, 120, 0])
+
+    single = open_collection(f"csr://{paths[0]}")
+    assert single.schema["kind"] == "csr"
+    assert np.allclose(single.fetch(np.array([5, 0, 5])).to_dense(),
+                       full[[5, 0, 5]])
+
+    sharded = open_collection("sharded-csr://" + ",".join(paths))
+    got = sharded.fetch(rows)
+    assert np.allclose(got.to_dense(), full[rows])
+    assert np.array_equal(got.obs["row"], rows % 120)
+
+    X = rng.normal(size=(300, 8)).astype(np.float32)
+    cpath = str(tmp_path / "chunked")
+    write_chunked_store(cpath, X, {"y": np.arange(300)}, chunk_rows=64)
+    chunked = open_collection(f"chunked://{cpath}")
+    assert np.allclose(chunked.fetch(np.array([299, 0, 64, 64])),
+                       X[[299, 0, 64, 64]])
+    # bare path sniffing finds the same backend
+    assert open_collection(cpath).schema == chunked.schema
+
+    tpath = str(tmp_path / "tok")
+    generate_token_corpus(tpath, n_tokens=20_000, vocab_size=64,
+                          n_sources=3, seed=2)
+    tokens = open_collection(f"tokens://{tpath}?seq_len=32")
+    ref = TokenStore(tpath, seq_len=32)[np.array([7, 7, 0])]
+    got = tokens.fetch(np.array([7, 7, 0]))
+    for k in ref:
+        assert np.array_equal(got[k], ref[k])
+
+    assert {"csr", "sharded-csr", "chunked", "tokens"} <= set(registered_schemes())
+    with pytest.raises(ValueError):
+        open_collection("nope://missing")
+    with pytest.raises(ValueError):
+        open_collection(f"tokens://{tpath}")  # seq_len required
+    with pytest.raises(IndexError):
+        sharded.fetch(np.array([10**9]))  # clear bounds error, not a crash
+    with pytest.raises(IndexError):
+        sharded.fetch(np.array([-1]))  # negatives must not wrap silently
+
+
+# --------------------------------------------------- cross-shard coalescing
+def test_cross_shard_fetch_is_two_runs_not_per_row(two_shards):
+    paths, full = two_shards
+    stats = IOStats()
+    col = open_collection("sharded-csr://" + ",".join(paths),
+                          iostats=stats, block_rows=16)
+    rows = np.arange(104, 136)  # contiguous, spans the shard edge at 120
+    got = col.fetch(rows)
+    assert np.allclose(got.to_dense(), full[rows])
+    # blocks 6..8 cover rows [96, 144); the planner merges them into one
+    # global run and splits it only at the physical boundary: 2 reads,
+    # not 32 per-row reads.
+    assert stats.runs == 2
+    assert stats.calls == 1  # accounting recorded once at the planner level
+
+
+def test_max_extent_splits_oversized_runs(two_shards):
+    paths, _ = two_shards
+    stats = IOStats()
+    col = open_collection(f"csr://{paths[0]}", iostats=stats,
+                          block_rows=8, max_extent_rows=16)
+    col.fetch(np.arange(0, 64))  # one 64-row run -> capped at 16 -> 4 reads
+    assert stats.runs == 4
+
+
+# ------------------------------------------------------- cache accounting
+def test_cache_hits_and_eviction_accounting(two_shards):
+    paths, full = two_shards
+    stats = IOStats()
+    col = open_collection(f"csr://{paths[0]}", iostats=stats,
+                          block_rows=32, cache_bytes=1 << 20)
+    col.fetch(np.arange(0, 32))  # block 0: miss, 1 run
+    col.fetch(np.arange(0, 32))  # block 0 again: pure cache hit, 0 runs
+    assert stats.runs == 1
+    assert stats.cache_hits == 1 and stats.cache_misses == 1
+    assert col.cache.hit_rate == 0.5
+    # overlapping weighted-style refetch: one resident + one new block
+    stats.reset()
+    col.fetch(np.arange(16, 48))
+    assert stats.cache_hits == 1 and stats.cache_misses == 1
+    assert stats.runs == 1  # only block 1 ([32,64)) is read
+
+    # byte budget forces LRU eviction, and bytes stay under budget
+    one_block = col.nbytes_of(np.arange(0, 32))
+    small = open_collection(f"csr://{paths[0]}", block_rows=32,
+                            cache_bytes=int(one_block * 2.2))
+    for lo in range(0, 120, 32):
+        small.fetch(np.arange(lo, min(lo + 32, 120)))
+    assert small.cache.evictions >= 1
+    assert small.cache.cur_bytes <= small.cache.max_bytes
+    # evicted first block rereads: a run, not a hit
+    small.iostats.reset()
+    small.fetch(np.arange(0, 32))
+    assert small.iostats.runs == 1 and small.iostats.cache_hits == 0
+
+
+def test_cache_disabled_still_plans(two_shards):
+    paths, full = two_shards
+    stats = IOStats()
+    col = open_collection("sharded-csr://" + ",".join(paths), iostats=stats,
+                          cache_bytes=0, block_rows=16)
+    rows = np.arange(104, 136)
+    assert np.allclose(col.fetch(rows).to_dense(), full[rows])
+    assert stats.runs == 2 and stats.cache_hits == 0
+    col.fetch(rows)  # no cache: reads again
+    assert stats.runs == 4
+
+
+def test_weighted_sampling_overlap_hits_cache(two_shards):
+    """Blocks drawn with replacement across fetches hit memory, not disk."""
+    paths, _ = two_shards
+    stats = IOStats()
+    col = open_collection("sharded-csr://" + ",".join(paths),
+                          iostats=stats, block_rows=16)
+    n = len(col)
+    w = np.ones(n)
+    ds = ScDataset(col, BlockWeightedSampling(block_size=16, weights=w),
+                   batch_size=16, fetch_factor=2, seed=0)
+    list(ds)
+    list(ds)  # second epoch redraws blocks with replacement
+    assert stats.cache_hits > 0
+    # every block read at most once across both epochs: runs bounded by the
+    # number of distinct cache blocks, far below the no-cache read count.
+    # A block straddling a shard boundary costs one extra run when it is
+    # first read in isolation (the shard edge at row 120 falls mid-block).
+    straddles = sum(1 for off in (120,) if off % 16)
+    assert stats.runs <= (n + 15) // 16 + straddles
+
+
+# ------------------------------------------------------ protocol + dataset
+def test_nbytes_of_matches_fetched_payload(two_shards):
+    paths, _ = two_shards
+    stats = IOStats()
+    col = open_collection(f"csr://{paths[0]}", iostats=stats,
+                          cache_bytes=0, block_rows=1)
+    rows = np.arange(10, 30)
+    est = col.nbytes_of(rows)
+    col.fetch(rows)
+    # data+indices payload dominates; read_range also moves indptr/obs, so
+    # the estimate is a floor within the block rounding of this config
+    assert 0 < est <= stats.bytes_read
+
+
+def test_scdataset_default_callback_routes_through_planner(two_shards):
+    paths, full = two_shards
+    stats = IOStats()
+    col = open_collection("sharded-csr://" + ",".join(paths), iostats=stats)
+    ds = ScDataset(col, BlockShuffling(block_size=8), batch_size=16,
+                   fetch_factor=2, seed=3,
+                   batch_transform=lambda b: b.to_dense())
+    batches = list(ds)
+    assert stats.calls == len(batches) // 2  # one planner record per fetch
+    # determinism: same seed over the raw store yields identical batches
+    from repro.data import ShardedCSRStore
+    raw = ScDataset(ShardedCSRStore(paths), BlockShuffling(block_size=8),
+                    batch_size=16, fetch_factor=2, seed=3,
+                    batch_transform=lambda b: b.to_dense())
+    for a, b in zip(batches, raw):
+        np.testing.assert_allclose(a, b)
+
+
+def test_prefetch_pool_midepoch_resume_on_cached_collection(two_shards):
+    """LoaderState checkpoint/restore through PrefetchPool + planner cache."""
+    paths, _ = two_shards
+
+    def mk():
+        col = open_collection("sharded-csr://" + ",".join(paths),
+                              block_rows=16, cache_bytes=1 << 20)
+        return ScDataset(col, BlockShuffling(block_size=8), batch_size=8,
+                         fetch_factor=2, seed=5,
+                         batch_transform=lambda b: b.to_dense())
+
+    full_run = [b.copy() for b in PrefetchPool(mk(), num_workers=2)]
+
+    ds = mk()
+    it = iter(PrefetchPool(ds, num_workers=2))
+    consumed = [next(it).copy() for _ in range(5)]  # stop mid-fetch
+    state = ds.state()
+    assert state.batch_cursor == 1  # genuinely mid-fetch (5 = 2 fetches + 1)
+
+    ds2 = mk()  # fresh collection: resume must not depend on cache contents
+    ds2.load_state(state)
+    rest = [b.copy() for b in PrefetchPool(ds2, num_workers=2)]
+    assert len(consumed) + len(rest) == len(full_run)
+    for got, want in zip(consumed + rest, full_run):
+        np.testing.assert_allclose(got, want)

@@ -1,7 +1,7 @@
 """ScDataset pipeline tests: Algorithm 1 semantics, DDP partition, resume."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     BlockShuffling,

@@ -1,7 +1,7 @@
 """Property tests for sampling strategies (paper §3.1/§3.3 invariants)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     BlockShuffling,
@@ -101,3 +101,25 @@ def test_invalid_args():
         BlockWeightedSampling(block_size=4, weights=np.array([-1.0, 1.0]))
     with pytest.raises(ValueError):
         BlockWeightedSampling(block_size=4, weights=np.zeros(5)).epoch_indices(5, 0, 0)
+
+
+def test_block_weights_sum_not_mean_on_ragged_tail():
+    """Regression: per-block draw probability is the SUM of member weights.
+
+    n=5, b=2 -> blocks {0,1}, {2,3}, {4}.  Total mass 9; the ragged tail
+    holds 5/9 of it.  A mean-per-block rule would give the tail 5/7 of the
+    (unnormalized) mass per member and skew its inclusion probability.
+    """
+    w = np.array([1.0, 1.0, 1.0, 1.0, 5.0])
+    s = BlockWeightedSampling(block_size=2, weights=w)
+    p = s._block_weights(5)
+    assert np.allclose(p, [2 / 9, 2 / 9, 5 / 9])
+    # marginal inclusion probability of a sample is proportional to its
+    # BLOCK's total weight (class docstring): the tail block carries mass 5,
+    # each unit-weight block mass 2, so sample 4 appears 5/2 as often as
+    # sample 0 — empirically confirmed.
+    draws = np.concatenate(
+        [s.epoch_indices(5, seed, 0) for seed in range(400)]
+    )
+    counts = np.bincount(draws, minlength=5).astype(float)
+    assert counts[4] / counts[0] == pytest.approx(2.5, rel=0.2)

@@ -1,7 +1,7 @@
 """Theory (§3.4): bounds hold against Monte-Carlo simulation (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.theory import (
     batch_entropy,
