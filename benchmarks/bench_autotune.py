@@ -8,9 +8,9 @@ sampling by >100x on SATA and respect both constraints.
 """
 from __future__ import annotations
 
-from benchmarks.common import dataset, emit
+from benchmarks.common import dataset, emit, planned_dataset
 
-from repro.core.autotune import IOCostModel, probe_io_cost, recommend
+from repro.core.autotune import IOCostModel, probe_collection, probe_io_cost, recommend
 from repro.data import CLOUD_OBJECT, NVME_SSD, SATA_SSD
 
 
@@ -39,6 +39,32 @@ def run() -> dict:
     emit("autotune_probed_mmap", 1e6 / rec.modeled_samples_per_sec,
          f"b={rec.block_size};f={rec.fetch_factor};"
          f"c0={probed.c0*1e6:.0f}us;c_seek={probed.c_seek*1e6:.1f}us")
+
+    # planner-aware probe (PR 2): fit on PLANNED runs through the unified
+    # layer, cached vs uncached.  With the cache absorbing redraw probes the
+    # recommendation reserves the cache's bytes out of the buffer budget —
+    # a smaller fetch factor than the cache-blind probe of the same store.
+    budget = 900e6
+    cache_bytes = 448 << 20
+    col_cold, _ = planned_dataset(simulate_sata=False, cache_bytes=0)
+    col_warm, _ = planned_dataset(simulate_sata=False, cache_bytes=cache_bytes)
+    for name, col in (("uncached", col_cold), ("cached", col_warm)):
+        model = probe_collection(col, probes=2)
+        # Tahoe-scale rows (the probe fixture's rows are tiny; the paper's
+        # regime is ~50KB sparse rows) so the memory budget is meaningful
+        model.row_bytes = 50_000
+        r = recommend(model, batch_size=64, num_classes=14,
+                      mem_budget_bytes=budget, entropy_slack_bits=0.1)
+        out[f"planner_{name}"] = r
+        emit(f"autotune_planner_{name}", 1e6 / r.modeled_samples_per_sec,
+             f"b={r.block_size};f={r.fetch_factor};"
+             f"hit_rate={model.hit_rate:.2f};"
+             f"runs_per_sample={model.runs_per_sample:.4f};"
+             f"cache_reserved={r.cache_reserved_bytes/1e6:.0f}MB")
+    fc = out["planner_cached"].fetch_factor
+    fu = out["planner_uncached"].fetch_factor
+    emit("autotune_planner_f_shrinks", 0.0,
+         f"f_cached={fc};f_uncached={fu};shrinks={fc < fu}")
     return out
 
 

@@ -17,7 +17,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import dataset, emit, timed_samples_per_sec
+from benchmarks.common import async_equal_work, dataset, emit, timed_samples_per_sec
 
 from repro.core import BlockShuffling, PrefetchPool, ScDataset
 from repro.core.theory import mean_batch_entropy
@@ -83,6 +83,21 @@ def run() -> dict:
          f"speculative_reissues={pool.stats['speculative_reissues']};"
          f"duplicate_completions={pool.stats['duplicate_completions']};"
          f"batches_ok={n}")
+
+    # pool workers over SYNC vs ASYNC planned collections, slept latency:
+    # with io_workers the pool's fetches stop serializing behind one
+    # another's planner reads (Appendix E at the planner level).  Same
+    # shared comparison cell as fig2's async rows (common.ASYNC_CELL),
+    # equal work, identical delivered batches.
+    pa = {}
+    for mode, kw in (("sync", dict(io_workers=1, readahead=0)),
+                     ("async", dict(io_workers=4, readahead=1))):
+        pa[mode] = async_equal_work(n_batches=64, batch_size=M,
+                                    num_workers=2, **kw)["sps_wall"]
+    emit("table2_pool_async_planner", 1e6 / pa["async"],
+         f"sync_sps={pa['sync']:.0f};async_sps={pa['async']:.0f};"
+         f"speedup={pa['async'] / max(pa['sync'], 1e-9):.2f}x;workers=2;io_workers=4")
+    out["pool_async"] = pa
     return out
 
 

@@ -4,6 +4,13 @@ Prints ``name,us_per_call,derived`` CSV rows (shared ``emit`` helper) and a
 summary.  Individual benches: ``python -m benchmarks.bench_fig2_throughput``.
 Environment knobs: BENCH_N_CELLS (default 150000), BENCH_MEASURE_S (1.5),
 BENCH_SKIP (comma-list: fig2,fig3,fig4,fig5,table2,roofline,kernels).
+
+``--smoke`` runs ONLY the async-vs-sync planned-execution comparison on a
+tiny fixture and writes machine-readable ``BENCH_PR2.json`` (samples/sec,
+runs/sample, cache-hit rate for both modes) — fast enough for CI, so the
+async hot path is executed on every PR.  Exits nonzero if async planned
+execution fails to beat the synchronous path by the smoke floor (1.5x; the
+full fixture target is 2x).
 """
 from __future__ import annotations
 
@@ -13,8 +20,33 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+SMOKE_FLOOR = 1.5
+
+
+def smoke() -> int:
+    # small fixture + short equal-work drain, set BEFORE benchmarks.common
+    # import freezes them; explicit user env still wins.  The fixture must
+    # stay larger than the async cells' cache or there is no I/O latency
+    # left to overlap and the smoke measures nothing.
+    os.environ.setdefault("BENCH_DATA_DIR", "/tmp/repro_bench_smoke")
+    os.environ.setdefault("BENCH_N_CELLS", "50000")
+    os.environ.setdefault("BENCH_N_GENES", "512")
+    os.environ.setdefault("BENCH_ASYNC_BATCHES", "96")
+    print("name,us_per_call,derived")
+    from benchmarks import bench_fig2_throughput
+
+    out = bench_fig2_throughput.run_async(write_json=True)
+    ok = out["speedup"] >= SMOKE_FLOOR
+    print(
+        f"# smoke: async {out['speedup']:.2f}x sync "
+        f"(floor {SMOKE_FLOOR}x, full-bench target 2x) -> {'OK' if ok else 'FAIL'}"
+    )
+    return 0 if ok else 1
+
 
 def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        raise SystemExit(smoke())
     skip = set(filter(None, os.environ.get("BENCH_SKIP", "").split(",")))
     t_all = time.time()
     print("name,us_per_call,derived")

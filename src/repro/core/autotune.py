@@ -5,8 +5,17 @@ Recommends block size and fetch factor from three measurable quantities:
 1. **I/O cost model** — probe the backend with a handful of timed reads to fit
    ``t(fetch) ≈ c0 + c_seek * n_blocks + c_byte * bytes`` (fixed per-call
    overhead, per-random-access cost, streaming bandwidth).
+   :func:`probe_collection` fits the same model THROUGH a
+   ``PlannedCollection``: the design matrix uses the runs/bytes the planner
+   actually issued (planned runs, not raw index counts), and the fitted
+   model carries the measured ``hit_rate`` / ``runs_per_sample`` /
+   ``cache_bytes`` of the probe.
 2. **Memory budget** — the fetch buffer holds ``m * f`` rows; f is capped by
-   ``mem_budget / (m * row_bytes)``.
+   ``mem_budget / (m * row_bytes)``.  When the probe shows the block cache
+   absorbing redraws (``hit_rate`` above ~5%), the cache's byte budget is
+   *reserved* out of the memory budget first — memory spent keeping the
+   cache is worth more than a bigger fetch buffer, so the recommended fetch
+   factor shrinks.
 3. **Diversity target** — Corollary 3.3: the entropy deficit of the lower
    bound is ``(K-1) b / (2 m ln 2)``; with fetch factor f the effective
    sample size interpolates from m/b blocks to f*m/b blocks, so we require
@@ -25,7 +34,13 @@ import numpy as np
 
 from .sampling import epoch_rng
 
-__all__ = ["IOCostModel", "probe_io_cost", "recommend", "Recommendation"]
+__all__ = [
+    "IOCostModel",
+    "probe_io_cost",
+    "probe_collection",
+    "recommend",
+    "Recommendation",
+]
 
 _LN2 = float(np.log(2.0))
 
@@ -36,11 +51,20 @@ class IOCostModel:
     c_seek: float  # per-random-block cost (s)
     c_byte: float  # per-byte streaming cost (s/B)
     row_bytes: float  # average materialized row size (B)
+    # --- planner-level measurements (probe_collection); defaults = PR-1 model
+    hit_rate: float = 0.0  # measured block-cache hit rate of the probe
+    runs_per_sample: Optional[float] = None  # physical runs per row, measured
+    cache_bytes: float = 0.0  # LRU budget the probe ran with
 
     def fetch_seconds(self, m: int, f: int, b: int) -> float:
         rows = m * f
-        n_blocks = max(1, rows // max(1, b))
-        return self.c0 + self.c_seek * n_blocks + self.c_byte * rows * self.row_bytes
+        miss = 1.0 - min(max(self.hit_rate, 0.0), 0.99)
+        n_seeks = max(1, rows // max(1, b)) * miss
+        if self.runs_per_sample is not None:
+            # Measured floor: the planner+cache never issued fewer physical
+            # runs per row than observed; don't extrapolate below it.
+            n_seeks = max(n_seeks, self.runs_per_sample * rows)
+        return self.c0 + self.c_seek * n_seeks + self.c_byte * rows * self.row_bytes * miss
 
     def samples_per_sec(self, m: int, f: int, b: int) -> float:
         return (m * f) / max(1e-12, self.fetch_seconds(m, f, b))
@@ -85,6 +109,71 @@ def probe_io_cost(
     return IOCostModel(c0=c0, c_seek=c_seek, c_byte=c_byte, row_bytes=row_bytes)
 
 
+def probe_collection(
+    col: Any,
+    *,
+    probes: int = 3,
+    probe_rows: int = 512,
+    seed: int = 0,
+) -> IOCostModel:
+    """Fit the cost model THROUGH a ``PlannedCollection``.
+
+    Unlike :func:`probe_io_cost` (which models seeks from raw index counts),
+    the design matrix here uses what the planner actually did: the IOStats
+    runs/bytes deltas of each timed ``fetch``.  Cache absorption is part of
+    the measurement — probe patterns include *redraws* of earlier rows, so a
+    collection with a live block cache shows its hit rate, and the returned
+    model carries ``hit_rate``, ``runs_per_sample`` and ``cache_bytes`` for
+    :func:`recommend` to fold into the (b, f) choice.
+    """
+    stats = col.iostats
+    rng = epoch_rng(seed, 0, 0xA071)
+    n = len(col)
+    base = stats.snapshot()
+    hits0, miss0 = stats.cache_hits, stats.cache_misses
+    X, y = [], []
+    prev_idx = None
+    for _ in range(probes):
+        # four patterns per round: scattered, contiguous, blocky, and a
+        # REDRAW of the previous probe's rows (exercises the cache exactly
+        # like with-replacement block sampling does across fetches)
+        pr = min(probe_rows, n)
+        scattered = np.unique(rng.integers(0, n, size=pr))
+        start = int(rng.integers(0, max(1, n - pr)))
+        contiguous = np.arange(start, start + pr)
+        nb = max(1, pr // 64)
+        starts = np.sort(rng.integers(0, max(1, n - 64), size=nb))
+        blocky = np.unique(
+            np.concatenate([np.arange(s, s + 64) for s in starts])[:pr]
+        )
+        patterns = [scattered, contiguous, blocky]
+        if prev_idx is not None:
+            patterns.append(prev_idx)
+        prev_idx = blocky
+        for idx in patterns:
+            runs0, bytes0 = stats.runs, stats.bytes_read
+            t0 = time.perf_counter()
+            col.fetch(idx)
+            dt = time.perf_counter() - t0
+            X.append([1.0, float(stats.runs - runs0), float(stats.bytes_read - bytes0)])
+            y.append(dt)
+    coef, *_ = np.linalg.lstsq(np.asarray(X), np.asarray(y), rcond=None)
+    c0, c_seek, c_byte = (max(0.0, float(c)) for c in coef)
+    d_hits = stats.cache_hits - hits0
+    d_miss = stats.cache_misses - miss0
+    d_runs = stats.runs - base["runs"]
+    d_rows = stats.rows - base["rows"]
+    return IOCostModel(
+        c0=c0,
+        c_seek=c_seek,
+        c_byte=c_byte,
+        row_bytes=float(col.avg_row_bytes),
+        hit_rate=d_hits / max(1, d_hits + d_miss),
+        runs_per_sample=d_runs / max(1, d_rows),
+        cache_bytes=float(col.cache.max_bytes),
+    )
+
+
 @dataclasses.dataclass
 class Recommendation:
     block_size: int
@@ -93,6 +182,7 @@ class Recommendation:
     entropy_lower_bound: float
     buffer_bytes: float
     rationale: str
+    cache_reserved_bytes: float = 0.0
 
 
 def recommend(
@@ -105,14 +195,30 @@ def recommend(
     entropy_slack_bits: float = 0.1,
     b_grid: Sequence[int] = (1, 4, 16, 64, 256, 1024),
     f_grid: Sequence[int] = (1, 4, 16, 64, 256, 1024),
+    cache_hit_threshold: float = 0.05,
 ) -> Recommendation:
-    """Pick (b, f) maximizing modeled throughput under memory + diversity limits."""
+    """Pick (b, f) maximizing modeled throughput under memory + diversity limits.
+
+    Planner-aware: when ``cost`` came from :func:`probe_collection` and shows
+    the block cache absorbing redraws (``hit_rate >= cache_hit_threshold``),
+    the cache's byte budget (capped at half the memory budget) is reserved
+    before sizing the fetch buffer — evicting a cache that is already
+    serving ``hit_rate`` of block touches to afford a bigger fetch buffer
+    would re-pay those reads on disk.  The fetch-factor ceiling (and thus
+    typically the recommended f) shrinks accordingly, and the seek/byte
+    terms of every candidate are discounted by the measured hit rate inside
+    ``cost.fetch_seconds``.
+    """
     m = batch_size
     K = num_classes
     if class_probs is not None:
         from .theory import distribution_entropy
 
         K = int(np.count_nonzero(np.asarray(class_probs)))
+    reserve = 0.0
+    if cost.hit_rate >= cache_hit_threshold and cost.cache_bytes > 0:
+        reserve = min(float(cost.cache_bytes), 0.5 * mem_budget_bytes)
+    buffer_budget = mem_budget_bytes - reserve
     # Thm 3.1 deficit at IID: (K-1)/(2 m ln2). We demand the *effective* deficit
     # (K-1)/(2 S_eff ln2) be within entropy_slack of it, where S_eff is the
     # effective sample size min(m, f*m/b) (blocks contributing to a batch).
@@ -121,7 +227,7 @@ def recommend(
     for b in b_grid:
         for f in f_grid:
             buffer_bytes = m * f * cost.row_bytes
-            if buffer_bytes > mem_budget_bytes:
+            if buffer_bytes > buffer_budget:
                 continue
             s_eff = min(m, max(1, (f * m) // max(1, b)))
             deficit = (K - 1) / (2.0 * s_eff * _LN2)
@@ -129,16 +235,25 @@ def recommend(
                 continue
             sps = cost.samples_per_sec(m, f, b)
             if best is None or sps > best.modeled_samples_per_sec:
+                planner = (
+                    f", cache reserve {reserve/1e6:.0f}MB "
+                    f"(hit rate {cost.hit_rate:.2f}, "
+                    f"{cost.runs_per_sample if cost.runs_per_sample is not None else 0:.4f} runs/sample)"
+                    if reserve > 0
+                    else ""
+                )
                 best = Recommendation(
                     block_size=b,
                     fetch_factor=f,
                     modeled_samples_per_sec=sps,
                     entropy_lower_bound=-deficit,
                     buffer_bytes=buffer_bytes,
+                    cache_reserved_bytes=reserve,
                     rationale=(
                         f"b={b},f={f}: buffer {buffer_bytes/1e6:.1f}MB <= "
-                        f"{mem_budget_bytes/1e6:.0f}MB, entropy deficit "
+                        f"{buffer_budget/1e6:.0f}MB, entropy deficit "
                         f"{deficit:.3f} bits (IID {iid_deficit:.3f}), modeled {sps:.0f} samp/s"
+                        f"{planner}"
                     ),
                 )
     if best is None:

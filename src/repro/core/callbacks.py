@@ -20,6 +20,7 @@ import numpy as np
 __all__ = [
     "MultiIndexable",
     "default_fetch_callback",
+    "default_prefetch_callback",
     "default_batch_callback",
     "Callbacks",
     "sizeof_indexable",
@@ -126,15 +127,35 @@ def default_fetch_callback(collection: Any, indices: np.ndarray) -> Any:
     return _take(collection, indices)
 
 
+def default_prefetch_callback(collection: Any, indices: np.ndarray) -> int:
+    """Non-blocking readahead of a FUTURE fetch's ``indices``.
+
+    Collections exposing the planned-backend ``prefetch`` method (e.g. a
+    ``PlannedCollection`` opened with ``readahead > 0``) get their read plan
+    issued on the shared I/O executor; anything else is a no-op — plain
+    indexables have no background read path.  Returns blocks scheduled.
+    """
+    prefetch = getattr(collection, "prefetch", None)
+    if callable(prefetch) and hasattr(collection, "nbytes_of"):
+        return prefetch(indices)
+    return 0
+
+
 def default_batch_callback(transformed: Any, batch_indices: np.ndarray) -> Any:
     """``transformed[batch_indices]`` over the in-memory fetch buffer."""
     return _take(transformed, batch_indices)
 
 
 class Callbacks:
-    """Bundle of the four hooks with defaults (identity transforms)."""
+    """Bundle of the hooks with defaults (identity transforms)."""
 
-    __slots__ = ("fetch_callback", "fetch_transform", "batch_callback", "batch_transform")
+    __slots__ = (
+        "fetch_callback",
+        "fetch_transform",
+        "batch_callback",
+        "batch_transform",
+        "prefetch_callback",
+    )
 
     def __init__(
         self,
@@ -142,11 +163,13 @@ class Callbacks:
         fetch_transform: Optional[Callable] = None,
         batch_callback: Optional[Callable] = None,
         batch_transform: Optional[Callable] = None,
+        prefetch_callback: Optional[Callable] = None,
     ):
         self.fetch_callback = fetch_callback or default_fetch_callback
         self.fetch_transform = fetch_transform or (lambda x: x)
         self.batch_callback = batch_callback or default_batch_callback
         self.batch_transform = batch_transform or (lambda x: x)
+        self.prefetch_callback = prefetch_callback or default_prefetch_callback
 
 
 def sizeof_indexable(x: Any) -> int:

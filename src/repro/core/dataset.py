@@ -80,6 +80,7 @@ class ScDataset:
         fetch_transform: Optional[Callable] = None,
         batch_callback: Optional[Callable] = None,
         batch_transform: Optional[Callable] = None,
+        prefetch_callback: Optional[Callable] = None,
         sort_fetch_indices: bool = True,
     ):
         if batch_size <= 0 or fetch_factor <= 0:
@@ -97,11 +98,13 @@ class ScDataset:
         self.sort_fetch_indices = bool(sort_fetch_indices)
         if callbacks is not None and any(
             cb is not None
-            for cb in (fetch_callback, fetch_transform, batch_callback, batch_transform)
+            for cb in (fetch_callback, fetch_transform, batch_callback,
+                       batch_transform, prefetch_callback)
         ):
             raise ValueError("pass either a Callbacks bundle or individual hooks, not both")
         self.callbacks = callbacks or Callbacks(
-            fetch_callback, fetch_transform, batch_callback, batch_transform
+            fetch_callback, fetch_transform, batch_callback, batch_transform,
+            prefetch_callback,
         )
         self._state = LoaderState(seed=self.seed, epoch=0, fetch_cursor=0)
         self._order_cache: tuple[int, np.ndarray] | None = None  # (epoch, order)
@@ -185,6 +188,27 @@ class ScDataset:
             sorted_idx = fetch_idx[sort_perm]
         else:
             sorted_idx = fetch_idx
+
+        # Double buffering: issue the NEXT fetches' read plans (non-blocking)
+        # BEFORE blocking on this fetch's I/O, so background planner reads
+        # overlap this fetch's reads, assembly, and consumption.  Repeat
+        # issues are cheap no-ops (cached / in-flight blocks are skipped), so
+        # idempotent re-execution of a fetch stays safe.
+        ra = int(getattr(self.collection, "readahead", 0) or 0)
+        if ra > 0:
+            g = self._global_fetch_count()
+            for k in range(1, ra + 1):
+                nxt = global_fetch_id + k * self.world_size
+                if nxt >= g:
+                    break
+                nlo = nxt * self.fetch_size
+                nidx = order[nlo : min(nlo + self.fetch_size, len(order))]
+                if len(nidx) == 0:
+                    break
+                cbs.prefetch_callback(
+                    self.collection,
+                    np.sort(nidx, kind="stable") if self.sort_fetch_indices else nidx,
+                )
 
         fetched = cbs.fetch_callback(self.collection, sorted_idx)  # line 8 — the ONLY disk I/O
         fetched = cbs.fetch_transform(fetched)

@@ -15,7 +15,12 @@ This file implements:
   fetch never blocks the queue behind it).
 - Straggler re-issue — if a fetch is not done ``straggler_factor`` × the
   rolling median fetch latency after being claimed, it is re-queued for
-  speculative execution; duplicate completions are dropped.
+  speculative execution; duplicate completions are dropped.  When the
+  collection threads an :class:`~repro.data.iostats.IOStats`, each fetch
+  execution's counters are captured via ``IOStats.deferred()`` and committed
+  only once the winner is known — a dropped duplicate's runs/bytes land in
+  the ``spec_*`` counters, so ``cache_hit_rate`` and runs-per-sample always
+  describe the *delivered* data.
 - Bounded in-order delivery — results are buffered and yielded in fetch
   order so training sees the exact deterministic sequence, with at most
   ``max_outstanding`` fetch buffers resident (bounds host RAM at
@@ -124,14 +129,25 @@ class PrefetchPool:
                         return None
                     cond.wait(timeout=0.02)
 
+        # Shared IOStats, if the collection threads one: defer each fetch
+        # execution's counters until we know whether its completion is
+        # delivered or a dropped speculative duplicate (spec_* counters).
+        iostats = getattr(getattr(ds, "collection", None), "iostats", None)
+        can_defer = iostats is not None and hasattr(iostats, "deferred")
+
         def worker(wid: int):
             while True:
                 cur = claim()
                 if cur is None:
                     return
                 t0 = time.monotonic()
+                pend = None
                 try:
-                    batches = ds.fetch(epoch, my[cur])
+                    if can_defer:
+                        with iostats.deferred() as pend:
+                            batches = ds.fetch(epoch, my[cur])
+                    else:
+                        batches = ds.fetch(epoch, my[cur])
                 except BaseException as e:  # surface to the consumer
                     with cond:
                         errors.append(e)
@@ -140,7 +156,8 @@ class PrefetchPool:
                 dt = time.monotonic() - t0
                 with cond:
                     inflight[cur] -= 1
-                    if cur in results:
+                    duplicate = cur in results
+                    if duplicate:
                         self.stats["duplicate_completions"] += 1
                     else:
                         results[cur] = _FetchResult(batches, wid, dt)
@@ -149,6 +166,8 @@ class PrefetchPool:
                         self.stats["worker_fetches"][wid] += 1
                         claimed_at.pop(cur, None)
                     cond.notify_all()
+                if pend is not None:
+                    iostats.commit(pend, speculative=duplicate)
 
         threads = [
             threading.Thread(target=worker, args=(w,), daemon=True, name=f"scds-prefetch-{w}")

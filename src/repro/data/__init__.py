@@ -37,6 +37,39 @@ rounded to block extents), ``max_extent_rows`` (cap on a single physical
 read; None = unbounded).  Knobs may also ride in the URI query string
 (``...?cache_bytes=0&max_extent_rows=none``); explicit keyword arguments
 win, and unknown query keys are rejected by the opener, never dropped.
+
+Async execution knobs (PR 2) — all OFF by default; the synchronous path is
+the bit-exact reference and the async path is guaranteed to deliver the
+identical batch sequence:
+
+- ``io_workers`` (default 1): >1 executes one fetch's miss extents
+  concurrently on a shared bounded thread pool.  The adapter contract is
+  unchanged — ``read_range`` must merely be safe to call from multiple
+  threads (mmap/numpy reads are); pieces are gathered in plan order, so
+  assembly stays deterministic.  Leave at 1 when the store is purely
+  page-cached memory (nothing to overlap — threads only add overhead).
+- ``readahead`` (default 0): >0 lets ``ScDataset`` issue that many upcoming
+  fetches' read plans in the background (double buffering) via
+  ``PlannedCollection.prefetch``.  In-flight blocks are registered in a
+  rendezvous table; any fetch needing one waits on its future instead of
+  re-reading, so readahead never duplicates physical reads.  Needs a live
+  cache (``cache_bytes > 0``) sized to hold at least ``readahead + 1``
+  fetches' blocks, or prefetched data is evicted before it is consumed.
+- ``admission`` (default ``"always"``): ``"auto"`` watches the block-access
+  pattern (:class:`~repro.data.readplan.StreamDetector`) and bypasses LRU
+  insertion during forward-streaming epochs — a pure stream touches every
+  block exactly once, so caching it churns the LRU for zero hits (only each
+  fetch's last, possibly-straddled block is kept).  ``"never"`` disables LRU
+  retention outright.  Leave on ``"always"`` for redraw-heavy samplers
+  (weighted / class-balanced), where LRU reuse is the point.  Interactions:
+  blocks staged by readahead transit the cache marked as prefetched — their
+  first consumption counts in ``IOStats.prefetched`` (never as a cache hit,
+  so readahead cannot inflate the hit rate autotune consumes), and under a
+  bypassing policy (``never`` or detected stream) the entry is dropped as
+  soon as the consuming fetch has it; staging never consumed (abandoned
+  epoch) is dropped by ``close()``.  Under concurrent PrefetchPool
+  workers the stream detector sees interleaved fetch order and conservatively
+  stays off (plain LRU) rather than ever bypassing wrongly.
 """
 from .backend import (
     ChunkedAdapter,
@@ -52,8 +85,8 @@ from .backend import (
 )
 from .chunked_store import ChunkedStore, write_chunked_store
 from .csr_store import CSRBatch, CSRStore, ShardedCSRStore, write_csr_shard
-from .iostats import CLOUD_OBJECT, NVME_SSD, SATA_SSD, IOStats, StorageModel
-from .readplan import BlockCache, coalesce_rows, plan_reads
+from .iostats import CLOUD_OBJECT, NVME_SSD, SATA_SSD, IOStats, PendingIO, StorageModel
+from .readplan import BlockCache, StreamDetector, coalesce_rows, plan_reads
 from .synth import TAHOE_PLATE_FRACS, generate_tahoe_like, load_tahoe_like
 from .tokens import TokenStore, generate_token_corpus
 
@@ -65,6 +98,7 @@ __all__ = [
     "ChunkedStore",
     "write_chunked_store",
     "IOStats",
+    "PendingIO",
     "StorageModel",
     "SATA_SSD",
     "NVME_SSD",
@@ -80,6 +114,7 @@ __all__ = [
     "register_backend",
     "registered_schemes",
     "BlockCache",
+    "StreamDetector",
     "coalesce_rows",
     "plan_reads",
     "generate_tahoe_like",

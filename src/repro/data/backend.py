@@ -25,8 +25,10 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 import time
 import urllib.parse
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Optional, Protocol, Sequence, runtime_checkable
 
 import numpy as np
@@ -36,6 +38,7 @@ from .csr_store import CSRBatch, CSRStore, ShardedCSRStore, _concat_batches
 from .iostats import IOStats
 from .readplan import (
     BlockCache,
+    StreamDetector,
     blocks_to_row_spans,
     split_at_boundaries,
     split_max_extent,
@@ -340,10 +343,29 @@ class PlannedCollection:
     runs (physical reads actually issued), bytes, rows, and block cache
     hits/misses — identically for every backend.
 
-    Thread-safe: the BlockCache locks its own bookkeeping; reads and batch
-    assembly run unlocked so PrefetchPool workers overlap I/O and CPU (two
-    workers may rarely read the same block concurrently — last insert wins,
-    results are identical).
+    **Async execution** (opt-in, off by default so the synchronous path is
+    bit-for-bit the PR-1 behavior):
+
+    - ``io_workers > 1`` — a fetch's miss extents execute concurrently on a
+      shared bounded thread pool (mmap/numpy/decompress reads release the
+      GIL); cache-hit blocks are assembled while misses are in flight, and
+      pieces are gathered in plan order, so delivery stays bit-identical to
+      the synchronous path.
+    - ``readahead > 0`` — :meth:`prefetch` issues a *future* fetch's read
+      plan in the background (``ScDataset`` calls it with the next fetches'
+      indices before blocking on the current fetch).  In-flight blocks are
+      registered in a rendezvous table; a fetch that needs one waits on its
+      future instead of re-reading, so double-buffering never duplicates
+      physical reads.
+    - ``admission`` — ``"always"`` (default LRU), ``"auto"`` (a
+      :class:`~repro.data.readplan.StreamDetector` spots forward-streaming
+      epochs and bypasses LRU insertion for all but the fetch's last block —
+      pure streams churn the cache for zero hits), or ``"never"``.
+
+    Thread-safe: the BlockCache and the rendezvous table lock their own
+    bookkeeping; reads and batch assembly run unlocked so PrefetchPool
+    workers overlap I/O and CPU.  In async mode concurrent fetches of the
+    same block rendezvous on one read; results are identical either way.
 
     ``cache_bytes=0`` disables caching: fetches become pure planned reads
     (still coalesced and boundary/extent-split, still uniformly accounted).
@@ -357,15 +379,72 @@ class PlannedCollection:
         cache_bytes: int = DEFAULT_CACHE_BYTES,
         block_rows: int = DEFAULT_BLOCK_ROWS,
         max_extent_rows: Optional[int] = DEFAULT_MAX_EXTENT_ROWS,
+        io_workers: int = 1,
+        readahead: int = 0,
+        admission: str = "always",
     ):
         if block_rows <= 0:
             raise ValueError("block_rows must be positive")
+        if io_workers < 1:
+            raise ValueError("io_workers must be >= 1")
+        if readahead < 0:
+            raise ValueError("readahead must be >= 0")
+        if admission not in ("always", "auto", "never"):
+            raise ValueError(f"admission must be always|auto|never, got {admission!r}")
+        if readahead > 0 and cache_bytes <= 0:
+            # staged blocks hand over through the cache; without one every
+            # prefetched block would silently be read twice
+            raise ValueError("readahead > 0 requires cache_bytes > 0")
         self.adapter = adapter
         self.iostats = iostats if iostats is not None else IOStats()
         self.cache = BlockCache(cache_bytes)
         self.block_rows = int(block_rows)
         self.max_extent_rows = max_extent_rows
+        self.io_workers = int(io_workers)
+        self.readahead = int(readahead)
+        self.admission = admission
         self._boundaries = adapter.boundaries()
+        self._stream = StreamDetector()
+        self._executor: Optional[ThreadPoolExecutor] = None
+        self._closed = False
+        self._exec_lock = threading.Lock()
+        # rendezvous table: block id -> Future resolving to the block's value
+        # while a background (or concurrent) read of it is in flight
+        self._inflight: dict[int, Future] = {}
+        # blocks staged by prefetch, not yet consumed by any fetch: their
+        # first consumption counts as `prefetched` (not a cache hit), and
+        # under a bypassing admission policy they are dropped after use
+        self._pf_marks: set[int] = set()
+        self._fl = threading.Lock()
+
+    @property
+    def async_enabled(self) -> bool:
+        return self.io_workers > 1 or self.readahead > 0
+
+    def _pool(self) -> Optional[ThreadPoolExecutor]:
+        if not self.async_enabled or self._closed:
+            return None
+        if self._executor is None:
+            with self._exec_lock:
+                if self._executor is None and not self._closed:
+                    self._executor = ThreadPoolExecutor(
+                        max_workers=self.io_workers, thread_name_prefix="scds-io"
+                    )
+        return self._executor
+
+    def close(self) -> None:
+        """Shut down the I/O executor and drop any unconsumed prefetch
+        staging.  Permanent: stragglers still iterating fall back to
+        synchronous reads rather than resurrecting a leaked executor."""
+        with self._exec_lock:
+            self._closed = True
+            ex, self._executor = self._executor, None
+        if ex is not None:
+            ex.shutdown(wait=True)
+        with self._fl:
+            marks, self._pf_marks = self._pf_marks, set()
+        for b in marks:  # staged-but-never-consumed blocks must not linger
+            self.cache.discard(b)
 
     def __len__(self) -> int:
         return len(self.adapter)
@@ -406,6 +485,51 @@ class PlannedCollection:
     def __getitem__(self, rows) -> Any:
         return self.fetch(rows)
 
+    # ---------------------------------------------------- read primitives
+    def _read_one(self, lo: int, hi: int) -> tuple[Any, int]:
+        """ONE physical read + its per-read simulated latency, slept in the
+        reading thread so concurrent reads overlap it like real storage."""
+        piece = self.adapter.read_range(lo, hi)
+        nb = piece_nbytes(piece)
+        self.iostats.sleep_for(runs=1, bytes_read=nb)
+        return piece, nb
+
+    def _cache_put(
+        self, block: int, val: Any, *, last_block: int, streaming: bool
+    ) -> None:
+        """LRU insertion subject to the admission policy.  ``streaming`` is
+        the detector state captured once at fetch start (so one fetch applies
+        one consistent policy).  In streaming mode only the fetch's last
+        block is kept (the next fetch may straddle it); the rest would churn
+        the cache for zero future hits."""
+        if self.admission == "never" or (streaming and block != last_block):
+            self.cache.bypass()
+            return
+        self.cache.put(block, val, piece_nbytes(val))
+
+    @staticmethod
+    def _slice_spans_into_blocks(
+        adapter: StorageAdapter,
+        B: int,
+        spans: Sequence[tuple[int, int]],
+        pieces: Sequence[Any],
+        pending: dict[int, list],
+    ) -> None:
+        """Cut span pieces at cache-block edges into ``pending`` (in span
+        order — deterministic regardless of read completion order)."""
+        for (lo, hi), piece in zip(spans, pieces):
+            b0, b1 = lo // B, (hi - 1) // B
+            for bb in range(b0, b1 + 1):
+                if bb not in pending:
+                    continue
+                blo, bhi = max(lo, bb * B), min(hi, (bb + 1) * B)
+                if blo == lo and bhi == hi:
+                    pending[bb].append(piece)
+                else:
+                    pending[bb].append(
+                        adapter.take(piece, np.arange(blo - lo, bhi - lo))
+                    )
+
     def fetch(self, rows) -> Any:
         t0 = time.perf_counter()
         rows = np.asarray(rows, dtype=np.int64)
@@ -423,52 +547,148 @@ class PlannedCollection:
                 f"rows out of range [0, {n}): min={lo_row}, max={hi_row}"
             )
         blocks = np.unique(rows // B)
+        streaming = False
+        if self.admission == "auto":
+            # observe under the rendezvous lock (serialized) and capture the
+            # state ONCE so this fetch applies one consistent policy
+            with self._fl:
+                streaming = self._stream.observe(blocks)
+        last_block = int(blocks[-1])
 
         # ---- cache lookup (BlockCache locks internally) ------------------
         local: dict[int, Any] = {}
         missing: list[int] = []
+        served: list[int] = []
         for b in blocks.tolist():
             piece = self.cache.get(b)
             if piece is None:
                 missing.append(b)
             else:
                 local[b] = piece
-        hits = len(blocks) - len(missing)
+                served.append(b)
+        hits = len(served)
 
-        # ---- plan + execute the physical reads ---------------------------
+        # ---- rendezvous + claim (async mode) -----------------------------
+        # One critical section decides, per missing block: wait on an
+        # in-flight read, take a just-landed cache value, or claim the read
+        # for ourselves (registering a future other fetches can wait on).
+        # It also reconciles prefetch markers: a cache-served block staged by
+        # prefetch and consumed here for the first time is `prefetched`, not
+        # a cache hit — readahead must not inflate the hit rate autotune uses.
+        waits: dict[int, Future] = {}
+        claimed: dict[int, Future] = {}
+        pf_blocks: list[int] = []
+        if self.async_enabled:
+            with self._fl:
+                if self._pf_marks:
+                    for b in served:
+                        if b in self._pf_marks:
+                            self._pf_marks.discard(b)
+                            pf_blocks.append(b)
+                            hits -= 1
+                if missing:
+                    still: list[int] = []
+                    for b in missing:
+                        fut = self._inflight.get(b)
+                        if fut is not None:
+                            waits[b] = fut
+                            continue
+                        val = self.cache.peek(b)  # landed since the get() above
+                        if val is not None:
+                            local[b] = val
+                            if b in self._pf_marks:
+                                self._pf_marks.discard(b)
+                                pf_blocks.append(b)
+                            else:
+                                hits += 1
+                            continue
+                        f: Future = Future()
+                        self._inflight[b] = f
+                        claimed[b] = f
+                        self._pf_marks.discard(b)  # stale staging: we re-read
+                        still.append(b)
+                    missing = still
+
+        # ---- plan + issue the physical reads -----------------------------
         bytes_read = 0
         spans: list[tuple[int, int]] = []
+        read_futs = None
+        pieces: list[Any] = []
         if missing:
             spans = self._spans_for_blocks(np.asarray(missing))
-            pending: dict[int, list] = {b: [] for b in missing}
-            for lo, hi in spans:
-                piece = self.adapter.read_range(lo, hi)
-                bytes_read += piece_nbytes(piece)
-                b0, b1 = lo // B, (hi - 1) // B
-                for bb in range(b0, b1 + 1):
-                    blo, bhi = max(lo, bb * B), min(hi, (bb + 1) * B)
-                    if blo == lo and bhi == hi:
-                        pending[bb].append(piece)
-                    else:
-                        pending[bb].append(
-                            self.adapter.take(piece, np.arange(blo - lo, bhi - lo))
-                        )
-            for bb, parts in pending.items():
-                val = parts[0] if len(parts) == 1 else self.adapter.concat(parts)
-                local[bb] = val
-                self.cache.put(bb, val, piece_nbytes(val))
+            pool = self._pool()
+            if pool is not None and self.io_workers > 1 and len(spans) > 1:
+                read_futs = [pool.submit(self._read_one, lo, hi) for lo, hi in spans]
 
-        # ---- assemble in the caller's row order --------------------------
+        # ---- assembly prep: overlaps with in-flight miss reads -----------
         order = np.argsort(rows, kind="stable")
         srows = rows[order]
         sblocks = srows // B
         edges = np.flatnonzero(np.diff(sblocks) != 0) + 1
         starts = np.concatenate(([0], edges))
         stops = np.concatenate((edges, [len(srows)]))
-        parts = []
-        for a, z in zip(starts.tolist(), stops.tolist()):
-            bb = int(sblocks[a])
-            parts.append(self.adapter.take(local[bb], srows[a:z] - bb * B))
+        groups = [
+            (a, z, int(sblocks[a])) for a, z in zip(starts.tolist(), stops.tolist())
+        ]
+        parts: list = [None] * len(groups)
+        for gi, (a, z, bb) in enumerate(groups):
+            if bb in local:  # cache hits assemble while misses are read
+                parts[gi] = self.adapter.take(local[bb], srows[a:z] - bb * B)
+
+        # ---- gather own reads (plan order), build + publish blocks -------
+        if missing:
+            try:
+                if read_futs is not None:
+                    results = [f.result() for f in read_futs]
+                else:
+                    results = [self._read_one(lo, hi) for lo, hi in spans]
+                pieces = [p for p, _ in results]
+                bytes_read = sum(nb for _, nb in results)
+                pending: dict[int, list] = {b: [] for b in missing}
+                self._slice_spans_into_blocks(self.adapter, B, spans, pieces, pending)
+                for bb, plist in pending.items():
+                    val = plist[0] if len(plist) == 1 else self.adapter.concat(plist)
+                    local[bb] = val
+                    self._cache_put(bb, val, last_block=last_block,
+                                    streaming=streaming)
+                    f = claimed.get(bb)
+                    if f is not None:
+                        f.set_result(val)
+            except BaseException as e:
+                for f in claimed.values():
+                    if not f.done():
+                        f.set_exception(e)
+                raise
+            finally:
+                if claimed:
+                    with self._fl:
+                        for bb, f in claimed.items():
+                            if self._inflight.get(bb) is f:
+                                del self._inflight[bb]
+
+        # ---- rendezvous with reads other threads own ---------------------
+        for b, fut in waits.items():
+            local[b] = fut.result()  # re-raises the producer's failure
+            pf_blocks.append(b)
+        if waits:
+            with self._fl:
+                for b in waits:
+                    self._pf_marks.discard(b)
+
+        # consume-once staging: under a bypassing admission policy the
+        # prefetched blocks must not be RETAINED by the LRU — drop them now
+        # that this fetch has them in hand.  Streaming keeps the straddled
+        # last block exactly like the _cache_put path does, or the next
+        # fetch would re-read it and readahead would *add* physical runs.
+        if pf_blocks and (self.admission == "never" or streaming):
+            for b in pf_blocks:
+                if self.admission == "never" or b != last_block:
+                    self.cache.discard(b)
+
+        # ---- fill the remaining parts, restore caller order --------------
+        for gi, (a, z, bb) in enumerate(groups):
+            if parts[gi] is None:
+                parts[gi] = self.adapter.take(local[bb], srows[a:z] - bb * B)
         merged = parts[0] if len(parts) == 1 else self.adapter.concat(parts)
         inv = np.empty(len(rows), dtype=np.int64)
         inv[order] = np.arange(len(rows))
@@ -482,8 +702,116 @@ class PlannedCollection:
             wall_s=time.perf_counter() - t0,
             cache_hits=hits,
             cache_misses=len(missing),
+            prefetched=len(pf_blocks),
+            slept=True,
         )
         return merged
+
+    # ------------------------------------------------------- double buffer
+    def prefetch(self, rows) -> int:
+        """Issue the read plan of a FUTURE fetch in the background.
+
+        Non-blocking.  Blocks already cached or in flight are skipped; the
+        rest are registered in the rendezvous table and read by the shared
+        executor (one task per contiguous block group, spans split exactly as
+        a fetch would split them, so total physical runs never exceed the
+        synchronous path).  The later ``fetch`` finds them in the cache or
+        waits on their futures.  Returns the number of blocks scheduled.
+        No-op unless ``readahead > 0`` or ``io_workers > 1``.
+        """
+        pool = self._pool()
+        if pool is None:
+            return 0
+        rows = np.asarray(rows, dtype=np.int64)
+        if rows.size == 0:
+            return 0
+        blocks = np.unique(rows // self.block_rows)
+        todo: list[int] = []
+        futs: dict[int, Future] = {}
+        with self._fl:
+            for b in blocks.tolist():
+                if b in self._inflight or self.cache.peek(b) is not None:
+                    continue
+                f: Future = Future()
+                self._inflight[b] = f
+                futs[b] = f
+                todo.append(b)
+        if not todo:
+            return 0
+        # one background task per contiguous block group: its spans coalesce
+        # exactly as a fetch of those blocks would, groups read in parallel
+        arr = np.asarray(todo)
+        breaks = np.flatnonzero(np.diff(arr) != 1) + 1
+        groups = np.split(arr, breaks)
+        for gi, grp in enumerate(groups):
+            gspans = self._spans_for_blocks(grp)
+            gfuts = {int(b): futs[int(b)] for b in grp.tolist()}
+            try:
+                pool.submit(self._prefetch_group, gspans, gfuts)
+            except BaseException as e:
+                # executor shut down mid-issue (close() racing a drain):
+                # deregister + fail every future not handed to a task, or a
+                # later fetch would wait on them forever
+                undone = [int(b) for g in groups[gi:] for b in g.tolist()]
+                with self._fl:
+                    for b in undone:
+                        if self._inflight.get(b) is futs[b]:
+                            del self._inflight[b]
+                for b in undone:
+                    if not futs[b].done():
+                        futs[b].set_exception(e)
+                return sum(len(g) for g in groups[:gi])
+        return len(todo)
+
+    def _prefetch_group(
+        self, spans: list[tuple[int, int]], futs: dict[int, Future]
+    ) -> None:
+        """Executor task: read one contiguous block group, publish its blocks
+        (cache first, then future, then rendezvous deregistration — waiters
+        observing no inflight entry are guaranteed a cache peek succeeds)."""
+        B = self.block_rows
+        try:
+            results = [self._read_one(lo, hi) for lo, hi in spans]
+            pieces = [p for p, _ in results]
+            bytes_read = sum(nb for _, nb in results)
+            pending: dict[int, list] = {b: [] for b in futs}
+            self._slice_spans_into_blocks(self.adapter, B, spans, pieces, pending)
+            vals = {
+                bb: plist[0] if len(plist) == 1 else self.adapter.concat(plist)
+                for bb, plist in pending.items()
+            }
+            # stage through the cache as the hand-off channel, MARKED: the
+            # consuming fetch counts the first touch as `prefetched` (not a
+            # hit) and, under a bypassing admission policy, drops the entry
+            # after use — so readahead neither inflates the hit rate nor
+            # defeats admission="never"/stream-bypass retention semantics.
+            with self._fl:
+                self._pf_marks.update(vals)
+            for bb, val in vals.items():
+                self.cache.put(bb, val, piece_nbytes(val))
+                futs[bb].set_result(val)
+            with self._fl:
+                for bb, f in futs.items():
+                    if self._inflight.get(bb) is f:
+                        del self._inflight[bb]
+            # background work: runs/bytes counted once, not a consumer call
+            self.iostats.record(
+                runs=len(spans),
+                rows=0,
+                bytes_read=bytes_read,
+                wall_s=0.0,
+                cache_misses=len(futs),
+                calls=0,
+                slept=True,
+            )
+        except BaseException as e:
+            with self._fl:
+                for bb, f in futs.items():
+                    if self._inflight.get(bb) is f:
+                        del self._inflight[bb]
+            for f in futs.values():
+                if not f.done():
+                    f.set_exception(e)
 
     def stats(self) -> dict:
         return {"io": self.iostats.snapshot(), "cache": self.cache.snapshot()}
@@ -562,6 +890,9 @@ def open_collection(
     cache_bytes=_UNSET,
     block_rows=_UNSET,
     max_extent_rows=_UNSET,
+    io_workers=_UNSET,
+    readahead=_UNSET,
+    admission=_UNSET,
     **opts,
 ) -> PlannedCollection:
     """Open any registered storage format behind the unified planned layer.
@@ -570,10 +901,17 @@ def open_collection(
     kwargs) or a bare directory path, in which case the layout is sniffed.
     Planner knobs: ``cache_bytes`` (LRU budget; 0 disables the cache),
     ``block_rows`` (cache granularity), ``max_extent_rows`` (largest single
-    read; None = unbounded).  The knobs may also ride in the query string
-    (``?cache_bytes=0&max_extent_rows=none``); an explicit keyword argument
-    wins over the query.  Unknown query keys reach the opener, which rejects
-    what it does not understand — nothing is silently dropped.
+    read; None = unbounded).  Async knobs (both off by default — the
+    synchronous path is the reference): ``io_workers`` (>1 executes one
+    fetch's miss extents concurrently on a shared bounded pool),
+    ``readahead`` (>0 lets ``ScDataset`` issue that many upcoming fetches'
+    read plans in the background — double buffering), ``admission``
+    (``always`` | ``auto`` | ``never``; ``auto`` detects forward-streaming
+    epochs and bypasses LRU insertion for them).  The knobs may also ride in
+    the query string (``?cache_bytes=0&io_workers=4&admission=auto``); an
+    explicit keyword argument wins over the query.  Unknown query keys reach
+    the opener, which rejects what it does not understand — nothing is
+    silently dropped.
     """
     if "://" in uri:
         scheme, rest = uri.split("://", 1)
@@ -585,7 +923,7 @@ def open_collection(
     if scheme not in _REGISTRY:
         raise ValueError(f"unknown backend scheme {scheme!r}; known: {registered_schemes()}")
 
-    def knob(kwarg, key: str, default, allow_none: bool = False):
+    def knob(kwarg, key: str, default, allow_none: bool = False, cast=int):
         if kwarg is not _UNSET:
             opts.pop(key, None)
             return kwarg
@@ -594,13 +932,16 @@ def open_collection(
             return default
         if allow_none and isinstance(raw, str) and raw.lower() == "none":
             return None
-        return int(raw)
+        return cast(raw)
 
     cache_bytes = knob(cache_bytes, "cache_bytes", DEFAULT_CACHE_BYTES)
     block_rows = knob(block_rows, "block_rows", DEFAULT_BLOCK_ROWS)
     max_extent_rows = knob(
         max_extent_rows, "max_extent_rows", DEFAULT_MAX_EXTENT_ROWS, allow_none=True
     )
+    io_workers = knob(io_workers, "io_workers", 1)
+    readahead = knob(readahead, "readahead", 0)
+    admission = knob(admission, "admission", "always", cast=str)
     adapter = _REGISTRY[scheme](rest, **opts)
     return PlannedCollection(
         adapter,
@@ -608,4 +949,7 @@ def open_collection(
         cache_bytes=int(cache_bytes),
         block_rows=int(block_rows),
         max_extent_rows=max_extent_rows,
+        io_workers=int(io_workers),
+        readahead=int(readahead),
+        admission=str(admission),
     )

@@ -12,12 +12,13 @@ calibrated (see DESIGN.md §2).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 import time
-from typing import Optional
+from typing import Iterator, Optional
 
-__all__ = ["IOStats", "StorageModel", "SATA_SSD", "NVME_SSD", "CLOUD_OBJECT"]
+__all__ = ["IOStats", "PendingIO", "StorageModel", "SATA_SSD", "NVME_SSD", "CLOUD_OBJECT"]
 
 
 @dataclasses.dataclass
@@ -43,11 +44,40 @@ CLOUD_OBJECT = StorageModel("cloud_object", seek_s=0.030, bw_Bps=1.0e9)
 
 
 @dataclasses.dataclass
+class PendingIO:
+    """One fetch execution's counters, captured before they reach the shared
+    totals.  Produced by :meth:`IOStats.deferred`; merged back — into the
+    main counters or the ``spec_*`` duplicate counters — by
+    :meth:`IOStats.commit` once the caller knows whether the execution's
+    result was delivered or dropped as a speculative duplicate.
+    """
+
+    calls: int = 0
+    runs: int = 0
+    rows: int = 0
+    bytes_read: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    prefetched: int = 0
+    wall_s: float = 0.0
+    modeled_s: float = 0.0
+
+
+@dataclasses.dataclass
 class IOStats:
     """Counters threaded through backend reads.
 
     ``simulate`` — if set, reads sleep according to the model (scaled by
     ``simulate_scale`` so CI stays fast while ratios are preserved).
+
+    The main counters describe work whose result was (or will be) delivered.
+    ``spec_*`` counters hold fetch executions whose completion was *dropped*
+    (a speculative straggler re-issue lost the race): the I/O genuinely
+    happened, but folding it into the main counters would corrupt
+    runs-per-sample and ``cache_hit_rate`` relative to delivered data.
+    ``prefetched`` counts blocks a fetch obtained by waiting on an in-flight
+    background read (readahead rendezvous) — served without a new physical
+    read, but not a cache hit either.
     """
 
     calls: int = 0
@@ -56,16 +86,28 @@ class IOStats:
     bytes_read: int = 0
     cache_hits: int = 0  # planner block-cache hits (block granularity)
     cache_misses: int = 0
+    prefetched: int = 0  # blocks served by readahead rendezvous
     wall_s: float = 0.0
     simulate: Optional[StorageModel] = None
     simulate_scale: float = 1.0
     modeled_s: float = 0.0
+    # speculative-duplicate executions (dropped from delivery)
+    spec_calls: int = 0
+    spec_runs: int = 0
+    spec_rows: int = 0
+    spec_bytes_read: int = 0
+    spec_cache_hits: int = 0
+    spec_cache_misses: int = 0
+    spec_prefetched: int = 0
+    spec_wall_s: float = 0.0
+    spec_modeled_s: float = 0.0
 
     def __post_init__(self):
         # Concurrent PrefetchPool workers record() through one shared
         # IOStats; the bare `+=` read-modify-writes would lose updates.
         # Not a dataclass field, so asdict/eq/replace are unaffected.
         self._lock = threading.Lock()
+        self._tl = threading.local()
 
     def record(
         self,
@@ -76,29 +118,88 @@ class IOStats:
         wall_s: float,
         cache_hits: int = 0,
         cache_misses: int = 0,
+        prefetched: int = 0,
+        calls: int = 1,
+        slept: bool = False,
     ) -> None:
-        dt = 0.0
-        with self._lock:
-            self.calls += 1
-            self.runs += runs
-            self.rows += rows
-            self.bytes_read += bytes_read
-            self.cache_hits += cache_hits
-            self.cache_misses += cache_misses
-            self.wall_s += wall_s
-            if self.simulate is not None:
-                dt = self.simulate.seconds(runs, bytes_read)
+        """Account one planner/backend call.
+
+        ``calls=0`` — background readahead work that is not a consumer-facing
+        fetch.  ``slept=True`` — the caller already slept the simulated
+        latency per physical read (the planner's read path does this so
+        concurrent reads overlap); modeled time still accumulates here.
+        """
+        dt = self.simulate.seconds(runs, bytes_read) if self.simulate is not None else 0.0
+        pend: Optional[PendingIO] = getattr(self._tl, "pending", None)
+        if pend is not None:
+            pend.calls += calls
+            pend.runs += runs
+            pend.rows += rows
+            pend.bytes_read += bytes_read
+            pend.cache_hits += cache_hits
+            pend.cache_misses += cache_misses
+            pend.prefetched += prefetched
+            pend.wall_s += wall_s
+            pend.modeled_s += dt
+        else:
+            with self._lock:
+                self.calls += calls
+                self.runs += runs
+                self.rows += rows
+                self.bytes_read += bytes_read
+                self.cache_hits += cache_hits
+                self.cache_misses += cache_misses
+                self.prefetched += prefetched
+                self.wall_s += wall_s
                 self.modeled_s += dt
         # sleep OUTSIDE the lock: simulated latency must overlap across
         # workers exactly like real storage would
-        if self.simulate is not None and self.simulate_scale > 0:
+        if not slept and self.simulate is not None and self.simulate_scale > 0:
             time.sleep(dt * self.simulate_scale)
+
+    def sleep_for(self, runs: int, bytes_read: int) -> None:
+        """Sleep the simulated latency of one physical read, in the reading
+        thread — concurrent reads overlap their modeled latency exactly like
+        real storage.  No counters are touched; pair with
+        ``record(..., slept=True)``."""
+        if self.simulate is not None and self.simulate_scale > 0:
+            time.sleep(self.simulate.seconds(runs, bytes_read) * self.simulate_scale)
+
+    @contextlib.contextmanager
+    def deferred(self) -> Iterator[PendingIO]:
+        """Capture this thread's ``record()`` calls into a :class:`PendingIO`
+        instead of the shared totals.  The caller decides afterwards via
+        :meth:`commit` whether the execution was delivered (main counters) or
+        a dropped speculative duplicate (``spec_*``).  An uncommitted pending
+        buffer is simply discarded."""
+        if getattr(self._tl, "pending", None) is not None:
+            raise RuntimeError("nested IOStats.deferred() on one thread")
+        pend = PendingIO()
+        self._tl.pending = pend
+        try:
+            yield pend
+        finally:
+            self._tl.pending = None
+
+    def commit(self, pend: PendingIO, *, speculative: bool = False) -> None:
+        # every PendingIO field has both a main and a spec_ counterpart, so
+        # new counters added there are committed automatically
+        prefix = "spec_" if speculative else ""
+        with self._lock:
+            for f in dataclasses.fields(PendingIO):
+                name = prefix + f.name
+                setattr(self, name, getattr(self, name) + getattr(pend, f.name))
 
     def reset(self) -> None:
         with self._lock:
             self.calls = self.runs = self.rows = self.bytes_read = 0
-            self.cache_hits = self.cache_misses = 0
+            self.cache_hits = self.cache_misses = self.prefetched = 0
             self.wall_s = self.modeled_s = 0.0
+            self.spec_calls = self.spec_runs = self.spec_rows = 0
+            self.spec_bytes_read = 0
+            self.spec_cache_hits = self.spec_cache_misses = 0
+            self.spec_prefetched = 0
+            self.spec_wall_s = self.spec_modeled_s = 0.0
 
     @property
     def cache_hit_rate(self) -> float:
@@ -113,8 +214,18 @@ class IOStats:
             "bytes_read": self.bytes_read,
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
+            "prefetched": self.prefetched,
             "wall_s": self.wall_s,
             "modeled_s": self.modeled_s,
+            "spec_calls": self.spec_calls,
+            "spec_runs": self.spec_runs,
+            "spec_rows": self.spec_rows,
+            "spec_bytes_read": self.spec_bytes_read,
+            "spec_cache_hits": self.spec_cache_hits,
+            "spec_cache_misses": self.spec_cache_misses,
+            "spec_prefetched": self.spec_prefetched,
+            "spec_wall_s": self.spec_wall_s,
+            "spec_modeled_s": self.spec_modeled_s,
         }
 
     def total_seconds(self) -> float:

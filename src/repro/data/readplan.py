@@ -37,6 +37,7 @@ __all__ = [
     "block_ids_of",
     "blocks_to_row_spans",
     "BlockCache",
+    "StreamDetector",
 ]
 
 
@@ -146,6 +147,7 @@ class BlockCache:
         self.misses = 0
         self.evictions = 0
         self.insertions = 0
+        self.bypasses = 0  # insertions skipped by an admission policy
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -159,6 +161,30 @@ class BlockCache:
             self._entries.move_to_end(key)
             self.hits += 1
             return ent[0]
+
+    def peek(self, key) -> Optional[Any]:
+        """Like ``get`` but without touching the hit/miss counters — for
+        rendezvous re-checks that must not distort the accounting (the caller
+        counts the outcome itself)."""
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                return None
+            self._entries.move_to_end(key)
+            return ent[0]
+
+    def bypass(self, n: int = 1) -> None:
+        """Record that an admission policy skipped ``n`` insertions."""
+        with self._lock:
+            self.bypasses += n
+
+    def discard(self, key) -> None:
+        """Drop an entry if present (no counters) — consume-once semantics
+        for prefetch staging under a bypassing admission policy."""
+        with self._lock:
+            ent = self._entries.pop(key, None)
+            if ent is not None:
+                self.cur_bytes -= ent[1]
 
     def put(self, key, value, nbytes: int) -> None:
         nbytes = int(nbytes)
@@ -195,5 +221,49 @@ class BlockCache:
             "misses": self.misses,
             "evictions": self.evictions,
             "insertions": self.insertions,
+            "bypasses": self.bypasses,
             "hit_rate": self.hit_rate,
         }
+
+
+class StreamDetector:
+    """Detects forward-streaming access over cache blocks.
+
+    A pure-stream epoch (``Streaming`` strategy) touches every block exactly
+    once in ascending order; inserting those blocks into an LRU buys zero
+    future hits while evicting blocks that redraw-heavy samplers would have
+    reused.  Feed each fetch's sorted-unique block ids to :meth:`observe`;
+    after ``threshold`` consecutive fetches that are contiguous within the
+    fetch AND advance monotonically past the previous fetch, ``streaming``
+    turns on (and off again the moment the pattern breaks — one random fetch
+    resets the streak).
+
+    Not internally synchronized: the caller serializes ``observe`` (the
+    planned collection holds its rendezvous lock).  Out-of-order observers
+    (concurrent PrefetchPool workers completing fetches in any order) break
+    the forward check and keep the streak at zero — detection degrades to
+    OFF, i.e. plain LRU admission, never to a wrong bypass.
+    """
+
+    def __init__(self, threshold: int = 3):
+        self.threshold = int(threshold)
+        self.streak = 0
+        self._last_hi: Optional[int] = None
+
+    def observe(self, block_ids: np.ndarray) -> bool:
+        """Update with one fetch's sorted-unique block ids; returns the new
+        streaming state (which classifies this same fetch)."""
+        blocks = np.asarray(block_ids)
+        contiguous = int(blocks[-1]) - int(blocks[0]) + 1 == len(blocks)
+        forward = self._last_hi is not None and int(blocks[0]) >= self._last_hi
+        self._last_hi = int(blocks[-1])
+        self.streak = self.streak + 1 if (contiguous and forward) else 0
+        return self.streaming
+
+    @property
+    def streaming(self) -> bool:
+        return self.streak >= self.threshold
+
+    def reset(self) -> None:
+        self.streak = 0
+        self._last_hi = None

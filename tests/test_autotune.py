@@ -2,7 +2,12 @@
 import numpy as np
 import pytest
 
-from repro.core.autotune import IOCostModel, probe_io_cost, recommend
+from repro.core.autotune import (
+    IOCostModel,
+    probe_collection,
+    probe_io_cost,
+    recommend,
+)
 
 
 def test_cost_model_arithmetic():
@@ -64,3 +69,72 @@ def test_recommend_infeasible_raises():
     m = IOCostModel(c0=0.005, c_seek=0.048, c_byte=1 / 450e6, row_bytes=50_000)
     with pytest.raises(ValueError):
         recommend(m, batch_size=64, mem_budget_bytes=1.0)  # nothing fits
+
+
+# ------------------------------------------------- planner-aware (PR 2)
+def test_planner_aware_recommendation_shrinks_fetch_factor():
+    """When the probe shows the cache absorbing redraws, its bytes are
+    reserved out of the memory budget and the seek/byte terms discount by
+    the hit rate — the recommended fetch factor shrinks."""
+    base = dict(c0=0.005, c_seek=0.048, c_byte=1 / 450e6, row_bytes=50_000)
+    cold = IOCostModel(**base)
+    warm = IOCostModel(**base, hit_rate=0.8, runs_per_sample=1e-4,
+                       cache_bytes=400e6)
+    kw = dict(batch_size=64, num_classes=14, mem_budget_bytes=900e6,
+              entropy_slack_bits=0.1)
+    rc = recommend(cold, **kw)
+    rw = recommend(warm, **kw)
+    assert rc.cache_reserved_bytes == 0.0
+    assert rw.cache_reserved_bytes == pytest.approx(400e6)
+    assert rw.fetch_factor < rc.fetch_factor
+    assert rw.buffer_bytes + rw.cache_reserved_bytes <= 900e6
+    # discounting makes the cached regime measurably faster per config
+    assert warm.fetch_seconds(64, 16, 64) < cold.fetch_seconds(64, 16, 64)
+    assert "cache reserve" in rw.rationale and "cache reserve" not in rc.rationale
+
+
+def test_cost_model_measured_runs_floor():
+    """The analytic rows/b seek estimate never undercuts measured runs/sample."""
+    m = IOCostModel(c0=0.0, c_seek=0.01, c_byte=0.0, row_bytes=1.0,
+                    runs_per_sample=0.25)
+    # analytic: 1024/1024 = 1 seek; measured floor: 0.25*1024 = 256 seeks
+    assert m.fetch_seconds(64, 16, 1024) == pytest.approx(0.01 * 256)
+    # small b: analytic (1024/4=256) == floor -> unchanged
+    assert m.fetch_seconds(64, 16, 4) == pytest.approx(0.01 * 256)
+
+
+def test_probe_collection_cached_vs_uncached_changes_recommendation(tmp_path):
+    """probe_collection fits on PLANNED runs and measures the hit rate; the
+    cached and uncached probes of the same store must recommend differently
+    (covered acceptance criterion)."""
+    from repro.data import open_collection, write_chunked_store
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(8192, 8)).astype(np.float32)
+    path = str(tmp_path / "ck")
+    write_chunked_store(path, X, {"y": np.arange(len(X))}, chunk_rows=1024)
+
+    cached = open_collection(f"chunked://{path}", block_rows=64,
+                             cache_bytes=32 << 20)
+    uncached = open_collection(f"chunked://{path}", block_rows=64,
+                               cache_bytes=0)
+    mc = probe_collection(cached, probes=2, probe_rows=256)
+    mu = probe_collection(uncached, probes=2, probe_rows=256)
+
+    # redraw probes hit a live cache; without one the rate is exactly 0
+    assert mc.hit_rate > 0.1 and mu.hit_rate == 0.0
+    # cache absorption shows up as fewer physical runs per sampled row
+    assert mc.runs_per_sample < mu.runs_per_sample
+    assert mc.cache_bytes == float(32 << 20) and mu.cache_bytes == 0.0
+    assert mc.c0 >= 0 and mc.c_seek >= 0 and mc.c_byte >= 0
+
+    # fold into recommend: identical budget, measurably different outcome
+    # (the probe rows are tiny, so model Tahoe-scale rows for the budget)
+    mc.row_bytes = mu.row_bytes = 50_000
+    kw = dict(batch_size=64, num_classes=14, mem_budget_bytes=60e6,
+              entropy_slack_bits=0.1)
+    rc = recommend(mc, **kw)
+    ru = recommend(mu, **kw)
+    assert rc.cache_reserved_bytes > 0 and ru.cache_reserved_bytes == 0
+    assert rc.fetch_factor < ru.fetch_factor
+    assert rc.rationale != ru.rationale
