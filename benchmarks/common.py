@@ -135,6 +135,33 @@ def async_equal_work(
     }
 
 
+def cloud_collection(
+    profile: str,
+    *,
+    latency_scale: float,
+    iostats: Optional[IOStats] = None,
+    cache_bytes: int = 0,
+    io_workers: int = 1,
+    readahead: int = 0,
+):
+    """(collection, iostats) over the shared fixture behind ``cloud://``
+    request semantics: every planner extent is one simulated GET (first-byte
+    latency + bandwidth + in-flight cap from the named
+    :data:`repro.data.CLOUD_PROFILES` entry, sleeps scaled by
+    ``latency_scale``).  ``IOStats.requests`` counts the GETs."""
+    generate_tahoe_like(BENCH_DATA_DIR, n_cells=N_CELLS, n_genes=N_GENES, seed=0)
+    stats = iostats if iostats is not None else IOStats()
+    col = open_collection(
+        f"cloud://sharded-csr://{BENCH_DATA_DIR}"
+        f"?profile={profile}&latency_scale={latency_scale}",
+        iostats=stats,
+        cache_bytes=cache_bytes,
+        io_workers=io_workers,
+        readahead=readahead,
+    )
+    return col, stats
+
+
 def timed_samples_per_sec(
     it: Iterable,
     stats: IOStats,

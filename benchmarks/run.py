@@ -5,12 +5,17 @@ summary.  Individual benches: ``python -m benchmarks.bench_fig2_throughput``.
 Environment knobs: BENCH_N_CELLS (default 150000), BENCH_MEASURE_S (1.5),
 BENCH_SKIP (comma-list: fig2,fig3,fig4,fig5,table2,roofline,kernels).
 
-``--smoke`` runs ONLY the async-vs-sync planned-execution comparison on a
-tiny fixture and writes machine-readable ``BENCH_PR2.json`` (samples/sec,
-runs/sample, cache-hit rate for both modes) — fast enough for CI, so the
-async hot path is executed on every PR.  Exits nonzero if async planned
-execution fails to beat the synchronous path by the smoke floor (1.5x; the
-full fixture target is 2x).
+``--smoke`` runs ONLY the fast CI gates on a tiny fixture:
+
+1. async-vs-sync planned execution -> machine-readable ``BENCH_PR2.json``
+   (samples/sec, runs/sample, cache-hit rate for both modes); exits nonzero
+   if async fails to beat sync by ``SMOKE_FLOOR`` (1.5x; the full-fixture
+   target is 2x);
+2. the cloud request-semantics grid -> ``BENCH_PR3.json`` (per-profile
+   fitted per-request cost + recommended (b, f)); exits nonzero unless the
+   recommended fetch factor is non-decreasing in first-byte latency and
+   strictly larger at the high end (the paper-level claim that bigger
+   fetches amortize per-request cost).
 """
 from __future__ import annotations
 
@@ -32,6 +37,7 @@ def smoke() -> int:
     os.environ.setdefault("BENCH_N_CELLS", "50000")
     os.environ.setdefault("BENCH_N_GENES", "512")
     os.environ.setdefault("BENCH_ASYNC_BATCHES", "96")
+    os.environ.setdefault("BENCH_CLOUD_BATCHES", "16")
     print("name,us_per_call,derived")
     from benchmarks import bench_fig2_throughput
 
@@ -41,7 +47,14 @@ def smoke() -> int:
         f"# smoke: async {out['speedup']:.2f}x sync "
         f"(floor {SMOKE_FLOOR}x, full-bench target 2x) -> {'OK' if ok else 'FAIL'}"
     )
-    return 0 if ok else 1
+    cloud = bench_fig2_throughput.run_cloud(write_json=True)
+    cok = cloud["fetch_factor_monotone"]
+    print(
+        f"# smoke: cloud recommended f {cloud['fetch_factors']} over "
+        f"rising first-byte latency (must be non-decreasing and grow) "
+        f"-> {'OK' if cok else 'FAIL'}"
+    )
+    return 0 if (ok and cok) else 1
 
 
 def main() -> None:

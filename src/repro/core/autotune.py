@@ -48,22 +48,43 @@ _LN2 = float(np.log(2.0))
 @dataclasses.dataclass
 class IOCostModel:
     c0: float  # fixed per-fetch-call overhead (s)
-    c_seek: float  # per-random-block cost (s)
+    c_seek: float  # per-random-run cost (s) — per-REQUEST cost on cloud://
     c_byte: float  # per-byte streaming cost (s/B)
     row_bytes: float  # average materialized row size (B)
     # --- planner-level measurements (probe_collection); defaults = PR-1 model
     hit_rate: float = 0.0  # measured block-cache hit rate of the probe
     runs_per_sample: Optional[float] = None  # physical runs per row, measured
     cache_bytes: float = 0.0  # LRU budget the probe ran with
+    # --- request-semantics extensions (PR 3)
+    n_rows: float = 0.0  # collection size (enables the coalescing term); 0=off
+    requests_per_sample: float = 0.0  # per-request ops per row (cloud:// GETs)
+
+    def _coalesce_factor(self, k: float, b: int) -> float:
+        """Expected fraction of ``k`` drawn blocks that start a new run.
+
+        Drawing k of the N = n_rows/b blocks uniformly leaves
+        ``k * (N - k + 1) / N`` maximal runs in expectation — the paper's
+        plateau argument (once the fetch covers every block, the whole read
+        is one contiguous run).  This is what makes a larger fetch factor
+        pay on per-request storage: more blocks per fetch coalesce into
+        fewer (request-charged) physical reads per sample.
+        """
+        if self.n_rows <= 0:
+            return 1.0
+        N = max(float(k), self.n_rows / max(1, b))
+        return max(1.0 / k, (N - k + 1.0) / N)
 
     def fetch_seconds(self, m: int, f: int, b: int) -> float:
         rows = m * f
         miss = 1.0 - min(max(self.hit_rate, 0.0), 0.99)
-        n_seeks = max(1, rows // max(1, b)) * miss
+        k = max(1, rows // max(1, b))
+        coal = self._coalesce_factor(k, b)
+        n_seeks = k * coal * miss
         if self.runs_per_sample is not None:
             # Measured floor: the planner+cache never issued fewer physical
-            # runs per row than observed; don't extrapolate below it.
-            n_seeks = max(n_seeks, self.runs_per_sample * rows)
+            # runs per row than observed at the probe's scale; extrapolating
+            # below it is only allowed through the modeled coalescing gain.
+            n_seeks = max(n_seeks, self.runs_per_sample * rows * coal)
         return self.c0 + self.c_seek * n_seeks + self.c_byte * rows * self.row_bytes * miss
 
     def samples_per_sec(self, m: int, f: int, b: int) -> float:
@@ -131,6 +152,7 @@ def probe_collection(
     n = len(col)
     base = stats.snapshot()
     hits0, miss0 = stats.cache_hits, stats.cache_misses
+    req0 = stats.requests
     X, y = [], []
     prev_idx = None
     for _ in range(probes):
@@ -171,6 +193,8 @@ def probe_collection(
         hit_rate=d_hits / max(1, d_hits + d_miss),
         runs_per_sample=d_runs / max(1, d_rows),
         cache_bytes=float(col.cache.max_bytes),
+        n_rows=float(n),
+        requests_per_sample=(stats.requests - req0) / max(1, d_rows),
     )
 
 
@@ -196,6 +220,7 @@ def recommend(
     b_grid: Sequence[int] = (1, 4, 16, 64, 256, 1024),
     f_grid: Sequence[int] = (1, 4, 16, 64, 256, 1024),
     cache_hit_threshold: float = 0.05,
+    throughput_slack: float = 0.0,
 ) -> Recommendation:
     """Pick (b, f) maximizing modeled throughput under memory + diversity limits.
 
@@ -208,6 +233,15 @@ def recommend(
     typically the recommended f) shrinks accordingly, and the seek/byte
     terms of every candidate are discounted by the measured hit rate inside
     ``cost.fetch_seconds``.
+
+    Request-aware: ``throughput_slack > 0`` changes the selection rule from
+    "argmax modeled samples/sec" to "the SMALLEST fetch buffer within
+    ``throughput_slack`` of the best" — don't spend memory a cheap store
+    cannot repay.  On per-request storage (``cloud://``) the per-run cost
+    ``c_seek`` is the fitted per-request cost, so as first-byte latency
+    grows, small fetch factors fall out of the slack window and the
+    recommended f climbs toward the memory cap: the fig2 cloud grid's
+    monotonicity claim (BENCH_PR3.json) is exactly this effect.
     """
     m = batch_size
     K = num_classes
@@ -222,8 +256,8 @@ def recommend(
     # Thm 3.1 deficit at IID: (K-1)/(2 m ln2). We demand the *effective* deficit
     # (K-1)/(2 S_eff ln2) be within entropy_slack of it, where S_eff is the
     # effective sample size min(m, f*m/b) (blocks contributing to a batch).
-    best: Optional[Recommendation] = None
     iid_deficit = (K - 1) / (2.0 * m * _LN2)
+    feasible: list[tuple] = []  # (b, f, sps, buffer_bytes, deficit)
     for b in b_grid:
         for f in f_grid:
             buffer_bytes = m * f * cost.row_bytes
@@ -233,29 +267,39 @@ def recommend(
             deficit = (K - 1) / (2.0 * s_eff * _LN2)
             if deficit - iid_deficit > entropy_slack_bits:
                 continue
-            sps = cost.samples_per_sec(m, f, b)
-            if best is None or sps > best.modeled_samples_per_sec:
-                planner = (
-                    f", cache reserve {reserve/1e6:.0f}MB "
-                    f"(hit rate {cost.hit_rate:.2f}, "
-                    f"{cost.runs_per_sample if cost.runs_per_sample is not None else 0:.4f} runs/sample)"
-                    if reserve > 0
-                    else ""
-                )
-                best = Recommendation(
-                    block_size=b,
-                    fetch_factor=f,
-                    modeled_samples_per_sec=sps,
-                    entropy_lower_bound=-deficit,
-                    buffer_bytes=buffer_bytes,
-                    cache_reserved_bytes=reserve,
-                    rationale=(
-                        f"b={b},f={f}: buffer {buffer_bytes/1e6:.1f}MB <= "
-                        f"{buffer_budget/1e6:.0f}MB, entropy deficit "
-                        f"{deficit:.3f} bits (IID {iid_deficit:.3f}), modeled {sps:.0f} samp/s"
-                        f"{planner}"
-                    ),
-                )
-    if best is None:
+            feasible.append((b, f, cost.samples_per_sec(m, f, b), buffer_bytes, deficit))
+    if not feasible:
         raise ValueError("no (b, f) satisfies the memory/diversity constraints")
-    return best
+    best_sps = max(c[2] for c in feasible)
+    if throughput_slack > 0:
+        # leanest buffer that still lands within the slack of the best —
+        # memory a cheap store can't repay in throughput is not spent
+        window = [c for c in feasible if c[2] >= best_sps * (1.0 - throughput_slack)]
+        b, f, sps, buffer_bytes, deficit = min(
+            window, key=lambda c: (c[3], c[1], -c[2])
+        )
+    else:  # pure argmax (first strictly-greater in grid order, as before)
+        b, f, sps, buffer_bytes, deficit = next(
+            c for c in feasible if c[2] >= best_sps
+        )
+    planner = (
+        f", cache reserve {reserve/1e6:.0f}MB "
+        f"(hit rate {cost.hit_rate:.2f}, "
+        f"{cost.runs_per_sample if cost.runs_per_sample is not None else 0:.4f} runs/sample)"
+        if reserve > 0
+        else ""
+    )
+    return Recommendation(
+        block_size=b,
+        fetch_factor=f,
+        modeled_samples_per_sec=sps,
+        entropy_lower_bound=-deficit,
+        buffer_bytes=buffer_bytes,
+        cache_reserved_bytes=reserve,
+        rationale=(
+            f"b={b},f={f}: buffer {buffer_bytes/1e6:.1f}MB <= "
+            f"{buffer_budget/1e6:.0f}MB, entropy deficit "
+            f"{deficit:.3f} bits (IID {iid_deficit:.3f}), modeled {sps:.0f} samp/s"
+            f"{planner}"
+        ),
+    )

@@ -1,75 +1,34 @@
 """repro.data — storage substrates behind one unified backend layer.
 
-Formats: on-disk CSR (AnnData-like, single or sharded), Zarr-style chunked
-dense, flat token streams, plus the synthetic Tahoe-like generator.  All of
-them are reachable through the **Collection protocol** via
+Every format is reachable through the **Collection protocol** via
 :func:`open_collection`, which wraps the format's adapter in a
 :class:`~repro.data.backend.PlannedCollection`: fetches are coalesced by the
 shared cross-shard read planner and served through a byte-budgeted LRU block
-cache, with one :class:`IOStats` counting runs / bytes / cache hits
-uniformly (see :mod:`repro.data.readplan`).
+cache, with one :class:`IOStats` counting runs / bytes / requests / cache
+hits uniformly (see :mod:`repro.data.readplan`).
 
-Backend-registry contract — what a new storage format must implement
---------------------------------------------------------------------
-Subclass :class:`~repro.data.backend.StorageAdapter` and register an opener:
+Registered URI schemes (see the README's scheme table):
 
-1. ``__len__()`` — total rows.
-2. ``read_range(start, stop)`` — ONE contiguous physical read returning the
-   format's batch type (CSRBatch, ndarray, dict of arrays).  It never
-   crosses an interior boundary and must NOT record IOStats — the planner
-   accounts for every read it issues.
-3. ``boundaries()`` — ascending offsets ``[0, ..., n]`` of physical extents
-   (shard/chunk edges); the planner splits runs there.  ``None`` = one
-   uninterrupted extent.
-4. ``take(piece, rows)`` / ``concat(pieces)`` — row-index (duplicates and
-   order preserved) and concatenate the batch type.
-5. ``nbytes_of(rows)`` / ``avg_row_bytes`` — payload size estimates (cache
-   budgeting, autotuning).
-6. ``schema`` (+ optional ``obs_keys`` / ``obs_column``) — what a batch
-   looks like, for consumers that introspect.
-7. Register it: ``@register_backend("myformat")`` on an opener
-   ``(path, **query_opts) -> StorageAdapter``; users then call
-   ``open_collection("myformat://path?opt=x")``.
+========================  ===================================================
+``csr://``                one on-disk CSR shard (AnnData-like ``.npy`` trio)
+``sharded-csr://``        lazy concat of CSR shards (Tahoe plate files)
+``chunked://``            Zarr-style chunked dense store
+``tokens://``             flat token stream viewed as sequences
+``h5ad://``               real AnnData/HDF5 files (h5py or pure-Python shim)
+``cloud://<inner-uri>``   any of the above behind object-store request
+                          semantics (first-byte latency, bandwidth,
+                          ``max_inflight``) — :mod:`repro.data.cloud`
+========================  ===================================================
 
-Planner/cache knobs on :func:`open_collection`: ``cache_bytes`` (LRU byte
-budget; 0 disables caching), ``block_rows`` (cache granularity; fetches are
-rounded to block extents), ``max_extent_rows`` (cap on a single physical
-read; None = unbounded).  Knobs may also ride in the URI query string
-(``...?cache_bytes=0&max_extent_rows=none``); explicit keyword arguments
-win, and unknown query keys are rejected by the opener, never dropped.
-
-Async execution knobs (PR 2) — all OFF by default; the synchronous path is
-the bit-exact reference and the async path is guaranteed to deliver the
-identical batch sequence:
-
-- ``io_workers`` (default 1): >1 executes one fetch's miss extents
-  concurrently on a shared bounded thread pool.  The adapter contract is
-  unchanged — ``read_range`` must merely be safe to call from multiple
-  threads (mmap/numpy reads are); pieces are gathered in plan order, so
-  assembly stays deterministic.  Leave at 1 when the store is purely
-  page-cached memory (nothing to overlap — threads only add overhead).
-- ``readahead`` (default 0): >0 lets ``ScDataset`` issue that many upcoming
-  fetches' read plans in the background (double buffering) via
-  ``PlannedCollection.prefetch``.  In-flight blocks are registered in a
-  rendezvous table; any fetch needing one waits on its future instead of
-  re-reading, so readahead never duplicates physical reads.  Needs a live
-  cache (``cache_bytes > 0``) sized to hold at least ``readahead + 1``
-  fetches' blocks, or prefetched data is evicted before it is consumed.
-- ``admission`` (default ``"always"``): ``"auto"`` watches the block-access
-  pattern (:class:`~repro.data.readplan.StreamDetector`) and bypasses LRU
-  insertion during forward-streaming epochs — a pure stream touches every
-  block exactly once, so caching it churns the LRU for zero hits (only each
-  fetch's last, possibly-straddled block is kept).  ``"never"`` disables LRU
-  retention outright.  Leave on ``"always"`` for redraw-heavy samplers
-  (weighted / class-balanced), where LRU reuse is the point.  Interactions:
-  blocks staged by readahead transit the cache marked as prefetched — their
-  first consumption counts in ``IOStats.prefetched`` (never as a cache hit,
-  so readahead cannot inflate the hit rate autotune consumes), and under a
-  bypassing policy (``never`` or detected stream) the entry is dropped as
-  soon as the consuming fetch has it; staging never consumed (abandoned
-  epoch) is dropped by ``close()``.  Under concurrent PrefetchPool
-  workers the stream detector sees interleaved fetch order and conservatively
-  stays off (plain LRU) rather than ever bypassing wrongly.
+**Writing a new storage adapter** — the full authoring guide, with the
+``h5ad://`` adapter as its worked example, lives in ``docs/adapters.md``.
+Short form: subclass :class:`~repro.data.backend.StorageAdapter`
+(``__len__``, one-contiguous-extent ``read_range``, ``boundaries``,
+``take``/``concat`` on your batch type, ``nbytes_of``/``avg_row_bytes``,
+``schema``), register an opener with ``@register_backend("scheme")``, and
+the planner, cache, async execution, accounting and benchmarks come for
+free.  Planner and async knobs on :func:`open_collection` are documented on
+that function and in ``docs/architecture.md``.
 """
 from .backend import (
     ChunkedAdapter,
@@ -79,15 +38,25 @@ from .backend import (
     ShardedCSRAdapter,
     StorageAdapter,
     TokenAdapter,
+    open_adapter,
     open_collection,
     register_backend,
     registered_schemes,
 )
 from .chunked_store import ChunkedStore, write_chunked_store
+from .cloud import CLOUD_PROFILES, CloudAdapter, CloudProfile
 from .csr_store import CSRBatch, CSRStore, ShardedCSRStore, write_csr_shard
+from .h5ad import H5adAdapter, H5adStore
 from .iostats import CLOUD_OBJECT, NVME_SSD, SATA_SSD, IOStats, PendingIO, StorageModel
 from .readplan import BlockCache, StreamDetector, coalesce_rows, plan_reads
-from .synth import TAHOE_PLATE_FRACS, generate_tahoe_like, load_tahoe_like
+from .synth import (
+    TAHOE_PLATE_FRACS,
+    csr_shard_to_h5ad,
+    generate_h5ad_like,
+    generate_tahoe_like,
+    load_tahoe_like,
+    write_h5ad,
+)
 from .tokens import TokenStore, generate_token_corpus
 
 __all__ = [
@@ -97,6 +66,14 @@ __all__ = [
     "write_csr_shard",
     "ChunkedStore",
     "write_chunked_store",
+    "H5adStore",
+    "H5adAdapter",
+    "write_h5ad",
+    "csr_shard_to_h5ad",
+    "generate_h5ad_like",
+    "CloudProfile",
+    "CloudAdapter",
+    "CLOUD_PROFILES",
     "IOStats",
     "PendingIO",
     "StorageModel",
@@ -110,6 +87,7 @@ __all__ = [
     "ChunkedAdapter",
     "TokenAdapter",
     "PlannedCollection",
+    "open_adapter",
     "open_collection",
     "register_backend",
     "registered_schemes",

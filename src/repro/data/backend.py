@@ -55,6 +55,7 @@ __all__ = [
     "PlannedCollection",
     "register_backend",
     "registered_schemes",
+    "open_adapter",
     "open_collection",
     "piece_nbytes",
 ]
@@ -140,6 +141,21 @@ class StorageAdapter:
 
     def obs_column(self, key: str) -> np.ndarray:
         raise KeyError(key)
+
+    def bind_iostats(self, iostats: IOStats) -> None:
+        """Called once by :class:`PlannedCollection` with the shared stats.
+
+        Default: ignore.  Adapters with accounting dimensions the planner
+        cannot see (``cloud://`` counts one *request* per ``read_range``)
+        record them through this handle — never runs/bytes, which the
+        planner counts itself.
+        """
+
+    def close(self) -> None:
+        """Release OS resources (file handles).  Default: nothing to do
+        (mmap-backed stores release on GC).  Reached through
+        :meth:`PlannedCollection.release`; ``read_range`` after close may
+        raise.  Wrappers must delegate to their inner adapter."""
 
 
 # --------------------------------------------------------------------- CSR
@@ -397,6 +413,7 @@ class PlannedCollection:
             raise ValueError("readahead > 0 requires cache_bytes > 0")
         self.adapter = adapter
         self.iostats = iostats if iostats is not None else IOStats()
+        adapter.bind_iostats(self.iostats)
         self.cache = BlockCache(cache_bytes)
         self.block_rows = int(block_rows)
         self.max_extent_rows = max_extent_rows
@@ -435,7 +452,9 @@ class PlannedCollection:
     def close(self) -> None:
         """Shut down the I/O executor and drop any unconsumed prefetch
         staging.  Permanent: stragglers still iterating fall back to
-        synchronous reads rather than resurrecting a leaked executor."""
+        synchronous reads rather than resurrecting a leaked executor.
+        Adapter file handles stay open for those stragglers — use
+        :meth:`release` when the collection is truly done."""
         with self._exec_lock:
             self._closed = True
             ex, self._executor = self._executor, None
@@ -445,6 +464,13 @@ class PlannedCollection:
             marks, self._pf_marks = self._pf_marks, set()
         for b in marks:  # staged-but-never-consumed blocks must not linger
             self.cache.discard(b)
+
+    def release(self) -> None:
+        """:meth:`close` + release the adapter's OS resources (``h5ad://``
+        file descriptors / HDF5 handles).  Unlike ``close``, the collection
+        must NOT be used afterwards — subsequent fetches may raise."""
+        self.close()
+        self.adapter.close()
 
     def __len__(self) -> int:
         return len(self.adapter)
@@ -493,6 +519,14 @@ class PlannedCollection:
         nb = piece_nbytes(piece)
         self.iostats.sleep_for(runs=1, bytes_read=nb)
         return piece, nb
+
+    def _read_one_for(self, lo: int, hi: int, pend) -> tuple[Any, int]:
+        """Pool-thread read on behalf of a (possibly deferred) consumer:
+        per-thread recording inside ``read_range`` (cloud request counters)
+        must land in the CONSUMER's capture buffer, or a speculative
+        duplicate's requests would pollute the delivered-data totals."""
+        with self.iostats.borrowed_pending(pend):
+            return self._read_one(lo, hi)
 
     def _cache_put(
         self, block: int, val: Any, *, last_block: int, streaming: bool
@@ -618,7 +652,11 @@ class PlannedCollection:
             spans = self._spans_for_blocks(np.asarray(missing))
             pool = self._pool()
             if pool is not None and self.io_workers > 1 and len(spans) > 1:
-                read_futs = [pool.submit(self._read_one, lo, hi) for lo, hi in spans]
+                pend = self.iostats.current_pending()
+                read_futs = [
+                    pool.submit(self._read_one_for, lo, hi, pend)
+                    for lo, hi in spans
+                ]
 
         # ---- assembly prep: overlaps with in-flight miss reads -----------
         order = np.argsort(rows, kind="stable")
@@ -864,7 +902,18 @@ def _open_tokens(path: str, *, seq_len=None) -> TokenAdapter:
 
 
 def _sniff_scheme(path: str) -> str:
-    """Detect the backend of a bare directory path from its on-disk layout."""
+    """Detect the backend of a bare path from its on-disk layout.
+
+    Files: anything named ``*.h5ad`` — or carrying the HDF5 signature —
+    is an AnnData file.  Directories: layout markers as before.
+    """
+    if os.path.isfile(path):
+        if path.endswith(".h5ad"):
+            return "h5ad"
+        with open(path, "rb") as f:
+            if f.read(8) == b"\x89HDF\r\n\x1a\n":
+                return "h5ad"
+        raise ValueError(f"cannot detect a storage backend for file {path!r}")
     if os.path.exists(os.path.join(path, "manifest.json")):
         return "sharded-csr"
     meta_path = os.path.join(path, "meta.json")
@@ -881,6 +930,34 @@ def _sniff_scheme(path: str) -> str:
 
 
 _UNSET = object()  # distinguishes "not passed" from meaningful None/0
+
+
+def _parse_uri(uri: str, opts: dict) -> tuple[str, str, dict]:
+    """``scheme://path[?k=v...]`` (or bare sniffed path) -> (scheme, path,
+    merged opts).  Explicit ``opts`` win over query-string duplicates."""
+    if "://" in uri:
+        scheme, rest = uri.split("://", 1)
+    else:
+        scheme, rest = _sniff_scheme(uri), uri
+    if "?" in rest:
+        rest, query = rest.split("?", 1)
+        opts = {**dict(urllib.parse.parse_qsl(query)), **opts}
+    if scheme not in _REGISTRY:
+        raise ValueError(
+            f"unknown backend scheme {scheme!r}; known: {registered_schemes()}"
+        )
+    return scheme, rest, opts
+
+
+def open_adapter(uri: str, **opts) -> StorageAdapter:
+    """Resolve a URI to its RAW adapter — no planner, no cache, no stats.
+
+    The building block for wrapping adapters (``cloud://`` opens its inner
+    URI through this) and for tests that poke the adapter contract directly.
+    Everything user-facing should use :func:`open_collection` instead.
+    """
+    scheme, rest, opts = _parse_uri(uri, opts)
+    return _REGISTRY[scheme](rest, **opts)
 
 
 def open_collection(
@@ -913,15 +990,7 @@ def open_collection(
     the opener, which rejects what it does not understand — nothing is
     silently dropped.
     """
-    if "://" in uri:
-        scheme, rest = uri.split("://", 1)
-    else:
-        scheme, rest = _sniff_scheme(uri), uri
-    if "?" in rest:
-        rest, query = rest.split("?", 1)
-        opts = {**dict(urllib.parse.parse_qsl(query)), **opts}
-    if scheme not in _REGISTRY:
-        raise ValueError(f"unknown backend scheme {scheme!r}; known: {registered_schemes()}")
+    scheme, rest, opts = _parse_uri(uri, opts)
 
     def knob(kwarg, key: str, default, allow_none: bool = False, cast=int):
         if kwarg is not _UNSET:

@@ -1,0 +1,183 @@
+"""``cloud://`` — latency-injected object-store adapter (request semantics).
+
+Object stores (S3/GCS-style) charge per *request*, not per byte: every GET
+pays a first-byte latency regardless of size, streams at some per-request
+bandwidth, and the client caps concurrent requests in flight.  This adapter
+wraps ANY inner adapter with exactly those semantics, so the planner, cache,
+readahead and autotuner can be exercised — and measured — against
+cloud-bucket cost structure without a bucket:
+
+- each ``read_range`` is one simulated GET: sleep ``first_byte_s +
+  nbytes / bw_Bps`` (times ``scale``) while holding one of ``max_inflight``
+  semaphore slots, so concurrency is bounded like a real client's connection
+  pool and overlap shows up in wall-clock;
+- every request is counted in :class:`~repro.data.iostats.IOStats` —
+  ``requests`` / ``request_wait_s`` — via the adapter's bound stats, so the
+  request totals sit beside runs/bytes in every snapshot.  Requests deduped
+  by the planner's rendezvous table are never issued, hence counted once.
+
+URI form wraps the inner URI: ``cloud://sharded-csr:///data/tahoe`` or
+``cloud://h5ad:///data/cells.h5ad?profile=cross-region``.  Cloud knobs ride
+the query string (``profile``, ``first_byte_ms``, ``bw_mbps``,
+``max_inflight``, ``latency_scale``); everything else is forwarded to the
+inner opener.  Use ``latency_scale`` to shrink sleeps in CI while keeping
+ratios; pair with a plain IOStats (no ``simulate`` model) or the per-read
+storage-model sleep would double-bill the latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+from .backend import StorageAdapter, open_adapter, piece_nbytes, register_backend
+from .iostats import IOStats
+
+__all__ = ["CloudProfile", "CLOUD_PROFILES", "CloudAdapter"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CloudProfile:
+    """Per-request cost model of one object-store tier.
+
+    ``first_byte_s`` — time to first byte of every GET (network RTT + service
+    latency); ``bw_Bps`` — per-request streaming bandwidth once data flows;
+    ``max_inflight`` — concurrent-request cap (client connection pool /
+    service throttle); ``scale`` — multiplier on the slept latency (keep
+    ratios, shrink wall-clock for tests and CI).
+    """
+
+    name: str
+    first_byte_s: float
+    bw_Bps: float
+    max_inflight: int = 64
+    scale: float = 1.0
+
+    def request_seconds(self, nbytes: int) -> float:
+        """Modeled duration of ONE GET of ``nbytes`` (unscaled)."""
+        return self.first_byte_s + nbytes / self.bw_Bps
+
+    def replace(self, **kw) -> "CloudProfile":
+        return dataclasses.replace(self, **kw)
+
+
+#: Named tiers for the fig2 cloud grid: first-byte latency spans ~2 orders
+#: of magnitude while bandwidth degrades, mirroring local SSD -> same-region
+#: object store -> cross-region -> archive-class retrieval.
+CLOUD_PROFILES: dict[str, CloudProfile] = {
+    p.name: p
+    for p in (
+        CloudProfile("local-ssd", first_byte_s=0.0008, bw_Bps=3.2e9, max_inflight=256),
+        CloudProfile("same-region", first_byte_s=0.008, bw_Bps=800e6, max_inflight=64),
+        CloudProfile("cross-region", first_byte_s=0.030, bw_Bps=200e6, max_inflight=32),
+        CloudProfile("cold-archive", first_byte_s=0.090, bw_Bps=100e6, max_inflight=16),
+    )
+}
+
+
+class CloudAdapter(StorageAdapter):
+    """Wrap an inner adapter with per-request object-store semantics.
+
+    Pure pass-through for batch algebra (``take``/``concat``/``nbytes_of``
+    and metadata all delegate), so the wrapped collection is bit-identical
+    to the inner one — only the timing and the request accounting change.
+    """
+
+    def __init__(self, inner: StorageAdapter, profile: CloudProfile):
+        if profile.max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
+        self.inner = inner
+        self.profile = profile
+        self._sem = threading.Semaphore(int(profile.max_inflight))
+        self._iostats: Optional[IOStats] = None
+
+    # ----------------------------------------------------- request path
+    def bind_iostats(self, iostats: IOStats) -> None:
+        self._iostats = iostats
+        self.inner.bind_iostats(iostats)
+
+    def read_range(self, start: int, stop: int) -> Any:
+        """ONE GET: bounded by ``max_inflight``, slept in the calling thread
+        (so ``io_workers`` overlap requests exactly like a real client), and
+        counted once in ``IOStats.requests``.  Queueing for a free request
+        slot is part of the recorded wait — that is the throttling a real
+        connection pool imposes."""
+        t0 = time.perf_counter()
+        with self._sem:
+            piece = self.inner.read_range(start, stop)
+            wait = self.profile.request_seconds(piece_nbytes(piece)) * self.profile.scale
+            if wait > 0:
+                time.sleep(wait)
+        if self._iostats is not None:
+            self._iostats.record_request(1, wait_s=time.perf_counter() - t0)
+        return piece
+
+    # ------------------------------------------------------ delegation
+    def __len__(self) -> int:
+        return len(self.inner)
+
+    def boundaries(self) -> Optional[np.ndarray]:
+        return self.inner.boundaries()
+
+    def take(self, piece: Any, rows: np.ndarray) -> Any:
+        return self.inner.take(piece, rows)
+
+    def concat(self, pieces: Sequence[Any]) -> Any:
+        return self.inner.concat(pieces)
+
+    def nbytes_of(self, rows: np.ndarray) -> int:
+        return self.inner.nbytes_of(rows)
+
+    @property
+    def avg_row_bytes(self) -> float:
+        return self.inner.avg_row_bytes
+
+    @property
+    def schema(self) -> dict:
+        return {
+            **self.inner.schema,
+            "cloud_profile": self.profile.name,
+            "first_byte_s": self.profile.first_byte_s,
+            "max_inflight": self.profile.max_inflight,
+        }
+
+    def obs_keys(self) -> list[str]:
+        return self.inner.obs_keys()
+
+    def obs_column(self, key: str) -> np.ndarray:
+        return self.inner.obs_column(key)
+
+    def close(self) -> None:
+        self.inner.close()
+
+
+@register_backend("cloud")
+def _open_cloud(
+    inner_uri: str,
+    *,
+    profile: str = "same-region",
+    first_byte_ms=None,
+    bw_mbps=None,
+    max_inflight=None,
+    latency_scale=None,
+    **inner_opts,
+) -> CloudAdapter:
+    """Opener: ``cloud://<inner-uri>`` — unknown options forward to the
+    inner opener, cloud knobs override fields of the named profile."""
+    if profile not in CLOUD_PROFILES:
+        raise ValueError(
+            f"unknown cloud profile {profile!r}; known: {sorted(CLOUD_PROFILES)}"
+        )
+    prof = CLOUD_PROFILES[profile]
+    if first_byte_ms is not None:
+        prof = prof.replace(first_byte_s=float(first_byte_ms) / 1e3)
+    if bw_mbps is not None:
+        prof = prof.replace(bw_Bps=float(bw_mbps) * 1e6)
+    if max_inflight is not None:
+        prof = prof.replace(max_inflight=int(max_inflight))
+    if latency_scale is not None:
+        prof = prof.replace(scale=float(latency_scale))
+    return CloudAdapter(open_adapter(inner_uri, **inner_opts), prof)

@@ -59,8 +59,16 @@ class PendingIO:
     cache_hits: int = 0
     cache_misses: int = 0
     prefetched: int = 0
+    requests: int = 0
     wall_s: float = 0.0
     modeled_s: float = 0.0
+    request_wait_s: float = 0.0
+
+    def __post_init__(self):
+        # a deferred fetch's pool-thread reads may record requests into this
+        # buffer concurrently (IOStats.borrowed_pending); not a field, so
+        # asdict/eq are unaffected
+        self._lock = threading.Lock()
 
 
 @dataclasses.dataclass
@@ -78,6 +86,15 @@ class IOStats:
     ``prefetched`` counts blocks a fetch obtained by waiting on an in-flight
     background read (readahead rendezvous) — served without a new physical
     read, but not a cache hit either.
+
+    ``requests`` counts per-request storage operations (one object-store GET
+    each), recorded by request-semantics adapters (``cloud://``) via
+    :meth:`record_request` — a *subset view* of ``runs``: every request is a
+    run, but local backends issue runs that are not requests.
+    ``request_wait_s`` accumulates each request's full duration as observed
+    by its calling thread (first-byte latency + bandwidth + queueing for an
+    in-flight slot); concurrent requests overlap, so this can exceed wall
+    time.
     """
 
     calls: int = 0
@@ -87,6 +104,8 @@ class IOStats:
     cache_hits: int = 0  # planner block-cache hits (block granularity)
     cache_misses: int = 0
     prefetched: int = 0  # blocks served by readahead rendezvous
+    requests: int = 0  # per-request adapter ops (cloud:// GETs)
+    request_wait_s: float = 0.0  # summed per-request durations (overlappable)
     wall_s: float = 0.0
     simulate: Optional[StorageModel] = None
     simulate_scale: float = 1.0
@@ -99,6 +118,8 @@ class IOStats:
     spec_cache_hits: int = 0
     spec_cache_misses: int = 0
     spec_prefetched: int = 0
+    spec_requests: int = 0
+    spec_request_wait_s: float = 0.0
     spec_wall_s: float = 0.0
     spec_modeled_s: float = 0.0
 
@@ -132,15 +153,16 @@ class IOStats:
         dt = self.simulate.seconds(runs, bytes_read) if self.simulate is not None else 0.0
         pend: Optional[PendingIO] = getattr(self._tl, "pending", None)
         if pend is not None:
-            pend.calls += calls
-            pend.runs += runs
-            pend.rows += rows
-            pend.bytes_read += bytes_read
-            pend.cache_hits += cache_hits
-            pend.cache_misses += cache_misses
-            pend.prefetched += prefetched
-            pend.wall_s += wall_s
-            pend.modeled_s += dt
+            with pend._lock:
+                pend.calls += calls
+                pend.runs += runs
+                pend.rows += rows
+                pend.bytes_read += bytes_read
+                pend.cache_hits += cache_hits
+                pend.cache_misses += cache_misses
+                pend.prefetched += prefetched
+                pend.wall_s += wall_s
+                pend.modeled_s += dt
         else:
             with self._lock:
                 self.calls += calls
@@ -157,6 +179,25 @@ class IOStats:
         if not slept and self.simulate is not None and self.simulate_scale > 0:
             time.sleep(dt * self.simulate_scale)
 
+    def record_request(self, n: int = 1, *, wait_s: float = 0.0) -> None:
+        """Account ``n`` per-request storage operations (object-store GETs).
+
+        Called by request-semantics adapters from the reading thread — one
+        call per physical ``read_range``, so requests the planner never
+        issued (cache hits, rendezvous-deduped blocks) are never counted.
+        Respects :meth:`deferred` capture like :meth:`record` does, so a
+        speculative duplicate's requests land in ``spec_requests``.
+        """
+        pend: Optional[PendingIO] = getattr(self._tl, "pending", None)
+        if pend is not None:
+            with pend._lock:
+                pend.requests += n
+                pend.request_wait_s += wait_s
+        else:
+            with self._lock:
+                self.requests += n
+                self.request_wait_s += wait_s
+
     def sleep_for(self, runs: int, bytes_read: int) -> None:
         """Sleep the simulated latency of one physical read, in the reading
         thread — concurrent reads overlap their modeled latency exactly like
@@ -164,6 +205,30 @@ class IOStats:
         ``record(..., slept=True)``."""
         if self.simulate is not None and self.simulate_scale > 0:
             time.sleep(self.simulate.seconds(runs, bytes_read) * self.simulate_scale)
+
+    def current_pending(self) -> Optional[PendingIO]:
+        """This thread's active :meth:`deferred` buffer, if any — pass it to
+        :meth:`borrowed_pending` on worker threads doing this fetch's reads."""
+        return getattr(self._tl, "pending", None)
+
+    @contextlib.contextmanager
+    def borrowed_pending(self, pend: Optional[PendingIO]) -> Iterator[None]:
+        """Install another thread's capture buffer for the duration.
+
+        A deferred (possibly speculative) fetch executes its miss extents on
+        the shared I/O pool; reads that record per-thread (the ``cloud://``
+        request counters) would otherwise escape the capture and pollute the
+        delivered-data totals.  No-op when ``pend`` is None or this thread
+        is already capturing (the consumer thread reading its own spans).
+        """
+        if pend is None or getattr(self._tl, "pending", None) is not None:
+            yield
+            return
+        self._tl.pending = pend
+        try:
+            yield
+        finally:
+            self._tl.pending = None
 
     @contextlib.contextmanager
     def deferred(self) -> Iterator[PendingIO]:
@@ -194,11 +259,13 @@ class IOStats:
         with self._lock:
             self.calls = self.runs = self.rows = self.bytes_read = 0
             self.cache_hits = self.cache_misses = self.prefetched = 0
-            self.wall_s = self.modeled_s = 0.0
+            self.requests = 0
+            self.wall_s = self.modeled_s = self.request_wait_s = 0.0
             self.spec_calls = self.spec_runs = self.spec_rows = 0
             self.spec_bytes_read = 0
             self.spec_cache_hits = self.spec_cache_misses = 0
-            self.spec_prefetched = 0
+            self.spec_prefetched = self.spec_requests = 0
+            self.spec_request_wait_s = 0.0
             self.spec_wall_s = self.spec_modeled_s = 0.0
 
     @property
@@ -215,6 +282,8 @@ class IOStats:
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
             "prefetched": self.prefetched,
+            "requests": self.requests,
+            "request_wait_s": self.request_wait_s,
             "wall_s": self.wall_s,
             "modeled_s": self.modeled_s,
             "spec_calls": self.spec_calls,
@@ -224,6 +293,8 @@ class IOStats:
             "spec_cache_hits": self.spec_cache_hits,
             "spec_cache_misses": self.spec_cache_misses,
             "spec_prefetched": self.spec_prefetched,
+            "spec_requests": self.spec_requests,
+            "spec_request_wait_s": self.spec_request_wait_s,
             "spec_wall_s": self.spec_wall_s,
             "spec_modeled_s": self.spec_modeled_s,
         }

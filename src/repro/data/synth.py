@@ -24,9 +24,16 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .csr_store import ShardedCSRStore, write_csr_shard
+from .csr_store import CSRStore, ShardedCSRStore, write_csr_shard
 
-__all__ = ["generate_tahoe_like", "load_tahoe_like", "TAHOE_PLATE_FRACS"]
+__all__ = [
+    "generate_tahoe_like",
+    "load_tahoe_like",
+    "write_h5ad",
+    "csr_shard_to_h5ad",
+    "generate_h5ad_like",
+    "TAHOE_PLATE_FRACS",
+]
 
 # Plate size fractions consistent with paper §3.4 (min 4.7%, max 10.4%, H=3.78).
 TAHOE_PLATE_FRACS = np.array(
@@ -177,3 +184,104 @@ def load_tahoe_like(root: str, iostats=None) -> ShardedCSRStore:
         manifest = json.load(f)
     paths = [os.path.join(root, s) for s in manifest["shards"]]
     return ShardedCSRStore(paths, iostats=iostats)
+
+
+# ------------------------------------------------------------- h5ad fixtures
+def write_h5ad(
+    path: str,
+    data: np.ndarray,
+    indices: np.ndarray,
+    indptr: np.ndarray,
+    n_var: int,
+    obs: Optional[dict] = None,
+    extra_x_attrs: Optional[dict] = None,
+) -> None:
+    """Emit a valid AnnData ``.h5ad`` file from raw CSR arrays.
+
+    Pure Python (the :mod:`repro.data.h5shim` writer) — no h5py required, so
+    fixture generation works in CI; when h5py/anndata ARE installed they
+    open the output natively (cross-validated in the test suite).  The
+    layout is the h5ad CSR encoding: ``X/data|indices|indptr`` with
+    ``encoding-type='csr_matrix'`` and ``shape`` attrs, numeric ``obs``
+    columns (one dataset each, plus an integer ``_index``), and a ``var``
+    group with ``_index`` carrying ``n_var``.
+    """
+    from .h5shim import GroupSpec, write_shim_file
+
+    indptr = np.asarray(indptr, dtype=np.int64)
+    n_obs = len(indptr) - 1
+    obs = {k: np.asarray(v) for k, v in (obs or {}).items()}
+    for k, v in obs.items():
+        if len(v) != n_obs:
+            raise ValueError(f"obs column {k!r} has {len(v)} rows, X has {n_obs}")
+    df_attrs = {
+        "encoding-type": "dataframe",
+        "encoding-version": "0.2.0",
+        "_index": "_index",
+    }
+    root = GroupSpec(
+        children={
+            "X": GroupSpec(
+                children={
+                    "data": np.asarray(data, dtype=np.float32),
+                    "indices": np.asarray(indices, dtype=np.int32),
+                    "indptr": indptr,
+                },
+                attrs={
+                    "encoding-type": "csr_matrix",
+                    "encoding-version": "0.1.0",
+                    "shape": np.array([n_obs, int(n_var)], dtype=np.int64),
+                    **(extra_x_attrs or {}),
+                },
+            ),
+            "obs": GroupSpec(
+                children={"_index": np.arange(n_obs, dtype=np.int64), **obs},
+                attrs=df_attrs,
+            ),
+            "var": GroupSpec(
+                children={"_index": np.arange(int(n_var), dtype=np.int64)},
+                attrs=df_attrs,
+            ),
+        },
+        attrs={"encoding-type": "anndata", "encoding-version": "0.1.0"},
+    )
+    write_shim_file(path, root)
+
+
+def csr_shard_to_h5ad(shard_path: str, h5ad_path: str) -> str:
+    """Export one on-disk CSR shard (``write_csr_shard`` layout) to
+    ``.h5ad`` — same rows, same values, same obs columns, so the two
+    backends must round-trip bit-identically (tested)."""
+    store = CSRStore(shard_path)
+    write_h5ad(
+        h5ad_path,
+        np.asarray(store._data),
+        np.asarray(store._indices),
+        store._indptr,
+        store.n_var,
+        obs=store.obs,
+    )
+    return h5ad_path
+
+
+def generate_h5ad_like(
+    path: str,
+    *,
+    n_cells: int = 20_000,
+    n_genes: int = 512,
+    seed: int = 0,
+    **gen_kwargs,
+) -> str:
+    """One-file h5ad fixture with Tahoe-like structure: generates a
+    single-plate synthetic dataset and exports it as ``.h5ad``.  Idempotent
+    like :func:`generate_tahoe_like` (the underlying shard is reused)."""
+    root = path + ".shards"
+    shards = generate_tahoe_like(
+        root, n_cells=n_cells, n_genes=n_genes, n_plates=1,
+        plate_fracs=[1.0], seed=seed, **gen_kwargs,
+    )
+    if not os.path.exists(path) or os.path.getmtime(path) < os.path.getmtime(
+        os.path.join(root, "manifest.json")
+    ):
+        csr_shard_to_h5ad(shards[0], path)
+    return path

@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Docs-freshness gate (run in CI; see .github/workflows/ci.yml).
+
+Two checks keep README.md honest against the code:
+
+1. **Scheme table coverage** — import the live backend registry
+   (``repro.data.registered_schemes``) and fail if any registered URI scheme
+   is missing from the README (a new ``@register_backend`` without a row in
+   the storage-backends table fails the build, not a reviewer's memory).
+2. **Executable quickstart** — extract the FIRST fenced ``python`` block
+   from the README and ``exec`` it.  The snippet is the repo's front door;
+   if it drifts from the API it breaks here, loudly.
+
+Exit code 0 = docs fresh; nonzero with a pointed message otherwise.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+README = os.path.join(REPO, "README.md")
+
+
+def check_scheme_table(readme_text: str) -> list[str]:
+    """Every registered scheme must appear as `scheme://` in the README."""
+    from repro.data import registered_schemes
+
+    missing = [
+        s for s in registered_schemes() if f"`{s}://" not in readme_text
+    ]
+    return missing
+
+
+def extract_quickstart(readme_text: str) -> str:
+    m = re.search(r"```python\n(.*?)```", readme_text, flags=re.DOTALL)
+    if m is None:
+        raise SystemExit("FAIL: README.md has no ```python quickstart block")
+    return m.group(1)
+
+
+def run_quickstart(snippet: str) -> None:
+    code = compile(snippet, "README.md:quickstart", "exec")
+    exec(code, {"__name__": "__quickstart__"})
+
+
+def main() -> int:
+    with open(README) as f:
+        text = f.read()
+
+    missing = check_scheme_table(text)
+    if missing:
+        print(
+            f"FAIL: registered scheme(s) missing from README.md's "
+            f"storage-backends table: {missing}\n"
+            "      add a row per scheme (format: | `scheme://` | ... |)"
+        )
+        return 1
+    from repro.data import registered_schemes
+
+    print(f"OK: all {len(registered_schemes())} registered schemes documented "
+          f"({', '.join(registered_schemes())})")
+
+    snippet = extract_quickstart(text)
+    try:
+        run_quickstart(snippet)
+    except Exception as e:  # noqa: BLE001 - report, fail the gate
+        print(f"FAIL: README quickstart snippet raised {type(e).__name__}: {e}")
+        raise
+    print("OK: README quickstart snippet executed end to end")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
