@@ -35,6 +35,12 @@ near-optimal configuration.  Claim under test: the recommended fetch factor
 grows monotonically with first-byte latency — big fetches amortize
 per-request cost, so the pricier each GET, the more rows one should fetch
 per call.  Results land in machine-readable ``BENCH_PR3.json``.
+
+``run_pipeline_parity`` (PR 4) guards the declarative surface: the shared
+comparison cell built through ``repro.pipeline`` must match the hand-wired
+``open_collection`` + ``ScDataset`` construction — samples/sec within 5% and
+bit-identical IOStats counters (``BENCH_PR4.json``; the third ``--smoke``
+gate).  All grid cells construct through the Pipeline API.
 """
 from __future__ import annotations
 
@@ -45,15 +51,18 @@ import os
 from benchmarks.common import (
     ASYNC_CELL,
     ASYNC_SIM_SCALE,
+    async_cell_pipeline,
     async_equal_work,
     cloud_collection,
     dataset,
+    drain,
     emit,
     planned_dataset,
     timed_samples_per_sec,
 )
 
 from repro.core import BlockShuffling, ScDataset
+from repro.pipeline import Pipeline
 
 M = 64  # paper's fixed minibatch size
 GRID_B = (1, 4, 16, 64, 256, 1024)
@@ -64,6 +73,23 @@ ASYNC_WORKERS = int(os.environ.get("BENCH_IO_WORKERS", "4"))
 # (it prefetches past the drain point) is amortized into the noise
 ASYNC_BATCHES = int(os.environ.get("BENCH_ASYNC_BATCHES", "384"))
 PR2_JSON = os.environ.get("BENCH_PR2_JSON", "BENCH_PR2.json")
+
+# ---- pipeline parity (PR 4): the Pipeline API must be free glue ---------
+PR4_JSON = os.environ.get("BENCH_PR4_JSON", "BENCH_PR4.json")
+PARITY_BATCHES = int(os.environ.get("BENCH_PARITY_BATCHES", "96"))
+# samples/sec tolerance, on the repo's standard MODELED time base (wall +
+# un-slept storage model; see benchmarks/common.py): slept+modeled latency
+# is identical by construction (counters are), so the modeled basis damps
+# host scheduler noise while still exposing real added CPU in the glue —
+# wall is ~20% of the denominator, so e.g. +50% CPU overhead breaks 5%.
+PARITY_SPS_TOL = 0.05
+# Counters that must be IDENTICAL between the two constructions: same index
+# sequence + cold cache + synchronous execution => the planner does exactly
+# the same physical work regardless of which surface wired it.
+PARITY_COUNTERS = (
+    "calls", "runs", "rows", "bytes_read", "cache_hits", "cache_misses",
+    "prefetched",
+)
 
 # ---- cloud grid (PR 3): profiles ordered by first-byte latency ----------
 CLOUD_GRID_PROFILES = ("local-ssd", "same-region", "cross-region", "cold-archive")
@@ -88,9 +114,12 @@ def _run_grid(store, stats, mode: str) -> dict:
             cache = getattr(store, "cache", None)
             if cache is not None:
                 cache.clear()  # each cell starts cold
-            ds = ScDataset(
-                store, BlockShuffling(block_size=b), batch_size=M, fetch_factor=f,
-                seed=0, batch_transform=lambda bb: bb.to_dense(),
+            ds = (
+                Pipeline.from_collection(store)
+                .strategy("block", block_size=b)
+                .batch(M, fetch_factor=f)
+                .seed(0)
+                .build(batch_transform=lambda bb: bb.to_dense())
             )
             r = timed_samples_per_sec(iter(ds), stats, batch_size=M)
             results[(b, f)] = r
@@ -147,6 +176,93 @@ def run_async(write_json: bool = True) -> dict:
     return out
 
 
+def run_pipeline_parity(write_json: bool = True) -> dict:
+    """PR 4 gate: Pipeline-built vs hand-wired fig2 cell, equal work.
+
+    The declarative surface (``repro.pipeline``) must be pure wiring: the
+    shared comparison cell constructed by hand (``open_collection`` +
+    ``ScDataset``) and through ``Pipeline.from_uri(...).build()`` runs the
+    identical index sequence over a cold planner, so samples/sec must agree
+    within ``PARITY_SPS_TOL`` (slept storage latency dominates, so the
+    tolerance is real headroom, not noise) and the IOStats counters must be
+    IDENTICAL — any divergence means the glue changed the stream or the I/O.
+    Synchronous execution (io_workers=1, readahead=0) so counters are
+    deterministic.  Each side runs twice in ALTERNATING order and reports
+    its best drain — the slept storage latency is identical by construction,
+    so what remains is one-sided scheduler/page-cache noise, which
+    best-of-two on both sides cancels instead of failing the gate.
+    Results land in machine-readable ``BENCH_PR4.json``.
+    """
+
+    def hand_wired() -> tuple[dict, dict]:
+        # the PR 1-3 surface, knob for knob the same cell
+        col, stats = planned_dataset(
+            simulate_scale=ASYNC_SIM_SCALE, io_workers=1, readahead=0,
+            cache_bytes=ASYNC_CELL["cache_bytes"],
+            block_rows=ASYNC_CELL["block_rows"],
+        )
+        ds = ScDataset(
+            col, BlockShuffling(block_size=ASYNC_CELL["b"]), batch_size=M,
+            fetch_factor=ASYNC_CELL["f"], seed=0,
+            batch_transform=lambda bb: bb.to_dense(),
+        )
+        out = drain(iter(ds), stats, n_batches=PARITY_BATCHES, batch_size=M)
+        snap = stats.snapshot()
+        col.release()
+        return out, {k: snap[k] for k in PARITY_COUNTERS}
+
+    def declared() -> tuple[dict, dict]:
+        # one Pipeline chain carrying the same knobs
+        pipe, pstats = async_cell_pipeline(io_workers=1, readahead=0,
+                                           batch_size=M)
+        out = drain(iter(pipe), pstats, n_batches=PARITY_BATCHES, batch_size=M)
+        psnap = pstats.snapshot()
+        pipe.close()
+        return out, {k: psnap[k] for k in PARITY_COUNTERS}
+
+    reps = []
+    for rep in (0, 1):
+        sides = (hand_wired, declared) if rep == 0 else (declared, hand_wired)
+        got = {fn.__name__: fn() for fn in sides}
+        reps.append(got)
+    hand, hand_counters = max(
+        (r["hand_wired"] for r in reps), key=lambda hc: hc[0]["sps_modeled"]
+    )
+    piped, pipe_counters = max(
+        (r["declared"] for r in reps), key=lambda hc: hc[0]["sps_modeled"]
+    )
+    # counters must be identical across sides AND reps (determinism)
+    all_counters = [c for r in reps for _, c in r.values()]
+    counters_all_equal = all(c == all_counters[0] for c in all_counters)
+
+    rel = abs(piped["sps_modeled"] - hand["sps_modeled"]) / max(
+        hand["sps_modeled"], 1e-9
+    )
+    counters_identical = counters_all_equal and hand_counters == pipe_counters
+    ok = counters_identical and rel <= PARITY_SPS_TOL
+    emit("fig2_pipeline_parity", 1e6 / max(piped["sps_modeled"], 1e-9),
+         f"handwired_sps={hand['sps_modeled']:.0f};"
+         f"pipeline_sps={piped['sps_modeled']:.0f};"
+         f"rel_diff={rel:.3f};tol={PARITY_SPS_TOL};"
+         f"counters_identical={counters_identical};pass={ok}")
+    out = {
+        "bench": "fig2_pipeline_parity",
+        "fixture": {**ASYNC_CELL, "batch_size": M, "batches": PARITY_BATCHES,
+                    "sim_scale": ASYNC_SIM_SCALE},
+        "handwired": {**hand, "counters": hand_counters},
+        "pipeline": {**piped, "counters": pipe_counters},
+        "sps_rel_diff": rel,
+        "sps_tolerance": PARITY_SPS_TOL,
+        "counters_identical": counters_identical,
+        "pass": ok,
+    }
+    if write_json:
+        with open(PR4_JSON, "w") as fh:
+            json.dump(out, fh, indent=2)
+        print(f"# wrote {PR4_JSON}")
+    return out
+
+
 def _cloud_measured_cell(name: str) -> dict:
     """ONE measured (not modeled) cell per profile: drain a few batches with
     ``io_workers`` overlapping the simulated GETs; requests/sample is the
@@ -156,8 +272,13 @@ def _cloud_measured_cell(name: str) -> dict:
     col, stats = cloud_collection(
         name, latency_scale=CLOUD_SCALE, io_workers=ASYNC_WORKERS
     )
-    ds = ScDataset(col, BlockShuffling(block_size=ASYNC_CELL["b"]), batch_size=M,
-                   fetch_factor=16, seed=0, batch_transform=lambda bb: bb.to_dense())
+    ds = (
+        Pipeline.from_collection(col)
+        .strategy("block", block_size=ASYNC_CELL["b"])
+        .batch(M, fetch_factor=16)
+        .seed(0)
+        .build(batch_transform=lambda bb: bb.to_dense())
+    )
     n = 0
     t0 = time.perf_counter()
     for _ in iter(ds):
@@ -280,6 +401,7 @@ def run() -> dict:
 
     async_cmp = run_async()
     cloud_cmp = run_cloud()
+    parity = run_pipeline_parity()
 
     return {
         "results": {f"{b}x{f}": r for (b, f), r in direct.items()},
@@ -290,6 +412,7 @@ def run() -> dict:
         "planner_fewer_runs": bool(p_rps < d_rps),
         "async": async_cmp,
         "cloud": cloud_cmp,
+        "pipeline_parity": parity,
     }
 
 
@@ -313,12 +436,16 @@ def _cli() -> None:
                     help="only the sync-vs-async planned comparison (BENCH_PR2.json)")
     ap.add_argument("--cloud-only", action="store_true",
                     help="only the cloud-profile request-semantics grid (BENCH_PR3.json)")
+    ap.add_argument("--parity-only", action="store_true",
+                    help="only the Pipeline-vs-handwired parity cell (BENCH_PR4.json)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.async_only:
         run_async()
     elif args.cloud_only:
         run_cloud()
+    elif args.parity_only:
+        run_pipeline_parity()
     else:
         run()
 

@@ -17,6 +17,11 @@ collection stop serializing behind one another's reads once ``io_workers``
 executes the planner's miss extents concurrently (the ``pool_async`` row;
 same shared equal-work cell as fig2's async rows, identical delivered
 batches, slept per-read storage latency).
+
+All rows construct through the Pipeline API (``Pipeline.from_collection``
+for the raw-store baseline rows, the shared ``async_cell_pipeline`` for the
+planned ones); the worker pool itself — including the straggler knobs — is
+declared via ``.prefetch(...)`` and reached through ``pipe.last_pool``.
 """
 from __future__ import annotations
 
@@ -27,8 +32,8 @@ import numpy as np
 
 from benchmarks.common import async_equal_work, dataset, emit, timed_samples_per_sec
 
-from repro.core import BlockShuffling, PrefetchPool, ScDataset
 from repro.core.theory import mean_batch_entropy
+from repro.pipeline import Pipeline
 
 M = 64
 
@@ -38,9 +43,15 @@ def run() -> dict:
     out = {}
     ent = {}
     for workers in (1, 2, 4):
-        ds = ScDataset(store, BlockShuffling(16), batch_size=M, fetch_factor=64,
-                       seed=0, batch_transform=lambda bb: bb)
-        pool = PrefetchPool(ds, num_workers=workers)
+        pipe = (
+            Pipeline.from_collection(store)
+            .strategy("block", block_size=16)
+            .batch(M, fetch_factor=64)
+            .seed(0)
+            .prefetch(workers=workers)
+            .build()
+        )
+        pool = iter(pipe)  # a PrefetchPool iterator (prefetch_workers > 0)
         stats.reset()
         plates, n = [], 0
         t0 = time.perf_counter()
@@ -52,7 +63,7 @@ def run() -> dict:
         wall = time.perf_counter() - t0
         mean, std = mean_batch_entropy(plates)
         ent[workers] = mean
-        wf = dict(pool.stats["worker_fetches"])
+        wf = dict(pipe.last_pool.stats["worker_fetches"])
         out[workers] = {"sps_wall": n * M / wall, "entropy": mean}
         emit(f"table2_w{workers}_b16_f64", 1e6 / (n * M / wall),
              f"sps_wall={n*M/wall:.0f};entropy={mean:.2f}+-{std:.2f};"
@@ -78,18 +89,23 @@ def run() -> dict:
                 time.sleep(1.0)
             return self.store[rows]
 
-    ds = ScDataset(SlowStore(store), BlockShuffling(16), batch_size=M,
-                   fetch_factor=16, seed=0)
-    pool = PrefetchPool(ds, num_workers=2, straggler_factor=2.0,
-                        straggler_min_latency=0.05)
+    slow_pipe = (
+        Pipeline.from_collection(SlowStore(store))
+        .strategy("block", block_size=16)
+        .batch(M, fetch_factor=16)
+        .seed(0)
+        .prefetch(workers=2, straggler_factor=2.0, straggler_min_latency=0.05)
+        .build()
+    )
     n = 0
-    for batch in pool:
+    for batch in slow_pipe:
         n += 1
         if n >= 64:
             break
+    pstats = slow_pipe.last_pool.stats
     emit("table2_straggler_reissue", 0.0,
-         f"speculative_reissues={pool.stats['speculative_reissues']};"
-         f"duplicate_completions={pool.stats['duplicate_completions']};"
+         f"speculative_reissues={pstats['speculative_reissues']};"
+         f"duplicate_completions={pstats['duplicate_completions']};"
          f"batches_ok={n}")
 
     # pool workers over SYNC vs ASYNC planned collections, slept latency:

@@ -22,7 +22,6 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import BlockShuffling, PrefetchPool, ScDataset, Streaming  # noqa: E402
 from repro.data import (  # noqa: E402
     SATA_SSD,
     IOStats,
@@ -30,6 +29,7 @@ from repro.data import (  # noqa: E402
     load_tahoe_like,
     open_collection,
 )
+from repro.pipeline import Pipeline  # noqa: E402
 
 BENCH_DATA_DIR = os.environ.get("BENCH_DATA_DIR", "/tmp/repro_bench_data")
 N_CELLS = int(os.environ.get("BENCH_N_CELLS", "150000"))
@@ -95,6 +95,75 @@ ASYNC_CELL = {"b": 16, "f": 16, "cache_bytes": 16 << 20, "block_rows": 64}
 ASYNC_SIM_SCALE = float(os.environ.get("BENCH_SIM_SCALE", "0.15"))
 
 
+def async_cell_pipeline(
+    *,
+    io_workers: int,
+    readahead: int,
+    batch_size: int = 64,
+    num_workers: int = 0,
+    simulate_scale: float = None,
+    iostats: Optional[IOStats] = None,
+):
+    """The shared comparison cell, declared through the Pipeline API.
+
+    Returns ``(pipe, stats)`` over a COLD collection on the shared fixture
+    with slept per-read latency — every sync-vs-async (and pipeline-parity)
+    measurement is this one declaration with different concurrency knobs.
+    """
+    generate_tahoe_like(BENCH_DATA_DIR, n_cells=N_CELLS, n_genes=N_GENES, seed=0)
+    scale = ASYNC_SIM_SCALE if simulate_scale is None else simulate_scale
+    stats = iostats if iostats is not None else IOStats(
+        simulate=SATA_SSD, simulate_scale=scale
+    )
+    pipe = (
+        Pipeline.from_uri(
+            "sharded-csr://" + BENCH_DATA_DIR,
+            cache_bytes=ASYNC_CELL["cache_bytes"],
+            block_rows=ASYNC_CELL["block_rows"],
+            io_workers=io_workers,
+            readahead=readahead,
+            iostats=stats,
+        )
+        .strategy("block", block_size=ASYNC_CELL["b"])
+        .batch(batch_size, fetch_factor=ASYNC_CELL["f"])
+        .seed(0)
+        .prefetch(workers=num_workers)
+        .build(batch_transform=lambda bb: bb.to_dense())
+    )
+    return pipe, stats
+
+
+def drain(it, stats: IOStats, *, n_batches: int, batch_size: int) -> dict:
+    """Reset stats, drain ``n_batches``, report throughput + IOStats.
+
+    ``sps_modeled`` uses the repo's standard time base (wall + un-slept
+    modeled storage time, cf. :meth:`IOStats.total_seconds`) — the
+    paper-comparable number, and far less exposed to host scheduler noise
+    than raw wall-clock.
+    """
+    stats.reset()
+    n = 0
+    t0 = time.perf_counter()
+    for _ in it:
+        n += 1
+        if n >= n_batches:
+            break
+    wall = time.perf_counter() - t0
+    samples = n * batch_size
+    modeled = wall + stats.modeled_s * max(
+        0.0, 1.0 - (stats.simulate_scale if stats.simulate is not None else 1.0)
+    )
+    return {
+        "samples": samples,
+        "sps_wall": samples / max(wall, 1e-9),
+        "sps_modeled": samples / max(modeled, 1e-9),
+        "runs_per_sample": stats.runs / max(1, stats.rows),
+        "cache_hit_rate": stats.cache_hit_rate,
+        "prefetched_blocks": stats.prefetched,
+        "bytes_read": stats.bytes_read,
+    }
+
+
 def async_equal_work(
     *,
     io_workers: int,
@@ -106,33 +175,13 @@ def async_equal_work(
     """Drain ``n_batches`` from a COLD planned collection with slept per-read
     latency (``ASYNC_SIM_SCALE``); wall-clock is the only thing that may
     differ between sync and async — delivery is bit-identical."""
-    col, stats = planned_dataset(
-        simulate_scale=ASYNC_SIM_SCALE, io_workers=io_workers, readahead=readahead,
-        cache_bytes=ASYNC_CELL["cache_bytes"], block_rows=ASYNC_CELL["block_rows"],
+    pipe, stats = async_cell_pipeline(
+        io_workers=io_workers, readahead=readahead, batch_size=batch_size,
+        num_workers=num_workers,
     )
-    ds = ScDataset(col, BlockShuffling(block_size=ASYNC_CELL["b"]),
-                   batch_size=batch_size, fetch_factor=ASYNC_CELL["f"], seed=0,
-                   batch_transform=lambda bb: bb.to_dense())
-    it = iter(ds) if num_workers == 0 else iter(PrefetchPool(ds, num_workers=num_workers))
-    stats.reset()
-    n = 0
-    t0 = time.perf_counter()
-    for _ in it:
-        n += 1
-        if n >= n_batches:
-            break
-    wall = time.perf_counter() - t0
-    col.close()
-    return {
-        "io_workers": io_workers,
-        "readahead": readahead,
-        "samples": n * batch_size,
-        "sps_wall": n * batch_size / max(wall, 1e-9),
-        "runs_per_sample": stats.runs / max(1, stats.rows),
-        "cache_hit_rate": stats.cache_hit_rate,
-        "prefetched_blocks": stats.prefetched,
-        "bytes_read": stats.bytes_read,
-    }
+    out = drain(iter(pipe), stats, n_batches=n_batches, batch_size=batch_size)
+    pipe.close()
+    return {"io_workers": io_workers, "readahead": readahead, **out}
 
 
 def cloud_collection(

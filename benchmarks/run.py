@@ -15,7 +15,11 @@ BENCH_SKIP (comma-list: fig2,fig3,fig4,fig5,table2,roofline,kernels).
    fitted per-request cost + recommended (b, f)); exits nonzero unless the
    recommended fetch factor is non-decreasing in first-byte latency and
    strictly larger at the high end (the paper-level claim that bigger
-   fetches amortize per-request cost).
+   fetches amortize per-request cost);
+3. pipeline parity -> ``BENCH_PR4.json`` (the fig2 cell built through
+   ``repro.pipeline`` vs hand-wired ``open_collection`` + ``ScDataset``);
+   exits nonzero unless samples/sec agree within 5% AND the IOStats
+   counters are identical — the declarative surface must be free glue.
 """
 from __future__ import annotations
 
@@ -38,6 +42,7 @@ def smoke() -> int:
     os.environ.setdefault("BENCH_N_GENES", "512")
     os.environ.setdefault("BENCH_ASYNC_BATCHES", "96")
     os.environ.setdefault("BENCH_CLOUD_BATCHES", "16")
+    os.environ.setdefault("BENCH_PARITY_BATCHES", "64")
     print("name,us_per_call,derived")
     from benchmarks import bench_fig2_throughput
 
@@ -54,7 +59,14 @@ def smoke() -> int:
         f"rising first-byte latency (must be non-decreasing and grow) "
         f"-> {'OK' if cok else 'FAIL'}"
     )
-    return 0 if (ok and cok) else 1
+    parity = bench_fig2_throughput.run_pipeline_parity(write_json=True)
+    pok = parity["pass"]
+    print(
+        f"# smoke: pipeline vs hand-wired {parity['sps_rel_diff']*100:.1f}% "
+        f"sps diff (tol 5%), counters identical="
+        f"{parity['counters_identical']} -> {'OK' if pok else 'FAIL'}"
+    )
+    return 0 if (ok and cok and pok) else 1
 
 
 def main() -> None:

@@ -12,8 +12,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BlockShuffling, ScDataset, Streaming
+from repro.core import BlockShuffling, Streaming
 from repro.data import generate_tahoe_like, load_tahoe_like
+from repro.pipeline import Pipeline
 
 DATA = "/tmp/cellcls_data"
 TASK, N_CLASSES = "cell_line", 50
@@ -50,8 +51,13 @@ def train_probe(store, strategy, fetch_factor, lr=1e-2, seed=0):
         w = w - lr * (m / c1) / (jnp.sqrt(v / c2) + 1e-8)
         return w, m, v, cnt
 
-    ds = ScDataset(TrainView(), strategy, batch_size=64,
-                   fetch_factor=fetch_factor, seed=seed)
+    ds = (
+        Pipeline.from_collection(TrainView())
+        .strategy(strategy)  # an instance: reverse-registered into the spec
+        .batch(64, fetch_factor=fetch_factor)
+        .seed(seed)
+        .build()
+    )
     for batch in ds:  # one epoch
         x = jnp.asarray(np.log1p(batch.to_dense()))
         y = jnp.asarray(batch.obs[TASK].astype(np.int32))

@@ -11,8 +11,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import BlockShuffling, MultiIndexable, ScDataset
+from repro.core import MultiIndexable
 from repro.data import generate_tahoe_like, load_tahoe_like
+from repro.pipeline import Pipeline
 
 DATA = "/tmp/multimodal_cells"
 
@@ -40,16 +41,26 @@ def main():
     cell_line = store.obs_column("cell_line")
 
     mm = MultiIndexable(rna=RnaView(store), protein=protein, cell_line=cell_line)
-    ds = ScDataset(mm, BlockShuffling(16), batch_size=64, fetch_factor=16, seed=0)
+    ds = (
+        Pipeline.from_collection(mm)  # in-process collection, same chain
+        .strategy("block", block_size=16)
+        .batch(64, fetch_factor=16)
+        .seed(0)
+        .build()
+    )
 
     batch = next(iter(ds))
     print(f"rna {batch['rna'].shape}, protein {batch['protein'].shape}, "
           f"labels {batch['cell_line'].shape}")
 
     # alignment proof: modality rows correspond to the same cells
-    ds2 = ScDataset(
-        MultiIndexable(rows=np.arange(len(store)), protein=protein),
-        BlockShuffling(16), batch_size=64, fetch_factor=16, seed=0,
+    ds2 = (
+        Pipeline.from_collection(
+            MultiIndexable(rows=np.arange(len(store)), protein=protein))
+        .strategy("block", block_size=16)
+        .batch(64, fetch_factor=16)
+        .seed(0)
+        .build()
     )
     b2 = next(iter(ds2))
     assert np.allclose(b2["protein"], protein[b2["rows"]])

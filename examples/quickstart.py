@@ -1,11 +1,12 @@
 """Quickstart: scDataset on a synthetic Tahoe-like cell atlas.
 
-Covers the paper's core API in ~40 lines: open an on-disk collection
-through the unified backend layer (``open_collection`` — here the sharded
-CSR store, the AnnData stand-in), pick a sampling strategy, set
-(batch_size, fetch factor), and iterate dense minibatches — then show what
-block sampling plus the shared read planner / block cache did to the I/O
-pattern and to minibatch diversity.
+Covers the Pipeline API in ~40 lines: declare the whole input pipeline in
+one chain — storage URI + planner knobs, sampling strategy, (batch_size,
+fetch factor), prefetch — build it, iterate dense minibatches, then show
+what block sampling plus the shared read planner / block cache did to the
+I/O pattern and to minibatch diversity, and that the pipeline's spec
+round-trips through JSON (the reproducibility story: a run's exact input
+stream rides in its config).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,38 +17,36 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import BlockShuffling, ScDataset
 from repro.core.theory import entropy_bounds, mean_batch_entropy
-from repro.data import generate_tahoe_like, open_collection
+from repro.data import generate_tahoe_like
+from repro.pipeline import DataSpec, Pipeline
 
 DATA = "/tmp/quickstart_cells"
 
 
 def main():
-    # 1. a 50k-cell, 14-plate on-disk dataset (reused across runs), opened
-    #    behind the Collection protocol: fetches go through the cross-shard
-    #    read planner and a 32MB LRU block cache
+    # 1. a 50k-cell, 14-plate on-disk dataset (reused across runs)
     generate_tahoe_like(DATA, n_cells=50_000, n_genes=1024, seed=0)
-    store = open_collection("sharded-csr://" + DATA, cache_bytes=32 << 20,
-                            block_rows=256)
-    sch = store.schema
+
+    # 2. the whole loader in ONE declaration: collection (cross-shard read
+    #    planner + 32MB LRU block cache), quasi-random block sampling
+    #    (blocks of 16, fetch 64 minibatches per backend call), geometry
+    pipe = (
+        Pipeline.from_uri("sharded-csr://" + DATA,
+                          cache_bytes=32 << 20, block_rows=256)
+        .strategy("block", block_size=16)
+        .batch(64, fetch_factor=64)
+        .seed(0)
+        .build(batch_transform=lambda b: (b.to_dense(), b.obs["plate"]))
+    )
+    sch = pipe.schema
     print(f"dataset: {sch['n_obs']} cells x {sch['n_var']} genes, "
           f"{sch['n_shards']} plate shards ({sch['kind']} backend)")
 
-    # 2. quasi-random loader: blocks of 16, fetch 64 minibatches at once
-    ds = ScDataset(
-        store,
-        BlockShuffling(block_size=16),
-        batch_size=64,
-        fetch_factor=64,
-        seed=0,
-        batch_transform=lambda b: (b.to_dense(), b.obs["plate"]),
-    )
-
     # 3. iterate
     plates_seen = []
-    store.iostats.reset()
-    for i, (x, plates) in enumerate(ds):
+    pipe.collection.iostats.reset()
+    for i, (x, plates) in enumerate(pipe):
         if i == 0:
             print(f"minibatch: dense {x.shape} {x.dtype}, "
                   f"plates in batch: {sorted(set(plates.tolist()))[:8]}...")
@@ -56,15 +55,29 @@ def main():
             break
 
     # 4. what block sampling + the planner bought us
-    st = store.iostats
+    st = pipe.collection.iostats
     print(f"I/O: {st.calls} planned fetches, {st.runs} random extents for "
           f"{st.rows} rows ({st.rows / max(st.runs, 1):.1f} rows per seek), "
           f"block-cache hit rate {st.cache_hit_rate:.0%}")
     mean, std = mean_batch_entropy(plates_seen)
-    plate_counts = np.bincount(store.obs_column("plate")).astype(np.float64)
+    plate_counts = np.bincount(
+        pipe.collection.obs_column("plate")).astype(np.float64)
     lo, hi = entropy_bounds(plate_counts / plate_counts.sum(), 64, 16)
     print(f"diversity: plate entropy {mean:.2f}±{std:.2f} "
           f"(Cor 3.3 bounds [{lo:.2f}, {hi:.2f}]; IID would be ~{hi:.2f})")
+
+    # 5. reproducibility: the spec IS the pipeline — JSON out, JSON in,
+    #    bitwise-identical stream (fingerprint guards checkpoints against
+    #    resuming a drifted config)
+    spec_json = pipe.spec.to_json()
+    rebuilt = DataSpec.from_json(spec_json).build(
+        batch_transform=lambda b: (b.to_dense(), b.obs["plate"]))
+    x0, _ = next(iter(rebuilt))
+    print(f"spec: {len(spec_json)}B of JSON, fingerprint "
+          f"{pipe.spec.fingerprint()} — rebuilt stream starts with "
+          f"{x0.shape} batch, identical by construction")
+    rebuilt.close()
+    pipe.close()
 
 
 if __name__ == "__main__":

@@ -39,6 +39,9 @@ __all__ = [
     "probe_io_cost",
     "probe_collection",
     "recommend",
+    "recommend_from",
+    "fit_and_recommend",
+    "model_drift",
     "Recommendation",
 ]
 
@@ -198,6 +201,48 @@ def probe_collection(
     )
 
 
+def model_drift(
+    model: IOCostModel, stats: Any, *, base: Optional[dict] = None
+) -> float:
+    """How far live :class:`~repro.data.iostats.IOStats` sit from ``model``.
+
+    Two planner-level quantities the fitted model carries are re-measurable
+    for free from the running collection's stats:
+
+    - runs per sample — RELATIVE deviation from ``model.runs_per_sample``
+      (the access-pattern shape: coalescing got better/worse);
+    - cache hit rate — ABSOLUTE deviation from ``model.hit_rate`` (already
+      a 0..1 rate; relative deviation would explode near zero).
+
+    ``base`` — a ``stats.snapshot()`` taken when the model was fitted.
+    When given, drift is measured on the counter DELTAS since then, so a
+    regime change late in a long run is not diluted by hours of
+    accumulated history (``ScDataset.autotune`` passes its probe-time
+    snapshot).  Without it, lifetime totals are used.
+
+    Returns the max of the two (0.0 when the stats are empty or the model
+    carries no planner measurements).  ``ScDataset.autotune`` and
+    ``DataPipeline.check_drift`` re-probe when this exceeds their
+    threshold — the ROADMAP's "re-probe when IOStats drifts from the
+    fitted model".
+    """
+    runs, rows = stats.runs, stats.rows
+    hits, misses = stats.cache_hits, stats.cache_misses
+    if base is not None:
+        runs -= base.get("runs", 0)
+        rows -= base.get("rows", 0)
+        hits -= base.get("cache_hits", 0)
+        misses -= base.get("cache_misses", 0)
+    drifts = [0.0]
+    if rows > 0 and model.runs_per_sample is not None:
+        ref = max(float(model.runs_per_sample), 1e-9)
+        drifts.append(abs(runs / rows - ref) / ref)
+    touched = hits + misses
+    if touched > 0:
+        drifts.append(abs(hits / touched - model.hit_rate))
+    return max(drifts)
+
+
 @dataclasses.dataclass
 class Recommendation:
     block_size: int
@@ -207,6 +252,9 @@ class Recommendation:
     buffer_bytes: float
     rationale: str
     cache_reserved_bytes: float = 0.0
+    # the fitted model this pick came from (drift checks re-measure against
+    # it); filled by the Pipeline/ScDataset autotune paths
+    model: Optional[IOCostModel] = dataclasses.field(default=None, repr=False)
 
 
 def recommend(
@@ -302,4 +350,51 @@ def recommend(
             f"{deficit:.3f} bits (IID {iid_deficit:.3f}), modeled {sps:.0f} samp/s"
             f"{planner}"
         ),
+    )
+
+
+def recommend_from(
+    model: IOCostModel,
+    *,
+    batch_size: int = 64,
+    budget: float = 2e9,
+    num_classes: int = 14,
+    entropy_slack_bits: float = 0.1,
+    throughput_slack: float = 0.0,
+) -> Recommendation:
+    """:func:`recommend` from an already-fitted model, with the fit attached
+    to the result (``rec.model``) so drift checks can re-measure against it.
+    The one place the model→recommendation hand-off is wired — both
+    ``ScDataset.autotune`` and the Pipeline builder go through here."""
+    rec = recommend(
+        model,
+        batch_size=batch_size,
+        num_classes=num_classes,
+        mem_budget_bytes=budget,
+        entropy_slack_bits=entropy_slack_bits,
+        throughput_slack=throughput_slack,
+    )
+    rec.model = model
+    return rec
+
+
+def fit_and_recommend(
+    col: Any,
+    *,
+    probes: int = 3,
+    probe_rows: int = 512,
+    batch_size: int = 64,
+    budget: float = 2e9,
+    num_classes: int = 14,
+    entropy_slack_bits: float = 0.1,
+    throughput_slack: float = 0.0,
+) -> Recommendation:
+    """Probe ``col`` through the planner and recommend in one call."""
+    return recommend_from(
+        probe_collection(col, probes=probes, probe_rows=probe_rows),
+        batch_size=batch_size,
+        budget=budget,
+        num_classes=num_classes,
+        entropy_slack_bits=entropy_slack_bits,
+        throughput_slack=throughput_slack,
     )

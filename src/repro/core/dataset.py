@@ -38,12 +38,18 @@ class LoaderState:
     minibatches already delivered from the current fetch, so a checkpoint
     taken mid-fetch resumes on the exact next minibatch (no replay, no skip —
     the bitwise-restart test depends on this).
+
+    ``fingerprint`` — when the loader was built through the Pipeline API
+    (:mod:`repro.pipeline`), the spec's content hash rides here so
+    ``DataPipeline.load_state`` can REFUSE to resume against a drifted spec.
+    None for hand-wired loaders (the low-level surface only checks the seed).
     """
 
     seed: int
     epoch: int
     fetch_cursor: int
     batch_cursor: int = 0
+    fingerprint: Optional[str] = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -51,7 +57,8 @@ class LoaderState:
     @staticmethod
     def from_dict(d: dict) -> "LoaderState":
         return LoaderState(int(d["seed"]), int(d["epoch"]),
-                           int(d["fetch_cursor"]), int(d.get("batch_cursor", 0)))
+                           int(d["fetch_cursor"]), int(d.get("batch_cursor", 0)),
+                           d.get("fingerprint"))
 
 
 class ScDataset:
@@ -108,11 +115,39 @@ class ScDataset:
         )
         self._state = LoaderState(seed=self.seed, epoch=0, fetch_cursor=0)
         self._order_cache: tuple[int, np.ndarray] | None = None  # (epoch, order)
+        # Stamped by the Pipeline builder (repro.pipeline) with the spec's
+        # content hash; surfaces in plan_epoch.  None for hand-wired loaders.
+        self.spec_fingerprint: Optional[str] = None
+        self._tuned_model = None  # autotune(): cached fitted IOCostModel
+        self._tuned_base = None  # IOStats snapshot at probe time (drift deltas)
 
     # ------------------------------------------------------------------ sizes
     def __len__(self) -> int:
-        """Minibatches yielded by THIS RANK per epoch."""
-        return len(self._rank_fetch_slices()) * self.fetch_factor
+        """Minibatches yielded by THIS RANK in the CURRENT epoch — tail-exact.
+
+        With ``drop_last=False`` the LAST global fetch may hold fewer than
+        ``fetch_size`` rows and therefore yields ``ceil(rows/m)`` (not
+        ``fetch_factor``) minibatches; whichever rank owns it yields fewer
+        batches.  The old ``n_fetches * fetch_factor`` overcounted exactly
+        there (and undercounted the final ragged batch itself).  Counted
+        against the epoch's MATERIALIZED order (cached; weighted strategies
+        draw blocks with replacement, so their order length — and hence the
+        tail — varies per epoch while ``epoch_len`` is only the nominal
+        size :meth:`fetch` ids are derived from).
+        """
+        order_len = len(self._epoch_order(self._state.epoch))
+        return sum(
+            self._fetch_num_batches(g, order_len)
+            for g in self._rank_fetch_slices()
+        )
+
+    def _fetch_num_batches(self, global_fetch_id: int, order_len: int) -> int:
+        """Minibatches fetch ``global_fetch_id`` yields (mirrors :meth:`fetch`)."""
+        rows = min(self.fetch_size, order_len - global_fetch_id * self.fetch_size)
+        if rows <= 0:
+            return 0
+        m = self.batch_size
+        return rows // m if self.drop_last else (rows + m - 1) // m
 
     @property
     def n(self) -> int:
@@ -141,17 +176,103 @@ class ScDataset:
         return list(range(self.rank, g, self.world_size))
 
     def plan_epoch(self, epoch: Optional[int] = None) -> dict:
-        """Introspection: the epoch's fetch plan without touching data."""
+        """Introspection: the epoch's fetch plan without touching data.
+
+        Surfaces the FULL stream geometry — sampling, batching, placement,
+        and (when the collection is a planned one) the I/O-side async knobs
+        plus the Pipeline spec fingerprint — so one dict answers "what will
+        this rank read and yield this epoch, through what configuration".
+        """
         epoch = self._state.epoch if epoch is None else epoch
         order = self._epoch_order(epoch)
         g = self._global_fetch_count()
+        rank_fetches = self._rank_fetch_slices()
+        col = self.collection
         return {
             "epoch": epoch,
             "order_len": len(order),
             "global_fetches": g,
-            "rank_fetches": self._rank_fetch_slices(),
+            "rank_fetches": rank_fetches,
             "fetch_size": self.fetch_size,
+            "rank_batches": sum(
+                self._fetch_num_batches(gid, len(order)) for gid in rank_fetches
+            ),
+            "batch_size": self.batch_size,
+            "fetch_factor": self.fetch_factor,
+            "drop_last": self.drop_last,
+            "sort_fetch_indices": self.sort_fetch_indices,
+            "seed": self.seed,
+            "rank": self.rank,
+            "world_size": self.world_size,
+            "io_workers": int(getattr(col, "io_workers", 1) or 1),
+            "readahead": int(getattr(col, "readahead", 0) or 0),
+            "admission": getattr(col, "admission", None),
+            "fingerprint": self.spec_fingerprint,
         }
+
+    # ----------------------------------------------------------- autotune
+    def autotune(
+        self,
+        *,
+        mem_budget_bytes: float = 2e9,
+        drift_threshold: float = 0.5,
+        num_classes: int = 14,
+        entropy_slack_bits: float = 0.1,
+        throughput_slack: float = 0.0,
+        probes: int = 3,
+        probe_rows: int = 512,
+        apply: bool = False,
+        force: bool = False,
+    ):
+        """Probe this loader's collection and recommend ``(b, f)`` in-process.
+
+        Wires :func:`repro.core.autotune.probe_collection` +
+        :func:`~repro.core.autotune.recommend` behind one call (the ROADMAP
+        convenience).  The fitted cost model is cached; subsequent calls
+        re-probe only when the collection's live :class:`IOStats` have
+        DRIFTED from the fitted model by more than ``drift_threshold``
+        (:func:`~repro.core.autotune.model_drift` — e.g. the cache stopped
+        absorbing redraws, or an epoch switched from streaming to scattered
+        access), or when ``force=True``.
+
+        ``apply=True`` adopts the recommendation onto this loader:
+        ``fetch_factor`` always, and the strategy's ``block_size`` when it
+        has one.  Apply only at an epoch boundary — it changes the stream.
+        Returns the :class:`~repro.core.autotune.Recommendation`.
+        """
+        from .autotune import model_drift, probe_collection, recommend_from
+
+        col = self.collection
+        if not (hasattr(col, "iostats") and hasattr(col, "cache")):
+            raise TypeError(
+                "autotune() needs a planned collection (open_collection); "
+                f"got {type(col).__name__}"
+            )
+        model = self._tuned_model
+        if model is None or force or model_drift(
+            model, col.iostats, base=self._tuned_base
+        ) > drift_threshold:
+            model = probe_collection(col, probes=probes, probe_rows=probe_rows)
+            self._tuned_model = model
+            # drift is measured on counter deltas from HERE, so a late
+            # regime change is not diluted by lifetime totals
+            self._tuned_base = col.iostats.snapshot()
+        rec = recommend_from(
+            model,
+            batch_size=self.batch_size,
+            budget=mem_budget_bytes,
+            num_classes=num_classes,
+            entropy_slack_bits=entropy_slack_bits,
+            throughput_slack=throughput_slack,
+        )
+        if apply:
+            self.fetch_factor = int(rec.fetch_factor)
+            if hasattr(self.strategy, "block_size"):
+                self.strategy = dataclasses.replace(
+                    self.strategy, block_size=int(rec.block_size)
+                )
+            self._order_cache = None  # geometry changed; re-derive the order
+        return rec
 
     # -------------------------------------------------------------- state
     def state(self) -> LoaderState:

@@ -15,6 +15,8 @@ Registered URI schemes (see the README's scheme table):
 ``chunked://``            Zarr-style chunked dense store
 ``tokens://``             flat token stream viewed as sequences
 ``h5ad://``               real AnnData/HDF5 files (h5py or pure-Python shim)
+``sharded-h5ad://``       manifest over many ``.h5ad`` plate files, one row
+                          space (composite of the h5ad adapter)
 ``cloud://<inner-uri>``   any of the above behind object-store request
                           semantics (first-byte latency, bandwidth,
                           ``max_inflight``) — :mod:`repro.data.cloud`
@@ -34,6 +36,7 @@ from .backend import (
     ChunkedAdapter,
     Collection,
     CSRAdapter,
+    CSRCompositeAdapter,
     PlannedCollection,
     ShardedCSRAdapter,
     StorageAdapter,
@@ -46,13 +49,14 @@ from .backend import (
 from .chunked_store import ChunkedStore, write_chunked_store
 from .cloud import CLOUD_PROFILES, CloudAdapter, CloudProfile
 from .csr_store import CSRBatch, CSRStore, ShardedCSRStore, write_csr_shard
-from .h5ad import H5adAdapter, H5adStore
+from .h5ad import H5adAdapter, H5adStore, ShardedH5adAdapter
 from .iostats import CLOUD_OBJECT, NVME_SSD, SATA_SSD, IOStats, PendingIO, StorageModel
 from .readplan import BlockCache, StreamDetector, coalesce_rows, plan_reads
 from .synth import (
     TAHOE_PLATE_FRACS,
     csr_shard_to_h5ad,
     generate_h5ad_like,
+    generate_sharded_h5ad_like,
     generate_tahoe_like,
     load_tahoe_like,
     write_h5ad,
@@ -68,9 +72,11 @@ __all__ = [
     "write_chunked_store",
     "H5adStore",
     "H5adAdapter",
+    "ShardedH5adAdapter",
     "write_h5ad",
     "csr_shard_to_h5ad",
     "generate_h5ad_like",
+    "generate_sharded_h5ad_like",
     "CloudProfile",
     "CloudAdapter",
     "CLOUD_PROFILES",
@@ -83,6 +89,7 @@ __all__ = [
     "Collection",
     "StorageAdapter",
     "CSRAdapter",
+    "CSRCompositeAdapter",
     "ShardedCSRAdapter",
     "ChunkedAdapter",
     "TokenAdapter",

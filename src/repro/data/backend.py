@@ -49,6 +49,7 @@ __all__ = [
     "Collection",
     "StorageAdapter",
     "CSRAdapter",
+    "CSRCompositeAdapter",
     "ShardedCSRAdapter",
     "ChunkedAdapter",
     "TokenAdapter",
@@ -203,38 +204,52 @@ class CSRAdapter(StorageAdapter):
         return self.store.obs[key]
 
 
-class ShardedCSRAdapter(StorageAdapter):
-    """Sharded CSR (the 14 Tahoe plate files) — boundaries at shard edges."""
+class CSRCompositeAdapter(StorageAdapter):
+    """Shared plumbing for MANY CSR-shaped row stores behind one row space.
 
-    def __init__(self, store: ShardedCSRStore):
-        self.store = store
+    A "CSR-shaped store" is anything with ``read_range(start, stop) ->
+    CSRBatch`` plus ``_indptr``/``_data``/``_indices`` arrays and
+    ``avg_row_bytes`` (``CSRStore``, ``H5adStore``).  Subclasses
+    (:class:`ShardedCSRAdapter`, :class:`~repro.data.h5ad
+    .ShardedH5adAdapter`) supply the store list + schema/obs access; shard
+    edges are planner ``boundaries`` (a physical read never crosses one,
+    so :meth:`read_range` dispatches to exactly one store), and the batch
+    algebra / nnz byte accounting live here ONCE.
+    """
+
+    def __init__(self, stores: Sequence[Any], n_var: int):
+        if not stores:
+            raise ValueError("need at least one shard")
+        self.stores = list(stores)
+        self.n_var = int(n_var)
+        sizes = np.array([len(s) for s in self.stores], dtype=np.int64)
+        self.offsets = np.concatenate(([0], np.cumsum(sizes)))
+        self.n_obs = int(self.offsets[-1])
 
     def __len__(self) -> int:
-        return len(self.store)
+        return self.n_obs
 
     def boundaries(self) -> np.ndarray:
-        return self.store.offsets
+        return self.offsets
 
     def read_range(self, start: int, stop: int) -> CSRBatch:
-        offs = self.store.offsets
-        sid = int(np.searchsorted(offs, start, side="right") - 1)
-        off = int(offs[sid])
-        return self.store.shards[sid].read_range(start - off, stop - off)
+        sid = int(np.searchsorted(self.offsets, start, side="right") - 1)
+        off = int(self.offsets[sid])
+        return self.stores[sid].read_range(start - off, stop - off)
 
     def take(self, piece: CSRBatch, rows: np.ndarray) -> CSRBatch:
         return piece[rows]
 
     def concat(self, pieces: Sequence[CSRBatch]) -> CSRBatch:
-        return _concat_batches(list(pieces), self.store.n_var)
+        return _concat_batches(list(pieces), self.n_var)
 
     def nbytes_of(self, rows: np.ndarray) -> int:
         rows = np.asarray(rows, dtype=np.int64)
-        offs = self.store.offsets
-        sids = np.searchsorted(offs, rows, side="right") - 1
+        sids = np.searchsorted(self.offsets, rows, side="right") - 1
         total = 0
         for sid in np.unique(sids):
-            shard = self.store.shards[int(sid)]
-            local = rows[sids == sid] - int(offs[sid])
+            shard = self.stores[int(sid)]
+            local = rows[sids == sid] - int(self.offsets[sid])
             nnz = (shard._indptr[local + 1] - shard._indptr[local]).sum()
             per = shard._data.dtype.itemsize + shard._indices.dtype.itemsize
             total += int(nnz) * per
@@ -242,7 +257,15 @@ class ShardedCSRAdapter(StorageAdapter):
 
     @property
     def avg_row_bytes(self) -> float:
-        return self.store.avg_row_bytes
+        return float(np.mean([s.avg_row_bytes for s in self.stores]))
+
+
+class ShardedCSRAdapter(CSRCompositeAdapter):
+    """Sharded CSR (the 14 Tahoe plate files) — boundaries at shard edges."""
+
+    def __init__(self, store: ShardedCSRStore):
+        super().__init__(store.shards, store.n_var)
+        self.store = store
 
     @property
     def schema(self) -> dict:
@@ -914,7 +937,13 @@ def _sniff_scheme(path: str) -> str:
             if f.read(8) == b"\x89HDF\r\n\x1a\n":
                 return "h5ad"
         raise ValueError(f"cannot detect a storage backend for file {path!r}")
-    if os.path.exists(os.path.join(path, "manifest.json")):
+    manifest_path = os.path.join(path, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        shards = manifest.get("shards", [])
+        if shards and all(str(s).endswith(".h5ad") for s in shards):
+            return "sharded-h5ad"
         return "sharded-csr"
     meta_path = os.path.join(path, "meta.json")
     if os.path.exists(meta_path):

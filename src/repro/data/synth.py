@@ -32,6 +32,7 @@ __all__ = [
     "write_h5ad",
     "csr_shard_to_h5ad",
     "generate_h5ad_like",
+    "generate_sharded_h5ad_like",
     "TAHOE_PLATE_FRACS",
 ]
 
@@ -262,6 +263,41 @@ def csr_shard_to_h5ad(shard_path: str, h5ad_path: str) -> str:
         obs=store.obs,
     )
     return h5ad_path
+
+
+def generate_sharded_h5ad_like(
+    root: str,
+    *,
+    n_cells: int = 20_000,
+    n_genes: int = 512,
+    n_plates: int = 4,
+    seed: int = 0,
+    **gen_kwargs,
+) -> str:
+    """A ``sharded-h5ad://`` fixture: Tahoe-like plate shards exported as
+    one ``.h5ad`` file each, plus a ``manifest.json`` listing them — the
+    composite layout real atlases ship as (many AnnData plate files).
+    Returns ``root``; idempotent (the underlying CSR shards are reused and
+    each ``.h5ad`` is only rewritten when its source shard is newer)."""
+    csr_root = root + ".csr"
+    shards = generate_tahoe_like(
+        root=csr_root, n_cells=n_cells, n_genes=n_genes, n_plates=n_plates,
+        plate_fracs=TAHOE_PLATE_FRACS[:n_plates], seed=seed, **gen_kwargs,
+    )
+    os.makedirs(root, exist_ok=True)
+    names = []
+    for shard in shards:
+        name = os.path.basename(shard) + ".h5ad"
+        names.append(name)
+        out = os.path.join(root, name)
+        src_marker = os.path.join(shard, "meta.json")
+        if not os.path.exists(out) or os.path.getmtime(out) < os.path.getmtime(
+            src_marker
+        ):
+            csr_shard_to_h5ad(shard, out)
+    with open(os.path.join(root, "manifest.json"), "w") as f:
+        json.dump({"shards": names}, f, indent=1)
+    return root
 
 
 def generate_h5ad_like(

@@ -25,9 +25,10 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config, smoke_config
-from repro.core import BlockShuffling, LoaderState, ScDataset
-from repro.data.tokens import TokenStore, generate_token_corpus
+from repro.core import LoaderState
+from repro.data.tokens import generate_token_corpus
 from repro.models import Model
+from repro.pipeline import DataPipeline, Pipeline
 from repro.train.optimizer import AdamWConfig, warmup_cosine
 from repro.train.step import make_train_state, make_train_step
 
@@ -46,23 +47,29 @@ def build_loader(
     world_size: int = 1,
     n_tokens: int = 2_000_000,
     vocab_size: int = 1024,
-) -> ScDataset:
+    prefetch_workers: int = 0,
+) -> DataPipeline:
+    """The training input pipeline, declared through the Pipeline API.
+
+    ``pipe.spec`` is the full serializable description of the stream; it
+    rides in every checkpoint (``extra["data_spec"]``) and its fingerprint
+    in the loader state, so a resumed run refuses a drifted data config.
+    """
     generate_token_corpus(corpus_dir, n_tokens=n_tokens, vocab_size=vocab_size)
-    store = TokenStore(corpus_dir, seq_len=seq_len)
-    return ScDataset(
-        store,
-        BlockShuffling(block_size=block_size),
-        batch_size=batch,
-        fetch_factor=fetch_factor,
-        seed=seed,
-        rank=rank,
-        world_size=world_size,
+    return (
+        Pipeline.from_uri(f"tokens://{corpus_dir}", seq_len=int(seq_len))
+        .strategy("block", block_size=block_size)
+        .batch(batch, fetch_factor=fetch_factor)
+        .shard(rank, world_size)
+        .seed(seed)
+        .prefetch(workers=prefetch_workers)
+        .build()
     )
 
 
 def train_loop(
     model: Model,
-    loader: ScDataset,
+    loader: DataPipeline,
     *,
     steps: int,
     ckpt_dir: str | None = None,
@@ -118,8 +125,12 @@ def train_loop(
                   f"({tput:.0f} tok/s)")
             t0 = time.time()
         if mgr and (step % ckpt_every == 0 or step == steps):
+            extra = {"arch": model.cfg.name}
+            spec = getattr(loader, "spec", None)
+            if spec is not None and spec.uri is not None:
+                extra["data_spec"] = spec.to_dict()  # rebuildable input pipeline
             mgr.save(step, state, loader_state=loader.state().to_dict(),
-                     extra={"arch": model.cfg.name}, blocking=True)
+                     extra=extra, blocking=True)
         if crash_after is not None and step >= crash_after:
             raise RuntimeError(f"injected crash at step {step}")
     return {"final_state": state, "metrics": metrics_hist, "last_step": step}

@@ -1,0 +1,38 @@
+"""repro.pipeline — one declarative, serializable API over the whole loader.
+
+The layers built in PRs 1–3 (:func:`repro.data.open_collection`,
+:class:`repro.core.ScDataset`, :class:`repro.core.PrefetchPool`, the
+autotuner) stay the documented low-level surface; this package is the glue
+users actually construct through:
+
+- :class:`DataSpec` — a frozen, JSON-round-trippable record of *everything*
+  that determines the minibatch stream, with a :meth:`DataSpec.fingerprint`
+  hash that rides in checkpoints so resume refuses a drifted spec.
+- :class:`Pipeline` — the fluent builder
+  (``Pipeline.from_uri(...).strategy(...).batch(...).shard(...)
+  .prefetch(...).autotune(...).build()``).
+- :class:`DataPipeline` — the built object: iterate it, checkpoint it
+  (``state``/``load_state``), introspect it (``plan_epoch``, ``stats``,
+  ``check_drift``), close it.
+
+Quickstart: the README front-door snippet; field reference:
+``docs/pipeline.md``.
+"""
+from .builder import DataPipeline, Pipeline
+from .spec import (
+    SPEC_VERSION,
+    STRATEGY_REGISTRY,
+    DataSpec,
+    strategy_from_spec,
+    strategy_to_spec,
+)
+
+__all__ = [
+    "DataSpec",
+    "Pipeline",
+    "DataPipeline",
+    "STRATEGY_REGISTRY",
+    "SPEC_VERSION",
+    "strategy_from_spec",
+    "strategy_to_spec",
+]

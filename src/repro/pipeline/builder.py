@@ -1,0 +1,525 @@
+"""Pipeline — the fluent face of :class:`~repro.pipeline.spec.DataSpec`.
+
+One declarative chain replaces the four hand-wired layers::
+
+    from repro.pipeline import Pipeline
+
+    pipe = (Pipeline.from_uri("sharded-csr:///data/tahoe",
+                              cache_bytes=64 << 20, io_workers=4, readahead=1)
+            .strategy("block", block_size=16)
+            .batch(64, fetch_factor=8)
+            .shard(rank=0, world_size=1)
+            .seed(0)
+            .prefetch(workers=2)
+            .build())
+    for minibatch in pipe:
+        ...
+
+Every chain method records into the spec and returns the builder, so
+``pipe.spec.to_json()`` is the full reproducible description of the stream;
+``DataSpec.from_json(...).build()`` rebuilds it bit-identically.
+``.autotune()`` probes the opened collection through
+:func:`repro.core.autotune.probe_collection` and folds the recommended
+``(block_size, fetch_factor)`` back INTO the spec before building — tuning
+is part of the recorded config, not a side effect.
+
+The built :class:`DataPipeline` iterates minibatches, owns checkpoint state
+(:meth:`DataPipeline.state` carries the spec fingerprint;
+:meth:`DataPipeline.load_state` REFUSES a state whose fingerprint does not
+match — a resumed job cannot silently train on a drifted stream), and
+exposes the underlying layers (``collection``, ``dataset``) for anything
+the high-level surface does not cover.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator, Optional
+
+from repro.core.autotune import Recommendation, fit_and_recommend
+from repro.core.dataset import LoaderState, ScDataset
+from repro.core.prefetch import PrefetchPool
+from repro.core.sampling import SamplingStrategy
+
+from .spec import DataSpec, strategy_from_spec, strategy_to_spec
+
+__all__ = ["Pipeline", "DataPipeline"]
+
+
+class Pipeline:
+    """Fluent builder accumulating a :class:`DataSpec`.
+
+    Construct with :meth:`from_uri` (serializable — the normal case),
+    :meth:`from_spec` (rebuild a recorded config), or
+    :meth:`from_collection` (an in-process collection object; the spec then
+    has ``uri=None`` and cannot be serialized, but everything else —
+    fingerprinting, autotune, prefetch — works).
+    """
+
+    #: spec fields that only take effect when the collection is OPENED —
+    #: changing one after a build must reopen (from_uri) or error
+    #: (from_collection), never be silently recorded-but-inert.
+    _COLLECTION_FIELDS = (
+        "uri", "cache_bytes", "block_rows", "max_extent_rows",
+        "io_workers", "readahead", "admission", "open_opts",
+    )
+
+    def __init__(self, spec: DataSpec, collection: Any = None, iostats: Any = None):
+        self._spec = spec
+        self._collection = collection  # pre-opened / in-process collection
+        # True only for collections THIS builder opened from the spec's URI:
+        # those are released by DataPipeline.close(); caller-supplied
+        # collections are never touched.
+        self._owns_collection = False
+        # runtime-only handle: a caller-owned IOStats (e.g. a benchmark's
+        # simulated-latency model) threaded into open_collection.  Never part
+        # of the spec — it changes accounting/timing, not stream content.
+        self._iostats = iostats
+
+    # ------------------------------------------------------------ entries
+    @classmethod
+    def from_uri(
+        cls,
+        uri: str,
+        *,
+        cache_bytes: Optional[int] = None,
+        block_rows: Optional[int] = None,
+        max_extent_rows: Optional[int] = None,
+        io_workers: int = 1,
+        readahead: int = 0,
+        admission: str = "always",
+        iostats: Any = None,
+        **open_opts,
+    ) -> "Pipeline":
+        """Start from any registered storage URI (see the README's scheme
+        table) plus the planner/async knobs of ``open_collection``.  Extra
+        keywords are opener options (``seq_len``, ``driver``, ``profile``…)
+        and are recorded in the spec like everything else.  ``None`` knobs
+        mean "backend default"; ``max_extent_rows=0`` means UNBOUNDED (the
+        spec's JSON spelling of ``open_collection``'s explicit ``None``).
+        ``iostats`` is the one runtime-only argument: a caller-owned
+        :class:`~repro.data.iostats.IOStats` threaded into the collection
+        (accounting/simulation, not stream content — never serialized)."""
+        return cls(DataSpec(
+            uri=uri,
+            cache_bytes=cache_bytes,
+            block_rows=block_rows,
+            max_extent_rows=max_extent_rows,
+            io_workers=io_workers,
+            readahead=readahead,
+            admission=admission,
+            open_opts=dict(open_opts),
+        ), iostats=iostats)
+
+    @classmethod
+    def from_spec(cls, spec: DataSpec) -> "Pipeline":
+        return cls(spec)
+
+    @classmethod
+    def from_collection(cls, collection: Any, **spec_kw) -> "Pipeline":
+        """Wrap an in-process collection (numpy array, MultiIndexable, an
+        already-opened ``PlannedCollection``, a bespoke store).  The spec
+        keeps ``uri=None``: not serializable, and — since an in-process
+        object's data identity cannot be hashed — checkpoint states carry
+        no fingerprint (resume falls back to the seed-only check).  The
+        rest of the chain behaves identically."""
+        return cls(DataSpec(uri=None, **spec_kw), collection=collection)
+
+    # ------------------------------------------------------------- chain
+    @property
+    def spec(self) -> DataSpec:
+        return self._spec
+
+    def _replace(self, **kw) -> "Pipeline":
+        old = self._spec
+        self._spec = old.replace(**kw)
+        # A collection-side knob changed after the collection was already
+        # opened: drop our cached instance so the next build() reopens with
+        # the knobs the spec now records (an already-built DataPipeline
+        # keeps its own reference).  Pre-opened collections are guarded in
+        # _open() instead.
+        if self._owns_collection and any(
+            getattr(old, f) != getattr(self._spec, f)
+            for f in self._COLLECTION_FIELDS
+        ):
+            self._collection = None
+            self._owns_collection = False
+        return self
+
+    def strategy(self, strategy, /, **params) -> "Pipeline":
+        """``.strategy("block", block_size=16)`` (registry name + params) or
+        ``.strategy(BlockShuffling(16))`` (an instance, reverse-registered
+        into the spec; array params are inlined as lists).  Weighted
+        strategies serialize small via obs-column indirection:
+        ``.strategy("class-balanced", block_size=16, labels_obs="cell_line")``.
+        """
+        if isinstance(strategy, SamplingStrategy):
+            if params:
+                raise ValueError("pass params only with a strategy NAME")
+            name, params = strategy_to_spec(strategy)
+            return self._replace(strategy=name, strategy_params=params)
+        return self._replace(strategy=str(strategy), strategy_params=dict(params))
+
+    def batch(
+        self,
+        batch_size: int,
+        *,
+        fetch_factor: Optional[int] = None,
+        drop_last: Optional[bool] = None,
+        sort_fetch_indices: Optional[bool] = None,
+    ) -> "Pipeline":
+        kw: dict = {"batch_size": int(batch_size)}
+        if fetch_factor is not None:
+            kw["fetch_factor"] = int(fetch_factor)
+        if drop_last is not None:
+            kw["drop_last"] = bool(drop_last)
+        if sort_fetch_indices is not None:
+            kw["sort_fetch_indices"] = bool(sort_fetch_indices)
+        return self._replace(**kw)
+
+    def shard(self, rank: int, world_size: int) -> "Pipeline":
+        return self._replace(rank=int(rank), world_size=int(world_size))
+
+    def seed(self, seed: int) -> "Pipeline":
+        return self._replace(seed=int(seed))
+
+    def prefetch(
+        self,
+        *,
+        workers: Optional[int] = None,
+        max_outstanding: Optional[int] = None,
+        straggler_factor: Optional[float] = None,
+        straggler_min_latency: Optional[float] = None,
+        readahead: Optional[int] = None,
+        io_workers: Optional[int] = None,
+    ) -> "Pipeline":
+        """Consumer-side pool (``workers`` + straggler re-issue knobs) and,
+        for convenience, the collection-side async knobs (``readahead`` /
+        ``io_workers``) in one call — they are one decision ("how much
+        concurrency") even though they live on different layers.  Every
+        parameter is set-if-passed, so adjusting one knob never resets
+        another."""
+        kw: dict = {}
+        if workers is not None:
+            kw["prefetch_workers"] = int(workers)
+        if max_outstanding is not None:
+            kw["max_outstanding"] = int(max_outstanding)
+        if straggler_factor is not None:
+            kw["straggler_factor"] = float(straggler_factor)
+        if straggler_min_latency is not None:
+            kw["straggler_min_latency"] = float(straggler_min_latency)
+        if readahead is not None:
+            kw["readahead"] = int(readahead)
+        if io_workers is not None:
+            kw["io_workers"] = int(io_workers)
+        return self._replace(**kw)
+
+    # ----------------------------------------------------------- autotune
+    def autotune(
+        self,
+        *,
+        budget: float = 2e9,
+        probes: int = 3,
+        probe_rows: int = 512,
+        num_classes: int = 14,
+        entropy_slack_bits: float = 0.1,
+        throughput_slack: float = 0.0,
+        apply: bool = True,
+    ) -> "Pipeline":
+        """Probe the collection, recommend ``(block_size, fetch_factor)``,
+        and fold the pick back into the spec (``apply=True``).
+
+        This finally wires :func:`probe_collection` + :func:`recommend`
+        in-process (ROADMAP follow-up): the probe fits the planner-level
+        cost model on the collection THIS spec opens (same cache/async
+        knobs), so the recommendation reflects cache absorption and request
+        semantics.  The tuned values land in the spec — the recorded config
+        IS the tuned config, so fingerprints and JSON round-trips cover it.
+        The fitted model and recommendation are kept on the builder
+        (``last_recommendation``) and handed to the built pipeline, which
+        re-probes on demand when live IOStats drift from the fitted model
+        (:meth:`DataPipeline.check_drift`).
+        """
+        # Probe a FRESH collection instance when we can (uri set): the probe
+        # must not warm the cache / pollute the stats of the collection the
+        # built pipeline will iterate.  In-process collections are probed
+        # directly — there is nothing to reopen.
+        own = self._collection is None
+        col = _open_from_spec(self._spec) if own else self._collection
+        try:
+            rec = fit_and_recommend(
+                col,
+                probes=probes,
+                probe_rows=probe_rows,
+                batch_size=self._spec.batch_size,
+                budget=budget,
+                num_classes=num_classes,
+                entropy_slack_bits=entropy_slack_bits,
+                throughput_slack=throughput_slack,
+            )
+        finally:
+            if own and hasattr(col, "release"):
+                col.release()
+        self.last_recommendation = rec
+        if apply:
+            self._replace(fetch_factor=int(rec.fetch_factor))
+            if self._spec.strategy in ("block", "block-weighted", "class-balanced"):
+                params = {**self._spec.strategy_params,
+                          "block_size": int(rec.block_size)}
+                self._replace(strategy_params=params)
+        return self
+
+    # -------------------------------------------------------------- build
+    def _open(self) -> Any:
+        """The collection this spec describes (opened once, reused).
+
+        A pre-opened collection (``from_collection``) is returned as-is —
+        so collection-side spec knobs CANNOT take effect on it.  Rather
+        than silently recording a configuration the stream does not run
+        under, any non-default collection knob on such a spec is an error:
+        open the collection with those knobs yourself, or use ``from_uri``.
+        """
+        if self._collection is None:
+            self._collection = _open_from_spec(self._spec, iostats=self._iostats)
+            self._owns_collection = True
+            return self._collection
+        s = self._spec
+        if not self._owns_collection:
+            defaults = {
+                f.name: (f.default if f.default is not dataclasses.MISSING
+                         else f.default_factory())  # type: ignore[misc]
+                for f in dataclasses.fields(DataSpec)
+            }
+            overridden = [
+                name for name in self._COLLECTION_FIELDS
+                if name != "uri" and getattr(s, name) != defaults[name]
+            ]
+            if overridden:
+                raise ValueError(
+                    f"collection-side knob(s) {overridden} have no effect on "
+                    "a pre-opened collection (from_collection): pass them to "
+                    "open_collection yourself, or build from_uri"
+                )
+        return self._collection
+
+    def build(self, **dataset_kw) -> "DataPipeline":
+        """Open the collection, resolve the strategy, wire ScDataset (and
+        the PrefetchPool when ``prefetch_workers > 0``) — returns the
+        iterable :class:`DataPipeline`.  ``dataset_kw`` passes through to
+        :class:`ScDataset` for the hooks a declarative spec cannot carry
+        (``batch_transform=...`` etc.)."""
+        s = self._spec
+        col = self._open()
+        strat = strategy_from_spec(s.strategy, s.strategy_params, col)
+        ds = ScDataset(
+            col,
+            strat,
+            batch_size=s.batch_size,
+            fetch_factor=s.fetch_factor,
+            seed=s.seed,
+            rank=s.rank,
+            world_size=s.world_size,
+            drop_last=s.drop_last,
+            sort_fetch_indices=s.sort_fetch_indices,
+            **dataset_kw,
+        )
+        # no fingerprint for in-process collections (see DataPipeline.state)
+        ds.spec_fingerprint = s.fingerprint() if s.uri is not None else None
+        return DataPipeline(
+            s, col, ds,
+            recommendation=getattr(self, "last_recommendation", None),
+            owns_collection=self._owns_collection,
+        )
+
+
+def _open_from_spec(spec: DataSpec, iostats: Any = None) -> Any:
+    """``open_collection`` with exactly the knobs the spec records."""
+    if spec.uri is None:
+        raise ValueError(
+            "pipeline has no collection: use from_uri(...) or "
+            "from_collection(...)"
+        )
+    from repro.data import open_collection
+
+    knobs = {
+        k: v
+        for k, v in (
+            ("cache_bytes", spec.cache_bytes),
+            ("block_rows", spec.block_rows),
+        )
+        if v is not None
+    }
+    if spec.max_extent_rows is not None:
+        # spec encodes "unbounded" as 0 (JSON cannot carry an explicit-None
+        # distinct from unset); open_collection's spelling is None
+        knobs["max_extent_rows"] = (
+            None if spec.max_extent_rows == 0 else spec.max_extent_rows
+        )
+    return open_collection(
+        spec.uri,
+        iostats=iostats,
+        io_workers=spec.io_workers,
+        readahead=spec.readahead,
+        admission=spec.admission,
+        **knobs,
+        **spec.open_opts,
+    )
+
+
+class DataPipeline:
+    """A built pipeline: iterate it, checkpoint it, introspect it.
+
+    Thin by design — sampling semantics live in :class:`ScDataset`, I/O in
+    the collection; this object owns the WIRING (spec <-> layers), the
+    fingerprint-checked resume contract, and lifecycle (``close``).
+    """
+
+    def __init__(
+        self,
+        spec: DataSpec,
+        collection: Any,
+        dataset: ScDataset,
+        *,
+        recommendation: Optional[Recommendation] = None,
+        owns_collection: bool = False,
+    ):
+        self.spec = spec
+        self.collection = collection
+        self.dataset = dataset
+        self.recommendation = recommendation
+        self.owns_collection = owns_collection
+        # the PrefetchPool behind the most recent __iter__ (None when
+        # iterating synchronously) — exposes pool stats / worker balance
+        self.last_pool: Optional[PrefetchPool] = None
+
+    # ------------------------------------------------------------ iterate
+    def __iter__(self) -> Iterator:
+        if self.spec.prefetch_workers > 0:
+            self.last_pool = PrefetchPool(
+                self.dataset,
+                num_workers=self.spec.prefetch_workers,
+                max_outstanding=self.spec.max_outstanding,
+                straggler_factor=self.spec.straggler_factor,
+                straggler_min_latency=self.spec.straggler_min_latency,
+            )
+            return iter(self.last_pool)
+        return iter(self.dataset)
+
+    def epochs(self, num_epochs: int) -> Iterator:
+        for _ in range(num_epochs):
+            yield from iter(self)
+
+    def __len__(self) -> int:
+        """Minibatches THIS RANK yields per epoch (tail-exact)."""
+        return len(self.dataset)
+
+    # -------------------------------------------------------------- state
+    def state(self) -> LoaderState:
+        """Loader state stamped with the spec fingerprint.
+
+        Only URI-backed specs are stamped: an in-process collection
+        (``from_collection``, ``uri=None``) has no serializable data
+        identity to hash, and a fingerprint that cannot tell two arrays
+        apart would be a FALSE guarantee — those states carry
+        ``fingerprint=None`` and resume under the low-level seed check.
+        """
+        st = self.dataset.state()
+        fp = self.spec.fingerprint() if self.spec.uri is not None else None
+        return dataclasses.replace(st, fingerprint=fp)
+
+    def load_state(self, state: LoaderState) -> None:
+        """Resume — refusing a checkpoint from a DIFFERENT stream.
+
+        A state carrying a fingerprint must match this spec's; a state
+        without one (hand-built, or from the low-level surface) falls back
+        to ScDataset's seed check only.
+        """
+        if state.fingerprint is not None:
+            want = self.spec.fingerprint()
+            if state.fingerprint != want:
+                raise ValueError(
+                    f"checkpoint fingerprint {state.fingerprint} does not "
+                    f"match this pipeline's spec ({want}): the spec drifted "
+                    "since the checkpoint was taken — resuming would "
+                    "silently change the minibatch stream. Rebuild from the "
+                    "checkpointed spec (DataSpec.from_json) or start fresh."
+                )
+        self.dataset.load_state(state)
+
+    def set_epoch(self, epoch: int) -> None:
+        self.dataset.set_epoch(epoch)
+
+    # ---------------------------------------------------------- introspect
+    def plan_epoch(self, epoch: Optional[int] = None) -> dict:
+        return self.dataset.plan_epoch(epoch)
+
+    def stats(self) -> dict:
+        if hasattr(self.collection, "stats"):
+            return self.collection.stats()
+        return {}
+
+    @property
+    def schema(self) -> dict:
+        return getattr(self.collection, "schema", {})
+
+    def check_drift(self) -> Optional[float]:
+        """Relative drift of live IOStats from the autotune-fitted model.
+
+        None when the pipeline was not autotuned or the collection carries
+        no stats; otherwise the raw :func:`repro.core.autotune.model_drift`
+        value — compare against your own threshold and call :meth:`retune`
+        when it exceeds it (the ScDataset convenience
+        :meth:`ScDataset.autotune` does the thresholding automatically).
+        """
+        model = getattr(self.recommendation, "model", None)
+        stats = getattr(self.collection, "iostats", None)
+        if model is None or stats is None:
+            return None
+        from repro.core.autotune import model_drift
+
+        return model_drift(model, stats)
+
+    def retune(
+        self,
+        *,
+        budget: float = 2e9,
+        probes: int = 3,
+        probe_rows: int = 512,
+        num_classes: int = 14,
+        entropy_slack_bits: float = 0.1,
+        throughput_slack: float = 0.0,
+    ) -> Recommendation:
+        """Re-probe + re-recommend against the LIVE collection (cache warm,
+        stats flowing).  Does not mutate the spec — returns (and stores as
+        ``recommendation``) the new pick; apply it by rebuilding from an
+        updated spec."""
+        rec = fit_and_recommend(
+            self.collection,
+            probes=probes,
+            probe_rows=probe_rows,
+            batch_size=self.spec.batch_size,
+            budget=budget,
+            num_classes=num_classes,
+            entropy_slack_bits=entropy_slack_bits,
+            throughput_slack=throughput_slack,
+        )
+        self.recommendation = rec
+        return rec
+
+    # ----------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        """Release the collection's executor + OS resources — ONLY when the
+        pipeline opened it (``from_uri``).  Caller-supplied collections
+        (``from_collection``) are never touched: the caller opened them, the
+        caller may be sharing them, the caller closes them."""
+        if not self.owns_collection:
+            return
+        if hasattr(self.collection, "release"):
+            self.collection.release()
+        elif hasattr(self.collection, "close"):
+            self.collection.close()
+
+    def __enter__(self) -> "DataPipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,271 @@
+"""DataSpec — the one frozen, serializable description of a data stream.
+
+After PRs 1–3 the stream a training job consumes is determined by FOUR
+hand-wired layers: ``open_collection`` (URI + planner/async knobs), a
+:class:`~repro.core.sampling.SamplingStrategy`, :class:`ScDataset`
+(batch geometry, seed, rank/world), and :class:`PrefetchPool` (workers).
+A :class:`DataSpec` captures *everything* those layers take — one frozen
+record that:
+
+- round-trips through JSON (``to_json`` / ``from_json``), so a run's exact
+  input pipeline rides in its config/checkpoint and can be rebuilt
+  bit-identically anywhere;
+- hashes to a :meth:`fingerprint` stored in
+  :class:`~repro.core.dataset.LoaderState`, so a checkpoint REFUSES to
+  resume against a drifted spec (different URI, knobs, strategy, geometry —
+  anything that would silently change the minibatch stream);
+- builds: :meth:`DataSpec.build` returns the live
+  :class:`~repro.pipeline.builder.DataPipeline` (delegates to the builder;
+  :class:`~repro.pipeline.builder.Pipeline` is the fluent way to *author*
+  a spec, this module is its storage format).
+
+Strategies are serialized by NAME + JSON params via a small registry
+(:data:`STRATEGY_REGISTRY`).  Array-valued params (weights, labels) are
+stored as lists; the ``weights_obs`` / ``labels_obs`` indirection stores a
+collection obs-column NAME instead and resolves it at build time — specs
+stay small and portable across hosts that hold the same data.
+
+Field-by-field reference: ``docs/pipeline.md`` (kept fresh by
+``tools/check_docs.py``, which fails CI if a field here is undocumented).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Mapping, Optional
+
+import numpy as np
+
+from repro.core.sampling import (
+    BlockShuffling,
+    BlockWeightedSampling,
+    ClassBalancedSampling,
+    SamplingStrategy,
+    Streaming,
+)
+
+__all__ = [
+    "DataSpec",
+    "STRATEGY_REGISTRY",
+    "strategy_to_spec",
+    "strategy_from_spec",
+    "SPEC_VERSION",
+]
+
+#: Bumped when the spec schema changes incompatibly; ``from_json`` rejects
+#: specs from a future version instead of silently misreading them.
+SPEC_VERSION = 1
+
+#: name -> strategy class.  Params are the dataclass fields, JSON-typed;
+#: ``weights`` / ``labels`` may instead arrive as ``weights_obs`` /
+#: ``labels_obs`` (an obs-column name resolved against the collection).
+STRATEGY_REGISTRY: dict[str, type] = {
+    "streaming": Streaming,
+    "block": BlockShuffling,
+    "block-weighted": BlockWeightedSampling,
+    "class-balanced": ClassBalancedSampling,
+}
+_STRATEGY_NAMES = {cls: name for name, cls in STRATEGY_REGISTRY.items()}
+
+# Array-valued strategy params and their obs-column indirection keys.
+_ARRAY_PARAMS = {"weights": "weights_obs", "labels": "labels_obs"}
+
+
+def strategy_to_spec(strategy: SamplingStrategy) -> tuple[str, dict]:
+    """(name, JSON-safe params) for a registered strategy instance."""
+    cls = type(strategy)
+    name = _STRATEGY_NAMES.get(cls)
+    if name is None:
+        raise ValueError(
+            f"{cls.__name__} is not a registered strategy "
+            f"({sorted(STRATEGY_REGISTRY)}); pass .strategy(name, **params) "
+            "or register the class in STRATEGY_REGISTRY"
+        )
+    params = {}
+    for f in dataclasses.fields(strategy):
+        v = getattr(strategy, f.name)
+        if v is None:
+            continue
+        if isinstance(v, np.ndarray):
+            v = v.tolist()
+        elif isinstance(v, np.generic):
+            v = v.item()
+        params[f.name] = v
+    return name, params
+
+
+def strategy_from_spec(
+    name: str, params: Mapping[str, Any], collection: Any = None
+) -> SamplingStrategy:
+    """Instantiate a strategy from its spec form.
+
+    ``weights_obs`` / ``labels_obs`` params name an obs column of
+    ``collection`` (any object with ``obs_column``); list-valued ``weights``
+    / ``labels`` become arrays.
+    """
+    cls = STRATEGY_REGISTRY.get(name)
+    if cls is None:
+        raise ValueError(
+            f"unknown strategy {name!r}; known: {sorted(STRATEGY_REGISTRY)}"
+        )
+    kw = dict(params)
+    for array_key, obs_key in _ARRAY_PARAMS.items():
+        col_name = kw.pop(obs_key, None)
+        if col_name is not None:
+            if collection is None or not hasattr(collection, "obs_column"):
+                raise ValueError(
+                    f"strategy param {obs_key}={col_name!r} needs a collection "
+                    "with obs columns to resolve against"
+                )
+            kw[array_key] = np.asarray(collection.obs_column(col_name))
+        elif isinstance(kw.get(array_key), list):
+            kw[array_key] = np.asarray(kw[array_key])
+    return cls(**kw)
+
+
+def _jsonable(x: Any) -> Any:
+    """Coerce numpy scalars/arrays so the spec dict is pure-JSON."""
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    if isinstance(x, np.generic):
+        return x.item()
+    if isinstance(x, dict):
+        return {k: _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """Everything that determines a minibatch stream, in one frozen record.
+
+    See ``docs/pipeline.md`` for the field reference.  Instances are
+    authored by :class:`~repro.pipeline.builder.Pipeline` (fluent) or
+    directly; ``from_json(to_json())`` rebuilds a pipeline whose stream is
+    bitwise-identical (tested per backend in ``tests/test_pipeline_api.py``).
+    """
+
+    # ---- collection: WHAT data, through WHICH planner configuration
+    uri: Optional[str] = None  # scheme://path; None = in-process collection
+    cache_bytes: Optional[int] = None  # LRU budget; None = backend default
+    block_rows: Optional[int] = None  # cache granularity (rows per block)
+    max_extent_rows: Optional[int] = None  # cap on one physical read;
+    # None = backend default (32768), 0 = UNBOUNDED (JSON has no way to
+    # distinguish "unset" from "explicit None", so 0 carries that meaning)
+    io_workers: int = 1  # >1: concurrent miss-extent reads
+    readahead: int = 0  # >0: fetches double-buffered ahead
+    admission: str = "always"  # always | auto | never
+    open_opts: dict = dataclasses.field(default_factory=dict)  # opener kwargs
+
+    # ---- sampling: WHICH rows, in WHAT order
+    strategy: str = "block"  # STRATEGY_REGISTRY name
+    strategy_params: dict = dataclasses.field(
+        default_factory=lambda: {"block_size": 16}
+    )
+
+    # ---- geometry: HOW the order becomes minibatches
+    batch_size: int = 64  # paper's m
+    fetch_factor: int = 1  # paper's f (rows per fetch = m*f)
+    drop_last: bool = True  # drop the ragged tail fetch/batch
+    sort_fetch_indices: bool = True  # Alg. 1 line 7
+
+    # ---- placement: WHO consumes which fetches
+    seed: int = 0
+    rank: int = 0
+    world_size: int = 1
+
+    # ---- prefetch: the consumer-side worker pool
+    prefetch_workers: int = 0  # 0 = synchronous iteration
+    max_outstanding: int = 4  # resident fetch buffers in the pool
+    straggler_factor: float = 3.0  # re-issue at this x median fetch latency
+    straggler_min_latency: float = 0.05  # floor (s) before re-issue fires
+
+    version: int = SPEC_VERSION
+
+    # ------------------------------------------------------------ validate
+    def __post_init__(self):
+        if self.batch_size <= 0 or self.fetch_factor <= 0:
+            raise ValueError("batch_size and fetch_factor must be positive")
+        if not (0 <= self.rank < self.world_size):
+            raise ValueError(
+                f"rank {self.rank} out of range for world_size {self.world_size}"
+            )
+        if self.admission not in ("always", "auto", "never"):
+            raise ValueError(
+                f"admission must be always|auto|never, got {self.admission!r}"
+            )
+        if self.prefetch_workers < 0 or self.io_workers < 1 or self.readahead < 0:
+            raise ValueError(
+                "prefetch_workers must be >= 0, io_workers >= 1, readahead >= 0"
+            )
+        if self.strategy not in STRATEGY_REGISTRY:
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; known: "
+                f"{sorted(STRATEGY_REGISTRY)}"
+            )
+
+    # ----------------------------------------------------------- serialize
+    def replace(self, **kw) -> "DataSpec":
+        return dataclasses.replace(self, **kw)
+
+    def to_dict(self) -> dict:
+        return _jsonable(dataclasses.asdict(self))
+
+    def to_json(self, *, indent: Optional[int] = None) -> str:
+        if self.uri is None:
+            raise ValueError(
+                "spec holds an in-process collection (uri=None) and cannot "
+                "be serialized; build from a URI for a portable spec"
+            )
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @staticmethod
+    def from_dict(d: Mapping[str, Any]) -> "DataSpec":
+        d = dict(d)
+        version = int(d.pop("version", SPEC_VERSION))
+        if version > SPEC_VERSION:
+            raise ValueError(
+                f"spec version {version} is newer than this code's "
+                f"{SPEC_VERSION}; refusing to guess at its meaning"
+            )
+        known = {f.name for f in dataclasses.fields(DataSpec)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown DataSpec field(s): {sorted(unknown)}")
+        return DataSpec(version=version, **d)
+
+    @staticmethod
+    def from_json(s: str) -> "DataSpec":
+        return DataSpec.from_dict(json.loads(s))
+
+    def fingerprint(self) -> str:
+        """Stable short hash of everything that determines the stream.
+
+        Rank-independent and prefetch-independent ON PURPOSE: every rank of
+        one job shares a fingerprint (the global sequence is shared), and
+        worker counts / planner caching change wall-clock, not content.
+        Stored in :class:`~repro.core.dataset.LoaderState`; checked on
+        resume by :meth:`DataPipeline.load_state`.
+        """
+        d = self.to_dict()
+        for content_free in ("rank", "prefetch_workers", "max_outstanding",
+                             "straggler_factor", "straggler_min_latency",
+                             "cache_bytes", "block_rows", "max_extent_rows",
+                             "io_workers", "readahead", "admission"):
+            d.pop(content_free, None)
+        blob = json.dumps(d, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()[:16]
+
+    # --------------------------------------------------------------- build
+    def build(self, **dataset_kw):
+        """Open, wire and return the live :class:`DataPipeline`.
+
+        ``dataset_kw`` forwards to :class:`~repro.core.ScDataset` (runtime
+        hooks like ``batch_transform`` that a declarative record cannot
+        carry).
+        """
+        from .builder import Pipeline
+
+        return Pipeline.from_spec(self).build(**dataset_kw)

@@ -32,14 +32,26 @@ def test_every_registered_scheme_documented(readme_text):
 
 def test_quickstart_snippet_executes(readme_text):
     snippet = check_docs.extract_quickstart(readme_text)
-    assert "open_collection" in snippet  # the snippet shows the real API
+    # the snippet shows the real front-door API: the Pipeline chain + the
+    # DataSpec JSON round-trip
+    assert "Pipeline.from_uri" in snippet and "DataSpec.from_json" in snippet
     check_docs.run_quickstart(snippet)
 
 
 def test_promised_docs_exist():
     root = os.path.join(os.path.dirname(__file__), "..")
-    for rel in ("docs/adapters.md", "docs/architecture.md"):
+    for rel in ("docs/adapters.md", "docs/architecture.md", "docs/pipeline.md"):
         p = os.path.join(root, rel)
         assert os.path.exists(p), f"{rel} promised by README/ROADMAP but missing"
         with open(p) as f:
             assert len(f.read()) > 1000, f"{rel} is a stub"
+
+
+def test_every_dataspec_field_documented():
+    with open(check_docs.PIPELINE_DOC) as f:
+        text = f.read()
+    undocumented = check_docs.check_spec_fields(text)
+    assert not undocumented, (
+        f"DataSpec fields missing from docs/pipeline.md: {undocumented} "
+        "(regenerate with `python tools/check_docs.py --spec-table`)"
+    )

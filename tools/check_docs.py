@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs-freshness gate (run in CI; see .github/workflows/ci.yml).
 
-Two checks keep README.md honest against the code:
+Three checks keep the docs honest against the code:
 
 1. **Scheme table coverage** — import the live backend registry
    (``repro.data.registered_schemes``) and fail if any registered URI scheme
@@ -10,6 +10,10 @@ Two checks keep README.md honest against the code:
 2. **Executable quickstart** — extract the FIRST fenced ``python`` block
    from the README and ``exec`` it.  The snippet is the repo's front door;
    if it drifts from the API it breaks here, loudly.
+3. **DataSpec field reference** — every field of
+   ``repro.pipeline.DataSpec`` must appear as a ``| `field` |`` row in
+   ``docs/pipeline.md`` (the spec-field reference is generated from the
+   dataclass; adding a field without documenting it fails the build).
 
 Exit code 0 = docs fresh; nonzero with a pointed message otherwise.
 """
@@ -23,6 +27,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
 
 README = os.path.join(REPO, "README.md")
+PIPELINE_DOC = os.path.join(REPO, "docs", "pipeline.md")
 
 
 def check_scheme_table(readme_text: str) -> list[str]:
@@ -33,6 +38,39 @@ def check_scheme_table(readme_text: str) -> list[str]:
         s for s in registered_schemes() if f"`{s}://" not in readme_text
     ]
     return missing
+
+
+def check_spec_fields(pipeline_doc_text: str) -> list[str]:
+    """Every DataSpec field needs a ``| `field` |`` row in docs/pipeline.md."""
+    import dataclasses
+
+    from repro.pipeline import DataSpec
+
+    return [
+        f.name
+        for f in dataclasses.fields(DataSpec)
+        if f"| `{f.name}`" not in pipeline_doc_text
+    ]
+
+
+def spec_field_table() -> str:
+    """The reference table skeleton, straight from the dataclass — paste
+    into docs/pipeline.md when fields change (``python tools/check_docs.py
+    --spec-table``)."""
+    import dataclasses
+
+    from repro.pipeline import DataSpec
+
+    rows = ["| Field | Default | Meaning |", "|---|---|---|"]
+    for f in dataclasses.fields(DataSpec):
+        if f.default is not dataclasses.MISSING:
+            default = repr(f.default)
+        elif f.default_factory is not dataclasses.MISSING:  # type: ignore[misc]
+            default = repr(f.default_factory())  # type: ignore[misc]
+        else:
+            default = ""
+        rows.append(f"| `{f.name}` | `{default}` | TODO |")
+    return "\n".join(rows)
 
 
 def extract_quickstart(readme_text: str) -> str:
@@ -48,6 +86,9 @@ def run_quickstart(snippet: str) -> None:
 
 
 def main() -> int:
+    if "--spec-table" in sys.argv[1:]:
+        print(spec_field_table())
+        return 0
     with open(README) as f:
         text = f.read()
 
@@ -71,6 +112,21 @@ def main() -> int:
         print(f"FAIL: README quickstart snippet raised {type(e).__name__}: {e}")
         raise
     print("OK: README quickstart snippet executed end to end")
+
+    if not os.path.exists(PIPELINE_DOC):
+        print("FAIL: docs/pipeline.md (DataSpec field reference) is missing")
+        return 1
+    with open(PIPELINE_DOC) as f:
+        undocumented = check_spec_fields(f.read())
+    if undocumented:
+        print(
+            f"FAIL: DataSpec field(s) missing from docs/pipeline.md: "
+            f"{undocumented}\n"
+            "      regenerate the table skeleton with "
+            "`python tools/check_docs.py --spec-table`"
+        )
+        return 1
+    print("OK: every DataSpec field documented in docs/pipeline.md")
     return 0
 
 
