@@ -1,0 +1,306 @@
+"""PR 5 — the adaptive I/O engine vs the best static configuration.
+
+Claim under test: on weighted sampling over high-latency per-request storage
+(the regime the paper's block sampling is pitched at), closing the loop
+between IOStats and the planner knobs beats any hand-picked static
+``(readahead, io_workers, admission)`` setting:
+
+- **TinyLFU admission** (``admission="auto"``) keeps the hot redraw set
+  resident when the sampled block working set exceeds ``cache_bytes`` —
+  pure LRU churns it, so every redraw of a hot block pays another GET;
+- **adaptive readahead** (``readahead="auto"``) withdraws staging under
+  eviction pressure (it would evict the protected hot set) and deepens it
+  when the cache has headroom;
+- **autotuned io_workers** comes from the fitted per-request cost model
+  (:func:`repro.core.autotune.recommend_concurrency`).
+
+The fixture is the shared Tahoe-like dataset behind
+``cloud://sharded-csr://...?profile=cross-region`` with ``latency_scale=0``:
+no real sleeping, so the measurement is pure COUNTERS, and throughput is
+*modeled* from them — ``t = requests * first_byte_s / min(W, max_inflight)
++ bytes / bw_Bps`` — which is deterministic and CI-stable.  Block weights
+are Zipf-skewed (hot head, long tail) and the cache holds only ~a quarter
+of the drawn working set, so admission policy is the decisive lever.
+
+``run_adaptive`` writes machine-readable ``BENCH_PR5.json``; the smoke gate
+(``benchmarks/run.py --smoke``) fails CI when the adaptive engine does not
+beat the best static cell by ``ADAPTIVE_FLOOR`` (1.3x).
+
+A second cell, ``coalesce_micro``, is the satellite microbenchmark for the
+vectorized span planner: the old per-run Python-tuple ``coalesce_rows`` vs
+the new ``(n, 2)`` array pipeline on a weighted-epoch-sized index set.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_DATA_DIR, N_CELLS, N_GENES, emit
+
+from repro.core import BlockWeightedSampling
+from repro.core.autotune import probe_collection, recommend_concurrency
+from repro.data import CLOUD_PROFILES, IOStats, open_collection
+from repro.data.synth import generate_tahoe_like
+from repro.pipeline import Pipeline
+
+PR5_JSON = os.environ.get("BENCH_PR5_JSON", "BENCH_PR5.json")
+ADAPTIVE_FLOOR = 1.3
+
+M = 64  # minibatch size
+F = 8  # fetch factor -> 512-row fetches = 8 drawn blocks per fetch
+BLOCK = 64  # sampling block == cache block (drawn blocks map 1:1)
+PROFILE = "cross-region"
+# cache ~= a tenth of the drawn block universe: the weighted working set
+# EXCEEDS the budget, which is exactly the regime TinyLFU admission targets
+CACHE_FRACTION = 0.1
+# two-tier skew: a broad hot set of ~0.8x cache capacity carries HOT_MASS of
+# the draw probability, the cold tail the rest.  This is the shape LRU loses
+# on: every cold-tail draw (distinct, never redrawn) evicts a hot-set member
+# it will need again, while frequency admission rejects the cold singletons.
+# A steeper head (Zipf) would let LRU keep the few hottest blocks just as
+# well, hiding the admission difference.
+HOT_CACHE_FRACTION = 0.8
+HOT_MASS = 0.8
+ADAPTIVE_BATCHES = int(os.environ.get("BENCH_ADAPTIVE_BATCHES", "3600"))
+
+# Hand-pickable static cells: the (readahead, io_workers) corners a user
+# would reasonably choose, crossed with the STATIC admission policies.
+# ``admission="auto"`` is deliberately absent — on this (non-streaming)
+# weighted fixture "auto" IS the TinyLFU engine under test, not a static
+# baseline; the static choices are plain LRU ("always", which pre-PR5
+# "auto" degenerated to here) and no caching at all ("never").
+STATIC_CELLS = (
+    {"io_workers": 1, "readahead": 0, "admission": "always"},
+    {"io_workers": 4, "readahead": 0, "admission": "always"},
+    {"io_workers": 4, "readahead": 1, "admission": "always"},
+    {"io_workers": 16, "readahead": 1, "admission": "always"},
+    {"io_workers": 16, "readahead": 0, "admission": "never"},
+)
+
+
+def _block_weights(n: int, cache_blocks: int) -> np.ndarray:
+    """Two-tier per-row weights, constant within each cache block.
+
+    ``HOT_CACHE_FRACTION * cache_blocks`` hot blocks share ``HOT_MASS`` of
+    the draw probability; the cold tail shares the rest.  Hot blocks are
+    scattered over the row space (deterministic permutation) so their reads
+    never coalesce into one extent — each redraw of an evicted block is a
+    real GET.
+    """
+    n_blocks = (n + BLOCK - 1) // BLOCK
+    hot = max(1, min(n_blocks - 1, int(cache_blocks * HOT_CACHE_FRACTION)))
+    perm = np.random.default_rng(7).permutation(n_blocks)
+    w_block = np.full(n_blocks, (1.0 - HOT_MASS) / (n_blocks - hot))
+    w_block[perm[:hot]] = HOT_MASS / hot
+    return w_block[np.arange(n, dtype=np.int64) // BLOCK]
+
+
+def _open(cache_bytes: int, **knobs):
+    stats = IOStats()
+    col = open_collection(
+        f"cloud://sharded-csr://{BENCH_DATA_DIR}?profile={PROFILE}"
+        "&latency_scale=0",
+        iostats=stats,
+        cache_bytes=cache_bytes,
+        block_rows=BLOCK,
+        **knobs,
+    )
+    return col, stats
+
+
+def _modeled_sps(stats: IOStats, samples: int, io_workers: int) -> float:
+    """Samples/sec under the UNSCALED cross-region request model, from the
+    measured counters alone: per-GET first-byte latency overlapped by
+    ``min(io_workers, max_inflight)`` concurrent requests, plus streaming
+    the read bytes.  Deterministic — no wall-clock noise in the gate."""
+    prof = CLOUD_PROFILES[PROFILE]
+    w_eff = min(max(1, int(io_workers)), prof.max_inflight)
+    t = (stats.requests * prof.first_byte_s / w_eff
+         + stats.bytes_read / prof.bw_Bps)
+    return samples / max(t, 1e-12)
+
+
+def _run_cell(name: str, *, cache_bytes: int, weights: np.ndarray,
+              io_workers: int, readahead, admission: str,
+              cross_epoch: bool = False) -> dict:
+    col, stats = _open(cache_bytes, io_workers=io_workers,
+                       readahead=readahead, admission=admission)
+    pipe = (
+        Pipeline.from_collection(col)
+        .strategy(BlockWeightedSampling(block_size=BLOCK, weights=weights))
+        .batch(M, fetch_factor=F)
+        .seed(0)
+        .prefetch(cross_epoch=cross_epoch)
+        .build()
+    )
+    n = 0
+    t0 = time.perf_counter()
+    for _ in pipe.epochs(8):  # more epochs than the drain can consume
+        n += 1
+        if n >= ADAPTIVE_BATCHES:
+            break
+    cpu_wall = time.perf_counter() - t0
+    samples = n * M
+    out = {
+        "samples": samples,
+        "sps_modeled": _modeled_sps(stats, samples, io_workers),
+        "requests": stats.requests,
+        "requests_per_sample": stats.requests / max(1, stats.rows),
+        "bytes_read": stats.bytes_read,
+        "cache_hit_rate": stats.cache_hit_rate,
+        "prefetched": stats.prefetched,
+        "adm_bypassed": stats.adm_bypassed,
+        "adm_rejected": stats.adm_rejected,
+        "cpu_wall_s": cpu_wall,
+        "io_workers": io_workers,
+        "readahead": readahead,
+        "admission": admission,
+    }
+    cstats = col.stats()
+    if "readahead" in cstats:
+        out["readahead_controller"] = cstats["readahead"]
+    col.release()
+    emit(name, 1e6 / max(out["sps_modeled"], 1e-9),
+         f"sps_modeled={out['sps_modeled']:.1f};"
+         f"req_per_sample={out['requests_per_sample']:.4f};"
+         f"hit_rate={out['cache_hit_rate']:.2f};io_workers={io_workers};"
+         f"readahead={readahead};admission={admission}")
+    return out
+
+
+def coalesce_micro() -> dict:
+    """Vectorized (n, 2)-span planner vs the old per-run Python-tuple build
+    on a weighted-epoch-sized index set (satellite microbenchmark)."""
+    from repro.data.readplan import coalesce_rows
+
+    def coalesce_rows_tuples(sorted_unique):
+        # the pre-PR5 implementation, kept inline as the baseline
+        if len(sorted_unique) == 0:
+            return []
+        breaks = np.flatnonzero(np.diff(sorted_unique) != 1)
+        firsts = np.concatenate(([0], breaks + 1))
+        lasts = np.concatenate((breaks, [len(sorted_unique) - 1]))
+        return [
+            (int(sorted_unique[a]), int(sorted_unique[b]) + 1)
+            for a, b in zip(firsts, lasts)
+        ]
+
+    rng = np.random.default_rng(0)
+    # ~a weighted epoch of drawn blocks: 100k scattered 16-row blocks
+    starts = np.sort(rng.integers(0, 50_000_000, size=100_000)) * 16
+    rows = np.unique((starts[:, None] + np.arange(16)[None, :]).reshape(-1))
+
+    def best_of(fn, reps=5):
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn(rows)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_old = best_of(coalesce_rows_tuples)
+    t_new = best_of(coalesce_rows)
+    ref = coalesce_rows_tuples(rows)
+    got = coalesce_rows(rows)
+    identical = (len(ref) == len(got)
+                 and bool(np.array_equal(np.asarray(ref), got)))
+    speedup = t_old / max(t_new, 1e-12)
+    emit("readplan_coalesce_micro", t_new * 1e6,
+         f"rows={len(rows)};runs={len(got)};t_tuples_ms={t_old*1e3:.1f};"
+         f"t_vector_ms={t_new*1e3:.1f};speedup={speedup:.1f}x;"
+         f"identical={identical}")
+    return {
+        "rows": int(len(rows)),
+        "runs": int(len(got)),
+        "t_tuples_s": t_old,
+        "t_vectorized_s": t_new,
+        "speedup": speedup,
+        "identical": identical,
+    }
+
+
+def run_adaptive(write_json: bool = True) -> dict:
+    generate_tahoe_like(BENCH_DATA_DIR, n_cells=N_CELLS, n_genes=N_GENES,
+                        seed=0)
+    probe_col, _ = _open(cache_bytes=0)
+    n = len(probe_col)
+    n_blocks = (n + BLOCK - 1) // BLOCK
+    cache_blocks = max(4, int(CACHE_FRACTION * n_blocks))
+    block_bytes = probe_col.avg_row_bytes * BLOCK
+    cache_bytes = int(cache_blocks * block_bytes)
+    weights = _block_weights(n, cache_blocks)
+
+    # fit the per-request cost model through the planner; latency_scale=0
+    # means the fit sees only CPU, so anchor c_seek at the profile's
+    # first-byte floor (it is slept on every real GET) before asking for
+    # the concurrency pick — same anchoring as the fig2 cloud grid.
+    model = probe_collection(probe_col, probes=3, probe_rows=512)
+    model.c_seek = max(model.c_seek, CLOUD_PROFILES[PROFILE].first_byte_s)
+    probe_col.release()
+    rec_workers, rec_readahead = recommend_concurrency(
+        model, batch_size=M, fetch_factor=F, block_size=BLOCK
+    )
+    emit("adaptive_recommend_concurrency", 0.0,
+         f"io_workers={rec_workers};readahead={rec_readahead};"
+         f"c_seek_ms={model.c_seek*1e3:.1f}")
+
+    statics = {}
+    for cell in STATIC_CELLS:
+        name = (f"adaptive_static_w{cell['io_workers']}_r{cell['readahead']}"
+                f"_{cell['admission']}")
+        statics[name] = _run_cell(
+            name, cache_bytes=cache_bytes, weights=weights, **cell,
+        )
+    adaptive = _run_cell(
+        "adaptive_engine", cache_bytes=cache_bytes, weights=weights,
+        io_workers=rec_workers, readahead=rec_readahead, admission="auto",
+        cross_epoch=True,
+    )
+    best_name, best = max(statics.items(), key=lambda kv: kv[1]["sps_modeled"])
+    speedup = adaptive["sps_modeled"] / max(best["sps_modeled"], 1e-9)
+    ok = speedup >= ADAPTIVE_FLOOR
+    emit("adaptive_vs_best_static", 0.0,
+         f"speedup={speedup:.2f}x;floor={ADAPTIVE_FLOOR}x;"
+         f"best_static={best_name};pass={ok}")
+    micro = coalesce_micro()
+    out = {
+        "bench": "adaptive_io_engine",
+        "fixture": {
+            "n_cells": n,
+            "profile": PROFILE,
+            "block_rows": BLOCK,
+            "batch_size": M,
+            "fetch_factor": F,
+            "hot_cache_fraction": HOT_CACHE_FRACTION,
+            "hot_mass": HOT_MASS,
+            "cache_bytes": cache_bytes,
+            "working_set_bytes": int(n_blocks * block_bytes),
+            "batches": ADAPTIVE_BATCHES,
+        },
+        "recommended": {"io_workers": rec_workers,
+                        "readahead": rec_readahead},
+        "static": statics,
+        "best_static": best_name,
+        "adaptive": adaptive,
+        "speedup": speedup,
+        "floor": ADAPTIVE_FLOOR,
+        "pass": bool(ok),
+        "coalesce_micro": micro,
+    }
+    if write_json:
+        with open(PR5_JSON, "w") as fh:
+            json.dump(out, fh, indent=2)
+        print(f"# wrote {PR5_JSON}")
+    return out
+
+
+def run() -> dict:
+    return run_adaptive(write_json=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

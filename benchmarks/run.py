@@ -3,7 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV rows (shared ``emit`` helper) and a
 summary.  Individual benches: ``python -m benchmarks.bench_fig2_throughput``.
 Environment knobs: BENCH_N_CELLS (default 150000), BENCH_MEASURE_S (1.5),
-BENCH_SKIP (comma-list: fig2,fig3,fig4,fig5,table2,roofline,kernels).
+BENCH_SKIP (comma-list: fig2,fig3,fig4,fig5,table2,roofline,kernels,
+autotune,adaptive).
 
 ``--smoke`` runs ONLY the fast CI gates on a tiny fixture:
 
@@ -19,7 +20,12 @@ BENCH_SKIP (comma-list: fig2,fig3,fig4,fig5,table2,roofline,kernels).
 3. pipeline parity -> ``BENCH_PR4.json`` (the fig2 cell built through
    ``repro.pipeline`` vs hand-wired ``open_collection`` + ``ScDataset``);
    exits nonzero unless samples/sec agree within 5% AND the IOStats
-   counters are identical — the declarative surface must be free glue.
+   counters are identical — the declarative surface must be free glue;
+4. the adaptive I/O engine -> ``BENCH_PR5.json`` (weighted sampling over
+   the ``cross-region`` cloud fixture, counter-modeled samples/sec): the
+   adaptive configuration (TinyLFU admission + readahead="auto" +
+   autotuned io_workers) must beat the BEST static (readahead,
+   io_workers, admission) cell by ``ADAPTIVE_FLOOR`` (1.3x).
 """
 from __future__ import annotations
 
@@ -66,7 +72,16 @@ def smoke() -> int:
         f"sps diff (tol 5%), counters identical="
         f"{parity['counters_identical']} -> {'OK' if pok else 'FAIL'}"
     )
-    return 0 if (ok and cok and pok) else 1
+    from benchmarks import bench_adaptive
+
+    adaptive = bench_adaptive.run_adaptive(write_json=True)
+    aok = adaptive["pass"]
+    print(
+        f"# smoke: adaptive engine {adaptive['speedup']:.2f}x best static "
+        f"({adaptive['best_static']}; floor {bench_adaptive.ADAPTIVE_FLOOR}x) "
+        f"-> {'OK' if aok else 'FAIL'}"
+    )
+    return 0 if (ok and cok and pok and aok) else 1
 
 
 def main() -> None:
@@ -108,6 +123,10 @@ def main() -> None:
         from benchmarks import bench_autotune
 
         bench_autotune.run()
+    if "adaptive" not in skip:
+        from benchmarks import bench_adaptive
+
+        bench_adaptive.run()
 
     print(f"# total bench time: {time.time()-t_all:.0f}s")
 

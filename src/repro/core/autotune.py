@@ -39,6 +39,7 @@ __all__ = [
     "probe_io_cost",
     "probe_collection",
     "recommend",
+    "recommend_concurrency",
     "recommend_from",
     "fit_and_recommend",
     "model_drift",
@@ -252,9 +253,63 @@ class Recommendation:
     buffer_bytes: float
     rationale: str
     cache_reserved_bytes: float = 0.0
+    # --- concurrency picks (PR 5): from the fitted per-request cost of the
+    # chosen (b, f) cell.  io_workers is the smallest worker count whose
+    # modeled fetch time sits within 10% of the best (overlapping the
+    # per-run/request latency term); readahead is "auto" when that fetch is
+    # latency-bound (the adaptive controller then finds the depth) and 0
+    # when per-call overhead + streaming dominate (nothing to overlap).
+    io_workers: int = 1
+    readahead: Any = 0  # 0 | "auto"
     # the fitted model this pick came from (drift checks re-measure against
     # it); filled by the Pipeline/ScDataset autotune paths
     model: Optional[IOCostModel] = dataclasses.field(default=None, repr=False)
+
+
+_IO_WORKER_GRID = (1, 2, 4, 8, 16)
+
+
+def recommend_concurrency(
+    cost: IOCostModel,
+    *,
+    batch_size: int,
+    fetch_factor: int,
+    block_size: int,
+    worker_slack: float = 0.1,
+) -> tuple[int, Any]:
+    """``(io_workers, readahead)`` for one (m, f, b) cell from the fitted
+    per-request cost model.
+
+    The latency term of a fetch is ``c_seek`` per physical run/request;
+    ``W`` workers overlap those, so the modeled fetch time is ``c0 +
+    c_seek * ceil(n_seeks / W) + byte_term``.  The pick is the SMALLEST
+    ``W`` within ``worker_slack`` of the best — threads a cheap store
+    cannot repay are not spent, and on per-request storage (``cloud://``,
+    where ``c_seek`` is the fitted per-GET cost) the recommended count
+    grows with first-byte latency.  ``readahead`` is ``"auto"`` when the
+    remaining latency term still dominates per-call overhead + streaming
+    (double-buffering has real I/O to hide), else 0.
+    """
+    m, f, b = int(batch_size), int(fetch_factor), int(block_size)
+    rows = m * f
+    miss = 1.0 - min(max(cost.hit_rate, 0.0), 0.99)
+    k = max(1, rows // max(1, b))
+    coal = cost._coalesce_factor(k, b)
+    n_seeks = k * coal * miss
+    if cost.runs_per_sample is not None:
+        n_seeks = max(n_seeks, cost.runs_per_sample * rows * coal)
+    byte_s = cost.c_byte * rows * cost.row_bytes * miss
+
+    def fetch_s(W: int) -> float:
+        return cost.c0 + cost.c_seek * float(np.ceil(n_seeks / W)) + byte_s
+
+    best = min(fetch_s(W) for W in _IO_WORKER_GRID)
+    io_workers = next(
+        W for W in _IO_WORKER_GRID if fetch_s(W) <= best * (1.0 + worker_slack)
+    )
+    latency_s = cost.c_seek * float(np.ceil(n_seeks / io_workers))
+    readahead = "auto" if latency_s > 0.5 * (cost.c0 + byte_s) else 0
+    return int(io_workers), readahead
 
 
 def recommend(
@@ -337,6 +392,9 @@ def recommend(
         if reserve > 0
         else ""
     )
+    io_workers, readahead = recommend_concurrency(
+        cost, batch_size=m, fetch_factor=f, block_size=b
+    )
     return Recommendation(
         block_size=b,
         fetch_factor=f,
@@ -344,10 +402,13 @@ def recommend(
         entropy_lower_bound=-deficit,
         buffer_bytes=buffer_bytes,
         cache_reserved_bytes=reserve,
+        io_workers=io_workers,
+        readahead=readahead,
         rationale=(
             f"b={b},f={f}: buffer {buffer_bytes/1e6:.1f}MB <= "
             f"{buffer_budget/1e6:.0f}MB, entropy deficit "
             f"{deficit:.3f} bits (IID {iid_deficit:.3f}), modeled {sps:.0f} samp/s"
+            f", io_workers={io_workers}, readahead={readahead!r}"
             f"{planner}"
         ),
     )

@@ -89,6 +89,7 @@ class ScDataset:
         batch_transform: Optional[Callable] = None,
         prefetch_callback: Optional[Callable] = None,
         sort_fetch_indices: bool = True,
+        cross_epoch_prefetch: bool = False,
     ):
         if batch_size <= 0 or fetch_factor <= 0:
             raise ValueError("batch_size and fetch_factor must be positive")
@@ -103,6 +104,7 @@ class ScDataset:
         self.world_size = int(world_size)
         self.drop_last = bool(drop_last)
         self.sort_fetch_indices = bool(sort_fetch_indices)
+        self.cross_epoch_prefetch = bool(cross_epoch_prefetch)
         if callbacks is not None and any(
             cb is not None
             for cb in (fetch_callback, fetch_transform, batch_callback,
@@ -114,7 +116,10 @@ class ScDataset:
             prefetch_callback,
         )
         self._state = LoaderState(seed=self.seed, epoch=0, fetch_cursor=0)
-        self._order_cache: tuple[int, np.ndarray] | None = None  # (epoch, order)
+        # epoch -> materialized order; holds at most TWO epochs (current +
+        # next) so cross-epoch prefetch at the tail does not evict the order
+        # the remaining fetches of this epoch still slice from
+        self._order_cache: dict[int, np.ndarray] = {}
         # Stamped by the Pipeline builder (repro.pipeline) with the spec's
         # content hash; surfaces in plan_epoch.  None for hand-wired loaders.
         self.spec_fingerprint: Optional[str] = None
@@ -159,10 +164,23 @@ class ScDataset:
 
     # -------------------------------------------------------------- plan
     def _epoch_order(self, epoch: int) -> np.ndarray:
-        """Epoch index sequence, cached — pure function of (strategy, seed, epoch)."""
-        if self._order_cache is None or self._order_cache[0] != epoch:
-            self._order_cache = (epoch, self.strategy.epoch_indices(self.n, self.seed, epoch))
-        return self._order_cache[1]
+        """Epoch index sequence, cached — pure function of (strategy, seed,
+        epoch).  The cache keeps two epochs: the one just computed plus the
+        cached epoch NEAREST to it (ties to the lower — the iterating epoch
+        precedes its cross-epoch prefetch target), so an epoch's remaining
+        tail fetches never evict their own order by prefetching the next
+        one, even after a backward ``set_epoch``.  Assigned wholesale, so
+        concurrent PrefetchPool workers at worst recompute — never observe
+        a half-built dict."""
+        order = self._order_cache.get(epoch)
+        if order is None:
+            order = self.strategy.epoch_indices(self.n, self.seed, epoch)
+            kept = {epoch: order}
+            if self._order_cache:
+                near = min(self._order_cache, key=lambda e: (abs(e - epoch), e))
+                kept[near] = self._order_cache[near]
+            self._order_cache = kept
+        return order
 
     def _global_fetch_count(self) -> int:
         total = self.strategy.epoch_len(self.n)
@@ -206,7 +224,9 @@ class ScDataset:
             "world_size": self.world_size,
             "io_workers": int(getattr(col, "io_workers", 1) or 1),
             "readahead": int(getattr(col, "readahead", 0) or 0),
+            "readahead_auto": bool(getattr(col, "readahead_auto", False)),
             "admission": getattr(col, "admission", None),
+            "cross_epoch_prefetch": self.cross_epoch_prefetch,
             "fingerprint": self.spec_fingerprint,
         }
 
@@ -271,7 +291,7 @@ class ScDataset:
                 self.strategy = dataclasses.replace(
                     self.strategy, block_size=int(rec.block_size)
                 )
-            self._order_cache = None  # geometry changed; re-derive the order
+            self._order_cache = {}  # geometry changed; re-derive the order
         return rec
 
     # -------------------------------------------------------------- state
@@ -288,8 +308,32 @@ class ScDataset:
 
     def set_epoch(self, epoch: int) -> None:
         self._state = LoaderState(self.seed, int(epoch), 0)
+        self._notify_epoch_boundary()
+
+    def _notify_epoch_boundary(self) -> None:
+        """Tell the collection an epoch boundary passed (the access regime
+        may change): planned collections reset their stream detector and
+        open a fresh readahead-controller window.  Plain collections (no
+        ``epoch_boundary``) are unaffected."""
+        eb = getattr(self.collection, "epoch_boundary", None)
+        if eb is not None:
+            eb()
 
     # -------------------------------------------------------------- fetch
+    def _issue_prefetch(self, order: np.ndarray, global_fetch_id: int) -> bool:
+        """Issue ONE fetch's read plan in the background (shared by the
+        in-epoch and cross-epoch readahead windows); False when the fetch
+        holds no rows."""
+        lo = global_fetch_id * self.fetch_size
+        idx = order[lo : min(lo + self.fetch_size, len(order))]
+        if len(idx) == 0:
+            return False
+        self.callbacks.prefetch_callback(
+            self.collection,
+            np.sort(idx, kind="stable") if self.sort_fetch_indices else idx,
+        )
+        return True
+
     def fetch(self, epoch: int, global_fetch_id: int) -> list:
         """Materialize ONE fetch: Alg. 1 lines 7–10.  Returns f minibatches.
 
@@ -314,22 +358,31 @@ class ScDataset:
         # BEFORE blocking on this fetch's I/O, so background planner reads
         # overlap this fetch's reads, assembly, and consumption.  Repeat
         # issues are cheap no-ops (cached / in-flight blocks are skipped), so
-        # idempotent re-execution of a fetch stays safe.
+        # idempotent re-execution of a fetch stays safe.  ``readahead`` is
+        # consulted per fetch on purpose: under readahead="auto" the
+        # collection's controller moves the depth while we iterate.
         ra = int(getattr(self.collection, "readahead", 0) or 0)
         if ra > 0:
             g = self._global_fetch_count()
+            issued = 0
             for k in range(1, ra + 1):
                 nxt = global_fetch_id + k * self.world_size
-                if nxt >= g:
+                if nxt >= g or not self._issue_prefetch(order, nxt):
                     break
-                nlo = nxt * self.fetch_size
-                nidx = order[nlo : min(nlo + self.fetch_size, len(order))]
-                if len(nidx) == 0:
-                    break
-                cbs.prefetch_callback(
-                    self.collection,
-                    np.sort(nidx, kind="stable") if self.sort_fetch_indices else nidx,
-                )
+                issued += 1
+            if self.cross_epoch_prefetch and issued < ra:
+                # Epoch tail: the in-epoch window ran out, so fill the rest
+                # from epoch e+1's FIRST fetches of this rank — the epoch
+                # boundary stops draining the pipeline.  Same rendezvous
+                # table, so epoch e+1's first fetch finds its blocks staged
+                # (or in flight) instead of cold.  Next epoch's order is a
+                # pure function of (seed, epoch+1) and lands in the 2-slot
+                # order cache this epoch's remaining fetches don't need.
+                order2 = self._epoch_order(epoch + 1)
+                for j in range(ra - issued):
+                    nxt2 = self.rank + j * self.world_size
+                    if nxt2 >= g or not self._issue_prefetch(order2, nxt2):
+                        break
 
         fetched = cbs.fetch_callback(self.collection, sorted_idx)  # line 8 — the ONLY disk I/O
         fetched = cbs.fetch_transform(fetched)
@@ -375,6 +428,7 @@ class ScDataset:
             cursor += 1
         # epoch finished -> advance
         self._state = LoaderState(self.seed, epoch + 1, 0, 0)
+        self._notify_epoch_boundary()
 
     def epochs(self, num_epochs: int) -> Iterator:
         for _ in range(num_epochs):

@@ -199,6 +199,7 @@ class PrefetchPool:
                 skip = 0
                 next_to_yield += 1
             ds._state = LoaderState(ds.seed, epoch + 1, 0, 0)
+            ds._notify_epoch_boundary()
         finally:
             done_flag.set()
             with cond:

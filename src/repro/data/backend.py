@@ -38,8 +38,11 @@ from .csr_store import CSRBatch, CSRStore, ShardedCSRStore, _concat_batches
 from .iostats import IOStats
 from .readplan import (
     BlockCache,
+    FrequencySketch,
+    ReadaheadController,
     StreamDetector,
     blocks_to_row_spans,
+    normalize_readahead,
     split_at_boundaries,
     split_max_extent,
 )
@@ -395,11 +398,21 @@ class PlannedCollection:
       indices before blocking on the current fetch).  In-flight blocks are
       registered in a rendezvous table; a fetch that needs one waits on its
       future instead of re-reading, so double-buffering never duplicates
-      physical reads.
-    - ``admission`` — ``"always"`` (default LRU), ``"auto"`` (a
+      physical reads.  ``readahead="auto"`` hands the depth to a
+      :class:`~repro.data.readplan.ReadaheadController`: it grows the window
+      while the cache budget and in-flight headroom allow and shrinks it
+      (down to zero) under eviction pressure — adaptation changes only WHEN
+      bytes are read, never which rows a batch contains.
+    - ``admission`` — ``"always"`` (default LRU), ``"auto"``, or ``"never"``.
+      ``"auto"`` is two detectors layered over the LRU: a
       :class:`~repro.data.readplan.StreamDetector` spots forward-streaming
-      epochs and bypasses LRU insertion for all but the fetch's last block —
-      pure streams churn the cache for zero hits), or ``"never"``.
+      epochs and bypasses LRU insertion for all but the fetch's last block
+      (pure streams churn the cache for zero hits), and a TinyLFU-style
+      :class:`~repro.data.readplan.FrequencySketch` takes over from pure LRU
+      the moment the sampled working set exceeds ``cache_bytes`` (an
+      insertion needs an eviction): a candidate block must be *hotter* than
+      the LRU victim to displace it, which keeps hot blocks resident across
+      weighted / class-balanced redraws instead of thrashing.
 
     Thread-safe: the BlockCache and the rendezvous table lock their own
     bookkeeping; reads and batch assembly run unlocked so PrefetchPool
@@ -419,18 +432,18 @@ class PlannedCollection:
         block_rows: int = DEFAULT_BLOCK_ROWS,
         max_extent_rows: Optional[int] = DEFAULT_MAX_EXTENT_ROWS,
         io_workers: int = 1,
-        readahead: int = 0,
+        readahead=0,
         admission: str = "always",
     ):
         if block_rows <= 0:
             raise ValueError("block_rows must be positive")
         if io_workers < 1:
             raise ValueError("io_workers must be >= 1")
-        if readahead < 0:
-            raise ValueError("readahead must be >= 0")
+        readahead = normalize_readahead(readahead)
+        ra_auto = readahead == "auto"
         if admission not in ("always", "auto", "never"):
             raise ValueError(f"admission must be always|auto|never, got {admission!r}")
-        if readahead > 0 and cache_bytes <= 0:
+        if (ra_auto or readahead > 0) and cache_bytes <= 0:
             # staged blocks hand over through the cache; without one every
             # prefetched block would silently be read twice
             raise ValueError("readahead > 0 requires cache_bytes > 0")
@@ -441,10 +454,22 @@ class PlannedCollection:
         self.block_rows = int(block_rows)
         self.max_extent_rows = max_extent_rows
         self.io_workers = int(io_workers)
-        self.readahead = int(readahead)
+        self._ra_fixed = 0 if ra_auto else int(readahead)
+        self._ra_controller = (
+            ReadaheadController(self.cache) if ra_auto else None
+        )
         self.admission = admission
+        # TinyLFU frequency sketch backing admission="auto" in the weighted
+        # (non-streaming) regime; sized to the dataset's block universe so
+        # collisions stay rare without over-allocating on small collections
+        self._sketch: Optional[FrequencySketch] = None
+        if admission == "auto" and cache_bytes > 0:
+            n_blocks = max(1, (len(adapter) + block_rows - 1) // block_rows)
+            width = 1 << min(16, max(10, int(np.ceil(np.log2(2 * n_blocks)))))
+            self._sketch = FrequencySketch(width=width)
         self._boundaries = adapter.boundaries()
         self._stream = StreamDetector()
+        self._avg_row_bytes = float(adapter.avg_row_bytes)
         self._executor: Optional[ThreadPoolExecutor] = None
         self._closed = False
         self._exec_lock = threading.Lock()
@@ -458,8 +483,35 @@ class PlannedCollection:
         self._fl = threading.Lock()
 
     @property
+    def readahead(self) -> int:
+        """Current double-buffer depth.  Fixed ints return themselves; under
+        ``readahead="auto"`` this is the controller's live depth — callers
+        (``ScDataset``) consult it per fetch, so the window tracks the
+        feedback loop without any coordination."""
+        if self._ra_controller is not None:
+            return self._ra_controller.depth
+        return self._ra_fixed
+
+    @property
+    def readahead_auto(self) -> bool:
+        return self._ra_controller is not None
+
+    @property
     def async_enabled(self) -> bool:
-        return self.io_workers > 1 or self.readahead > 0
+        return self.io_workers > 1 or self.readahead > 0 or self.readahead_auto
+
+    def epoch_boundary(self) -> None:
+        """Signal an epoch boundary (``ScDataset`` calls this between
+        epochs).  The access regime may change across it — a weighted epoch
+        can follow a streaming one and vice versa — so the stream detector
+        restarts cold (its streak and high-water mark describe the OLD
+        epoch) and the readahead controller opens a fresh eviction window.
+        Cache contents and the frequency sketch persist: the data did not
+        change, only the access pattern might."""
+        with self._fl:
+            self._stream.reset()
+            if self._ra_controller is not None:
+                self._ra_controller.epoch_boundary()
 
     def _pool(self) -> Optional[ThreadPoolExecutor]:
         if not self.async_enabled or self._closed:
@@ -515,14 +567,16 @@ class PlannedCollection:
     def nbytes_of(self, rows) -> int:
         return self.adapter.nbytes_of(np.asarray(rows, dtype=np.int64))
 
-    def _spans_for_blocks(self, blocks: np.ndarray) -> list[tuple[int, int]]:
-        """Cache-block ids -> the physical read list (shared by plan/fetch)."""
+    def _spans_for_blocks(self, blocks: np.ndarray) -> np.ndarray:
+        """Cache-block ids -> the physical read plan, an ``(n, 2)`` span
+        array (shared by plan/fetch)."""
         spans = blocks_to_row_spans(blocks, self.block_rows, len(self.adapter))
         spans = split_at_boundaries(spans, self._boundaries)
         return split_max_extent(spans, self.max_extent_rows)
 
-    def plan(self, rows) -> list[tuple[int, int]]:
-        """The physical reads a COLD-cache fetch of ``rows`` would issue.
+    def plan(self, rows) -> np.ndarray:
+        """The physical reads a COLD-cache fetch of ``rows`` would issue, as
+        an ``(n, 2)`` int64 array of ``[start, stop)`` spans.
 
         Exactly the spans ``fetch`` executes when nothing is resident —
         including the rounding of rows to ``block_rows`` cache blocks; a
@@ -553,16 +607,29 @@ class PlannedCollection:
 
     def _cache_put(
         self, block: int, val: Any, *, last_block: int, streaming: bool
-    ) -> None:
-        """LRU insertion subject to the admission policy.  ``streaming`` is
-        the detector state captured once at fetch start (so one fetch applies
-        one consistent policy).  In streaming mode only the fetch's last
-        block is kept (the next fetch may straddle it); the rest would churn
-        the cache for zero future hits."""
+    ) -> str:
+        """LRU insertion subject to the admission policy; returns the
+        outcome (``"stored"`` | ``"bypassed"`` | ``"rejected"``) for the
+        fetch's admission accounting.  ``streaming`` is the detector state
+        captured once at fetch start (so one fetch applies one consistent
+        policy).  In streaming mode only the fetch's last block is kept (the
+        next fetch may straddle it); the rest would churn the cache for zero
+        future hits.  Outside the streaming regime, ``admission="auto"``
+        inserts through the TinyLFU duel (:meth:`BlockCache.put_admit`):
+        once the working set exceeds the budget, a candidate must be hotter
+        than the LRU victim to displace it."""
         if self.admission == "never" or (streaming and block != last_block):
             self.cache.bypass()
-            return
-        self.cache.put(block, val, piece_nbytes(val))
+            return "bypassed"
+        nb = piece_nbytes(val)
+        if (self._sketch is not None and not streaming
+                and nb <= self.cache.max_bytes):
+            # (oversized values fall through to plain put's silent refusal —
+            # never cachable under ANY policy, so not a frequency rejection)
+            stored = self.cache.put_admit(block, val, nb, self._sketch.estimate)
+            return "stored" if stored else "rejected"
+        self.cache.put(block, val, nb)
+        return "stored"
 
     @staticmethod
     def _slice_spans_into_blocks(
@@ -605,12 +672,27 @@ class PlannedCollection:
             )
         blocks = np.unique(rows // B)
         streaming = False
-        if self.admission == "auto":
+        if self.admission == "auto" or self._ra_controller is not None:
             # observe under the rendezvous lock (serialized) and capture the
             # state ONCE so this fetch applies one consistent policy
             with self._fl:
-                streaming = self._stream.observe(blocks)
+                if self.admission == "auto":
+                    streaming = self._stream.observe(blocks)
+                if self._ra_controller is not None:
+                    self._ra_controller.observe(
+                        len(blocks) * B * self._avg_row_bytes,
+                        len(blocks),
+                        len(self._inflight),
+                    )
+        if self._sketch is not None:
+            # one popularity touch per block per fetch — the frequency
+            # signal TinyLFU admission duels with.  Vectorized and OUTSIDE
+            # the rendezvous lock (the sketch tolerates concurrent touches);
+            # holding _fl here would serialize every concurrent fetch.
+            self._sketch.touch_many(blocks)
         last_block = int(blocks[-1])
+        adm_bypassed = 0
+        adm_rejected = 0
 
         # ---- cache lookup (BlockCache locks internally) ------------------
         local: dict[int, Any] = {}
@@ -710,8 +792,12 @@ class PlannedCollection:
                 for bb, plist in pending.items():
                     val = plist[0] if len(plist) == 1 else self.adapter.concat(plist)
                     local[bb] = val
-                    self._cache_put(bb, val, last_block=last_block,
-                                    streaming=streaming)
+                    outcome = self._cache_put(bb, val, last_block=last_block,
+                                              streaming=streaming)
+                    if outcome == "bypassed":
+                        adm_bypassed += 1
+                    elif outcome == "rejected":
+                        adm_rejected += 1
                     f = claimed.get(bb)
                     if f is not None:
                         f.set_result(val)
@@ -764,6 +850,8 @@ class PlannedCollection:
             cache_hits=hits,
             cache_misses=len(missing),
             prefetched=len(pf_blocks),
+            adm_bypassed=adm_bypassed,
+            adm_rejected=adm_rejected,
             slept=True,
         )
         return merged
@@ -846,10 +934,24 @@ class PlannedCollection:
             # hit) and, under a bypassing admission policy, drops the entry
             # after use — so readahead neither inflates the hit rate nor
             # defeats admission="never"/stream-bypass retention semantics.
+            # In the TinyLFU regime (admission="auto", not streaming) staged
+            # blocks fight the SAME frequency duel as fetched ones — a
+            # staged cold block must not evict the protected hot set; a
+            # rejected block still hands over through its Future (a fetch
+            # arriving later re-reads it, exactly as if it had been evicted).
             with self._fl:
                 self._pf_marks.update(vals)
+                streaming = self._stream.streaming
+            duel = self._sketch is not None and not streaming
+            adm_rejected = 0
             for bb, val in vals.items():
-                self.cache.put(bb, val, piece_nbytes(val))
+                nb = piece_nbytes(val)
+                if duel and nb <= self.cache.max_bytes:
+                    if not self.cache.put_admit(bb, val, nb,
+                                                self._sketch.estimate):
+                        adm_rejected += 1
+                else:
+                    self.cache.put(bb, val, nb)
                 futs[bb].set_result(val)
             with self._fl:
                 for bb, f in futs.items():
@@ -862,6 +964,7 @@ class PlannedCollection:
                 bytes_read=bytes_read,
                 wall_s=0.0,
                 cache_misses=len(futs),
+                adm_rejected=adm_rejected,
                 calls=0,
                 slept=True,
             )
@@ -875,7 +978,16 @@ class PlannedCollection:
                     f.set_exception(e)
 
     def stats(self) -> dict:
-        return {"io": self.iostats.snapshot(), "cache": self.cache.snapshot()}
+        out = {"io": self.iostats.snapshot(), "cache": self.cache.snapshot()}
+        if self._ra_controller is not None:
+            out["readahead"] = self._ra_controller.snapshot()
+        if self._sketch is not None:
+            out["admission"] = {
+                "doorkeeper": len(self._sketch.door),
+                "ops": self._sketch.ops,
+                "ages": self._sketch.ages,
+            }
+        return out
 
 
 # ---------------------------------------------------------------- registry
@@ -1011,9 +1123,13 @@ def open_collection(
     synchronous path is the reference): ``io_workers`` (>1 executes one
     fetch's miss extents concurrently on a shared bounded pool),
     ``readahead`` (>0 lets ``ScDataset`` issue that many upcoming fetches'
-    read plans in the background — double buffering), ``admission``
-    (``always`` | ``auto`` | ``never``; ``auto`` detects forward-streaming
-    epochs and bypasses LRU insertion for them).  The knobs may also ride in
+    read plans in the background — double buffering; ``"auto"`` hands the
+    depth to a feedback controller that grows it while cache budget and
+    in-flight headroom allow and shrinks it under eviction pressure),
+    ``admission`` (``always`` | ``auto`` | ``never``; ``auto`` detects
+    forward-streaming epochs and bypasses LRU insertion for them, and
+    switches to TinyLFU frequency admission when the sampled working set
+    exceeds ``cache_bytes``).  The knobs may also ride in
     the query string (``?cache_bytes=0&io_workers=4&admission=auto``); an
     explicit keyword argument wins over the query.  Unknown query keys reach
     the opener, which rejects what it does not understand — nothing is
@@ -1038,7 +1154,8 @@ def open_collection(
         max_extent_rows, "max_extent_rows", DEFAULT_MAX_EXTENT_ROWS, allow_none=True
     )
     io_workers = knob(io_workers, "io_workers", 1)
-    readahead = knob(readahead, "readahead", 0)
+    # one shared grammar for the adaptive spelling: int >= 0 or "auto"
+    readahead = knob(readahead, "readahead", 0, cast=normalize_readahead)
     admission = knob(admission, "admission", "always", cast=str)
     adapter = _REGISTRY[scheme](rest, **opts)
     return PlannedCollection(
@@ -1048,6 +1165,6 @@ def open_collection(
         block_rows=int(block_rows),
         max_extent_rows=max_extent_rows,
         io_workers=int(io_workers),
-        readahead=int(readahead),
+        readahead=readahead,
         admission=str(admission),
     )

@@ -228,7 +228,7 @@ class CSRStore:
         out_lens = lens_all[rows].astype(np.int64)
         out_indptr = np.zeros(len(rows) + 1, dtype=np.int64)
         np.cumsum(out_lens, out=out_indptr[1:])
-        run_stops_arr = np.array([b for _, b in runs], dtype=np.int64)
+        run_stops_arr = runs[:, 1]  # coalesce_rows returns (n, 2) spans
         which_run = np.searchsorted(run_stops_arr, rows, side="right")
         src_starts = run_buf_off[which_run] + (self._indptr[rows] - run_lo[which_run])
         gather = _ranges_concat(src_starts, out_lens)

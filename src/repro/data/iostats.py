@@ -60,6 +60,8 @@ class PendingIO:
     cache_misses: int = 0
     prefetched: int = 0
     requests: int = 0
+    adm_bypassed: int = 0
+    adm_rejected: int = 0
     wall_s: float = 0.0
     modeled_s: float = 0.0
     request_wait_s: float = 0.0
@@ -95,6 +97,13 @@ class IOStats:
     by its calling thread (first-byte latency + bandwidth + queueing for an
     in-flight slot); concurrent requests overlap, so this can exceed wall
     time.
+
+    ``adm_bypassed`` / ``adm_rejected`` count cache-admission decisions made
+    by the planner: insertions skipped outright by a bypassing policy
+    (``admission="never"`` or the stream-detector bypass) versus candidates
+    that lost the TinyLFU frequency duel against the LRU victim
+    (``admission="auto"`` once the working set exceeds the cache budget).
+    Neither changes delivered data — they explain hit-rate shape.
     """
 
     calls: int = 0
@@ -105,6 +114,8 @@ class IOStats:
     cache_misses: int = 0
     prefetched: int = 0  # blocks served by readahead rendezvous
     requests: int = 0  # per-request adapter ops (cloud:// GETs)
+    adm_bypassed: int = 0  # insertions skipped by a bypassing admission policy
+    adm_rejected: int = 0  # TinyLFU: candidates colder than the LRU victim
     request_wait_s: float = 0.0  # summed per-request durations (overlappable)
     wall_s: float = 0.0
     simulate: Optional[StorageModel] = None
@@ -119,6 +130,8 @@ class IOStats:
     spec_cache_misses: int = 0
     spec_prefetched: int = 0
     spec_requests: int = 0
+    spec_adm_bypassed: int = 0
+    spec_adm_rejected: int = 0
     spec_request_wait_s: float = 0.0
     spec_wall_s: float = 0.0
     spec_modeled_s: float = 0.0
@@ -140,6 +153,8 @@ class IOStats:
         cache_hits: int = 0,
         cache_misses: int = 0,
         prefetched: int = 0,
+        adm_bypassed: int = 0,
+        adm_rejected: int = 0,
         calls: int = 1,
         slept: bool = False,
     ) -> None:
@@ -161,6 +176,8 @@ class IOStats:
                 pend.cache_hits += cache_hits
                 pend.cache_misses += cache_misses
                 pend.prefetched += prefetched
+                pend.adm_bypassed += adm_bypassed
+                pend.adm_rejected += adm_rejected
                 pend.wall_s += wall_s
                 pend.modeled_s += dt
         else:
@@ -172,6 +189,8 @@ class IOStats:
                 self.cache_hits += cache_hits
                 self.cache_misses += cache_misses
                 self.prefetched += prefetched
+                self.adm_bypassed += adm_bypassed
+                self.adm_rejected += adm_rejected
                 self.wall_s += wall_s
                 self.modeled_s += dt
         # sleep OUTSIDE the lock: simulated latency must overlap across
@@ -260,11 +279,13 @@ class IOStats:
             self.calls = self.runs = self.rows = self.bytes_read = 0
             self.cache_hits = self.cache_misses = self.prefetched = 0
             self.requests = 0
+            self.adm_bypassed = self.adm_rejected = 0
             self.wall_s = self.modeled_s = self.request_wait_s = 0.0
             self.spec_calls = self.spec_runs = self.spec_rows = 0
             self.spec_bytes_read = 0
             self.spec_cache_hits = self.spec_cache_misses = 0
             self.spec_prefetched = self.spec_requests = 0
+            self.spec_adm_bypassed = self.spec_adm_rejected = 0
             self.spec_request_wait_s = 0.0
             self.spec_wall_s = self.spec_modeled_s = 0.0
 
@@ -283,6 +304,8 @@ class IOStats:
             "cache_misses": self.cache_misses,
             "prefetched": self.prefetched,
             "requests": self.requests,
+            "adm_bypassed": self.adm_bypassed,
+            "adm_rejected": self.adm_rejected,
             "request_wait_s": self.request_wait_s,
             "wall_s": self.wall_s,
             "modeled_s": self.modeled_s,
@@ -294,6 +317,8 @@ class IOStats:
             "spec_cache_misses": self.spec_cache_misses,
             "spec_prefetched": self.spec_prefetched,
             "spec_requests": self.spec_requests,
+            "spec_adm_bypassed": self.spec_adm_bypassed,
+            "spec_adm_rejected": self.spec_adm_rejected,
             "spec_request_wait_s": self.spec_request_wait_s,
             "spec_wall_s": self.spec_wall_s,
             "spec_modeled_s": self.spec_modeled_s,

@@ -14,6 +14,16 @@ those extents are already resident*.  This module owns both halves:
   byte budget.  Weighted / class-balanced sampling draws blocks *with
   replacement*, so consecutive fetches overlap; cached blocks turn those
   overlaps into memory hits instead of repeated disk runs.
+- the **adaptive-I/O primitives** — :class:`FrequencySketch` (TinyLFU-style
+  count-min + doorkeeper over block ids, backing frequency-based admission
+  when the sampled working set exceeds the cache budget) and
+  :class:`ReadaheadController` (feedback-driven double-buffer depth for
+  ``readahead="auto"``).
+
+Spans everywhere in this module are ``(n, 2)`` int64 arrays of ``[start,
+stop)`` rows — one row per physical read.  The planner pipeline (coalesce ->
+boundary split -> extent cap) is fully vectorized; a large weighted epoch
+plans millions of rows without a per-run Python loop.
 
 The planner is deliberately backend-agnostic: it works on integers only.
 Backends supply their boundary offsets and execute the resulting
@@ -36,58 +46,106 @@ __all__ = [
     "plan_reads",
     "block_ids_of",
     "blocks_to_row_spans",
+    "normalize_readahead",
     "BlockCache",
     "StreamDetector",
+    "FrequencySketch",
+    "ReadaheadController",
 ]
 
 
-def coalesce_rows(sorted_unique: np.ndarray) -> list[tuple[int, int]]:
-    """Maximal ``[start, stop)`` runs of an ascending, duplicate-free array."""
-    if len(sorted_unique) == 0:
-        return []
-    breaks = np.flatnonzero(np.diff(sorted_unique) != 1)
+def normalize_readahead(value):
+    """Validate + normalize the one ``readahead`` spelling everywhere:
+    a non-negative int (fixed depth) or the string ``"auto"`` (adaptive).
+    Every layer that accepts the knob (``PlannedCollection``,
+    ``open_collection`` kwargs/query, the Pipeline builder, ``DataSpec``)
+    funnels through here, so the accepted grammar cannot drift apart."""
+    if isinstance(value, str):
+        if value == "auto":
+            return "auto"
+        if value.isdigit():  # query-string spelling of a fixed depth
+            return int(value)
+    elif not isinstance(value, bool):
+        iv = int(value)
+        if iv == value and iv >= 0:
+            return iv
+    raise ValueError(f'readahead must be an int >= 0 or "auto", got {value!r}')
+
+_EMPTY_SPANS = np.empty((0, 2), dtype=np.int64)
+
+
+def _as_spans(spans) -> np.ndarray:
+    """Anything span-shaped (list of tuples / (n,2) array) -> (n,2) int64."""
+    arr = np.asarray(spans, dtype=np.int64)
+    return arr.reshape(-1, 2)
+
+
+def coalesce_rows(sorted_unique: np.ndarray) -> np.ndarray:
+    """Maximal ``[start, stop)`` runs of an ascending, duplicate-free array,
+    as an ``(n, 2)`` int64 span array (no per-run Python objects)."""
+    a = np.asarray(sorted_unique, dtype=np.int64)
+    if len(a) == 0:
+        return _EMPTY_SPANS
+    breaks = np.flatnonzero(np.diff(a) != 1)
     firsts = np.concatenate(([0], breaks + 1))
-    lasts = np.concatenate((breaks, [len(sorted_unique) - 1]))
-    return [
-        (int(sorted_unique[a]), int(sorted_unique[b]) + 1)
-        for a, b in zip(firsts, lasts)
-    ]
+    lasts = np.concatenate((breaks, [len(a) - 1]))
+    return np.stack((a[firsts], a[lasts] + 1), axis=1)
 
 
 def split_at_boundaries(
-    spans: Sequence[tuple[int, int]], boundaries: Optional[np.ndarray]
-) -> list[tuple[int, int]]:
+    spans, boundaries: Optional[np.ndarray]
+) -> np.ndarray:
     """Split row spans at physical shard boundaries.
 
     ``boundaries`` is the ascending offset array ``[0, n_0, n_0+n_1, ..., n]``
     (:class:`~repro.data.csr_store.ShardedCSRStore.offsets` shape).  A span
     crossing an interior boundary becomes one span per shard touched.
+    Vectorized: every span's interior cuts are located with two searchsorted
+    passes and scattered into the output in one shot.
     """
-    if boundaries is None or len(boundaries) <= 2:
-        return list(spans)
+    spans = _as_spans(spans)
+    if boundaries is None or len(boundaries) <= 2 or len(spans) == 0:
+        return spans
     interior = np.asarray(boundaries, dtype=np.int64)[1:-1]
-    out: list[tuple[int, int]] = []
-    for lo, hi in spans:
-        cuts = interior[(interior > lo) & (interior < hi)]
-        prev = lo
-        for c in cuts.tolist():
-            out.append((prev, int(c)))
-            prev = int(c)
-        out.append((prev, hi))
-    return out
+    lo, hi = spans[:, 0], spans[:, 1]
+    i0 = np.searchsorted(interior, lo, side="right")  # first cut > lo
+    i1 = np.searchsorted(interior, hi, side="left")  # first cut >= hi
+    counts = i1 - i0  # interior cuts strictly inside each span
+    total_cuts = int(counts.sum())
+    if total_cuts == 0:
+        return spans
+    reps = counts + 1  # pieces per span
+    starts = np.repeat(lo, reps)
+    stops = np.repeat(hi, reps)
+    # grouped-arange: for span s, its cut values interior[i0[s]:i1[s]]
+    cs = np.cumsum(counts)
+    local = np.arange(total_cuts) - np.repeat(cs - counts, counts)
+    cut_vals = interior[np.repeat(i0, counts) + local]
+    # piece j>0 of span s starts at cut j-1; piece j-1 stops there
+    ends = np.cumsum(reps)
+    first_pos = ends - reps
+    pos = np.repeat(first_pos, counts) + 1 + local
+    starts[pos] = cut_vals
+    stops[pos - 1] = cut_vals
+    return np.stack((starts, stops), axis=1)
 
 
-def split_max_extent(
-    spans: Sequence[tuple[int, int]], max_extent_rows: Optional[int]
-) -> list[tuple[int, int]]:
+def split_max_extent(spans, max_extent_rows: Optional[int]) -> np.ndarray:
     """Cap every span at ``max_extent_rows`` rows (None/<=0 = unbounded)."""
-    if not max_extent_rows or max_extent_rows <= 0:
-        return list(spans)
-    out: list[tuple[int, int]] = []
-    for lo, hi in spans:
-        for s in range(lo, hi, max_extent_rows):
-            out.append((s, min(s + max_extent_rows, hi)))
-    return out
+    spans = _as_spans(spans)
+    if not max_extent_rows or max_extent_rows <= 0 or len(spans) == 0:
+        return spans
+    M = int(max_extent_rows)
+    lo, hi = spans[:, 0], spans[:, 1]
+    pieces = (hi - lo + M - 1) // M
+    total = int(pieces.sum())
+    if total == len(spans):
+        return spans
+    cs = np.cumsum(pieces)
+    local = np.arange(total) - np.repeat(cs - pieces, pieces)
+    starts = np.repeat(lo, pieces) + local * M
+    stops = np.minimum(starts + M, np.repeat(hi, pieces))
+    return np.stack((starts, stops), axis=1)
 
 
 def plan_reads(
@@ -95,12 +153,13 @@ def plan_reads(
     *,
     boundaries: Optional[np.ndarray] = None,
     max_extent_rows: Optional[int] = None,
-) -> list[tuple[int, int]]:
-    """Sorted-unique ``rows`` -> the physical read list, in ascending order.
+) -> np.ndarray:
+    """Sorted-unique ``rows`` -> the physical read plan, an ``(n, 2)`` int64
+    array of ``[start, stop)`` spans in ascending order.
 
     Coalesce first (global row space, across shard boundaries), then split at
-    boundaries, then cap extents — each returned ``(start, stop)`` is one
-    backend read touching exactly one shard.
+    boundaries, then cap extents — each returned span is one backend read
+    touching exactly one shard.
     """
     runs = coalesce_rows(np.unique(np.asarray(rows, dtype=np.int64)))
     runs = split_at_boundaries(runs, boundaries)
@@ -114,11 +173,12 @@ def block_ids_of(rows: np.ndarray, block_rows: int) -> np.ndarray:
 
 def blocks_to_row_spans(
     block_ids: np.ndarray, block_rows: int, n: int
-) -> list[tuple[int, int]]:
+) -> np.ndarray:
     """Sorted-unique block ids -> coalesced row spans, clipped to ``n``."""
     spans = coalesce_rows(np.unique(np.asarray(block_ids, dtype=np.int64)))
-    B = int(block_rows)
-    return [(lo * B, min(hi * B, n)) for lo, hi in spans]
+    spans = spans * int(block_rows)
+    np.minimum(spans[:, 1], n, out=spans[:, 1])
+    return spans
 
 
 class BlockCache:
@@ -148,6 +208,7 @@ class BlockCache:
         self.evictions = 0
         self.insertions = 0
         self.bypasses = 0  # insertions skipped by an admission policy
+        self.rejections = 0  # candidates that lost the TinyLFU victim duel
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -202,6 +263,60 @@ class BlockCache:
             self.cur_bytes += nbytes
             self.insertions += 1
 
+    def put_admit(self, key, value, nbytes: int, estimate) -> bool:
+        """TinyLFU-guarded insertion: evict only victims *colder* than the
+        candidate.
+
+        While the value fits without eviction this is plain LRU insertion —
+        frequency admission only takes over once the working set exceeds
+        ``max_bytes`` (an eviction is needed).  Then the LRU-front victim's
+        estimated access frequency (``estimate(key) -> int``, a
+        :class:`FrequencySketch`) is compared against the candidate's: a
+        candidate that is not strictly hotter is REJECTED (returns False,
+        counted in ``rejections``) and the resident set keeps its hot blocks
+        across weighted redraws instead of churning.  Re-inserting a resident
+        key refreshes it unconditionally (that path frees its own bytes).
+        """
+        nbytes = int(nbytes)
+        if self.max_bytes <= 0 or nbytes > self.max_bytes:
+            return False
+        with self._lock:
+            resident = key in self._entries
+            if resident:
+                _, old = self._entries.pop(key)
+                self.cur_bytes -= old
+            # Decide the FULL victim set before evicting anyone: a candidate
+            # that needs several victims' bytes must beat every one of them,
+            # or the rejection would still have shed resident blocks as a
+            # side effect.  A refresh of a resident key skips the duel — the
+            # block already won residency and only its bytes changed.
+            victims: list = []
+            freed = 0
+            cand_freq = None
+            rejected = False
+            for vkey in self._entries:  # LRU -> MRU order
+                if self.cur_bytes - freed + nbytes <= self.max_bytes:
+                    break
+                if not resident:
+                    if cand_freq is None:
+                        cand_freq = int(estimate(key))
+                    if int(estimate(vkey)) >= cand_freq:
+                        rejected = True
+                        break
+                victims.append(vkey)
+                freed += self._entries[vkey][1]
+            if rejected:
+                self.rejections += 1
+                return False
+            for vkey in victims:
+                _, old = self._entries.pop(vkey)
+                self.cur_bytes -= old
+                self.evictions += 1
+            self._entries[key] = (value, nbytes)
+            self.cur_bytes += nbytes
+            self.insertions += 1
+            return True
+
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
@@ -222,6 +337,7 @@ class BlockCache:
             "evictions": self.evictions,
             "insertions": self.insertions,
             "bypasses": self.bypasses,
+            "rejections": self.rejections,
             "hit_rate": self.hit_rate,
         }
 
@@ -237,6 +353,13 @@ class StreamDetector:
     fetch AND advance monotonically past the previous fetch, ``streaming``
     turns on (and off again the moment the pattern breaks — one random fetch
     resets the streak).
+
+    Call :meth:`reset` on epoch boundaries (``ScDataset`` signals them via
+    ``PlannedCollection.epoch_boundary``): the streak and high-water mark of
+    one epoch say nothing about the next — a weighted epoch's stale
+    ``_last_hi`` could otherwise make a scattered first fetch that happens to
+    sit above it look like a continuing stream (or keep a genuine stream
+    undetected for ``threshold`` extra fetches).
 
     Not internally synchronized: the caller serializes ``observe`` (the
     planned collection holds its rendezvous lock).  Out-of-order observers
@@ -267,3 +390,223 @@ class StreamDetector:
     def reset(self) -> None:
         self.streak = 0
         self._last_hi = None
+
+
+class FrequencySketch:
+    """TinyLFU-style block-popularity estimator: doorkeeper + count-min.
+
+    Weighted / class-balanced sampling redraws blocks with replacement from a
+    skewed distribution; when the drawn working set exceeds the cache budget,
+    pure LRU churns hot blocks out to admit cold ones.  This sketch supplies
+    the frequency signal for :meth:`BlockCache.put_admit`: a **doorkeeper**
+    set absorbs the long tail of once-seen blocks (they never pollute the
+    counters), and repeat visitors land in a ``depth x width`` count-min
+    table (conservative update, saturating uint8 counters).  Every
+    ``reset_interval`` touches all counters HALVE and the doorkeeper clears —
+    the classic TinyLFU aging that keeps estimates tracking the *recent*
+    distribution instead of all history.
+
+    Deterministic: hashing is fixed odd-multiplier mixing of the integer
+    block id, no process randomness.  Not internally locked — the planned
+    collection touches it under its own serialization (estimates read racily
+    from the cache's eviction path, which is safe: a stale counter can only
+    mis-rank one duel, never corrupt state).
+    """
+
+    _MULTS = (0x9E3779B97F4A7C15, 0xC2B2AE3D27D4EB4F, 0x165667B19E3779F9,
+              0x27D4EB2F165667C5)
+    _MASK64 = (1 << 64) - 1
+
+    def __init__(self, width: int = 4096, depth: int = 4,
+                 reset_interval: Optional[int] = None):
+        if width <= 0 or (width & (width - 1)) != 0:
+            raise ValueError("width must be a positive power of two")
+        self.width = int(width)
+        self.depth = int(depth)
+        self.table = np.zeros((self.depth, self.width), dtype=np.uint8)
+        self.door: set[int] = set()
+        self.ops = 0
+        self.reset_interval = int(reset_interval or width * 8)
+        self.ages = 0
+
+    def _slots(self, key: int) -> list[int]:
+        k = (int(key) + 1) & self._MASK64  # avoid key 0's all-zero fixed point
+        return [(((k * m) & self._MASK64) >> 17) & (self.width - 1)
+                for m in self._MULTS[: self.depth]]
+
+    def touch(self, key: int) -> None:
+        """Record one access of ``key`` (call once per block per fetch)."""
+        self.ops += 1
+        if key not in self.door:
+            self.door.add(key)
+        else:
+            slots = self._slots(key)
+            vals = [int(self.table[i, s]) for i, s in enumerate(slots)]
+            lo = min(vals)
+            if lo < 255:  # conservative update: bump only the minimum rows
+                for i, s in enumerate(slots):
+                    if int(self.table[i, s]) == lo:
+                        self.table[i, s] = lo + 1
+        if self.ops >= self.reset_interval:
+            self._age()
+
+    def touch_many(self, keys: np.ndarray) -> None:
+        """Vectorized :meth:`touch` of one fetch's (distinct) block ids.
+
+        Equivalent to scalar touches (same hash lanes — uint64 wraparound is
+        explicit in ``_slots`` so both paths agree), but the count-min
+        update is one gather/compare/scatter instead of a Python loop per
+        block, cheap enough to run OUTSIDE the planner's rendezvous lock.
+        Concurrent callers may lose an occasional increment to a racing
+        scatter — an accepted approximation for a frequency sketch.
+        """
+        keys = np.asarray(keys, dtype=np.int64)
+        if keys.size == 0:
+            return
+        self.ops += int(keys.size)
+        door = self.door
+        known = np.fromiter((int(k) in door for k in keys), bool, keys.size)
+        door.update(int(k) for k in keys[~known])
+        rep = keys[known]
+        if rep.size:
+            k64 = rep.astype(np.uint64) + np.uint64(1)
+            slots = np.empty((self.depth, rep.size), dtype=np.intp)
+            for i, m in enumerate(self._MULTS[: self.depth]):
+                slots[i] = (
+                    ((k64 * np.uint64(m)) >> np.uint64(17))
+                    & np.uint64(self.width - 1)
+                ).astype(np.intp)
+            rows = np.broadcast_to(
+                np.arange(self.depth)[:, None], slots.shape
+            )
+            vals = self.table[rows, slots]
+            lo = vals.min(axis=0)
+            bump = (vals == lo[None, :]) & (lo[None, :] < 255)
+            self.table[rows[bump], slots[bump]] = vals[bump] + 1
+        if self.ops >= self.reset_interval:
+            self._age()
+
+    def estimate(self, key: int) -> int:
+        """Estimated access count of ``key`` (doorkeeper adds its one visit)."""
+        est = min(int(self.table[i, s]) for i, s in enumerate(self._slots(key)))
+        return est + (1 if key in self.door else 0)
+
+    def _age(self) -> None:
+        self.table >>= 1
+        self.door.clear()
+        self.ops //= 2
+        self.ages += 1
+
+
+class ReadaheadController:
+    """Feedback-driven double-buffer depth — the ``readahead="auto"`` brain.
+
+    The right readahead depth K depends on signals only visible at run time:
+    how many bytes one fetch stages, how much cache headroom is left for
+    staging, and whether staged blocks survive until consumption.  This
+    controller closes that loop from the counters the planner already keeps:
+
+    - **grow** (+1, up to ``max_depth``) while the cache could hold roughly
+      ``K + 2`` fetches' worth of blocks (the current fetch, the staged
+      window, and slack for straddling) AND the in-flight table is draining
+      (background reads are being consumed, not piling up);
+    - **shrink** (-1, down to ``min_depth``, default 0 = no staging at all)
+      under admission pressure — the cache evicted entries during the last
+      window (deeper staging would evict blocks, possibly the staged ones,
+      before they are used) OR frequency admission rejected insertions (the
+      working set exceeds the budget and staged blocks cannot be retained —
+      the hot redraw set the TinyLFU duel protects matters more than
+      staging, and unretained staging is wasted double reads).
+
+    Depth starts at ``max(1, min_depth)`` — optimistic one-fetch double
+    buffering, withdrawn within one decision window if the cache cannot
+    afford it.
+
+    Decisions fire every ``interval`` observed fetches; between decisions the
+    depth is stable so ``ScDataset`` sees a consistent window.  Adaptation
+    changes only WHEN bytes are read (how far ahead plans are issued) —
+    delivered batches are bit-identical to any fixed depth, by the same
+    rendezvous argument as fixed readahead.
+
+    Not internally locked: :class:`PlannedCollection` calls :meth:`observe`
+    under its rendezvous lock, and readers of :attr:`depth` tolerate a stale
+    value (it only schedules background work).
+    """
+
+    def __init__(
+        self,
+        cache: BlockCache,
+        *,
+        min_depth: int = 0,
+        max_depth: int = 8,
+        interval: int = 4,
+    ):
+        if min_depth < 0 or max_depth < max(1, min_depth):
+            raise ValueError("need 0 <= min_depth <= max_depth, max_depth >= 1")
+        self.cache = cache
+        self.min_depth = int(min_depth)
+        self.max_depth = int(max_depth)
+        self.interval = int(interval)
+        self.depth = max(1, self.min_depth)
+        self.grows = 0
+        self.shrinks = 0
+        self._fetches = 0
+        self._ev_mark = cache.evictions + cache.rejections
+        self._fetch_bytes = 0.0  # EWMA of bytes one fetch's blocks occupy
+        self._fetch_blocks = 0.0  # EWMA of blocks one fetch touches
+
+    def observe(
+        self, fetch_bytes: float, fetch_blocks: int, inflight_blocks: int
+    ) -> int:
+        """Feed one fetch's estimated staged bytes / touched-block count and
+        the current in-flight table size; returns the (possibly adjusted)
+        depth."""
+
+        def ewma(prev: float, x: float) -> float:
+            return x if prev == 0.0 else 0.75 * prev + 0.25 * x
+
+        self._fetch_bytes = ewma(self._fetch_bytes, float(fetch_bytes))
+        self._fetch_blocks = ewma(self._fetch_blocks, float(fetch_blocks))
+        self._fetches += 1
+        if self._fetches % self.interval:
+            return self.depth
+        pressure = self.cache.evictions + self.cache.rejections
+        evicted = pressure - self._ev_mark
+        self._ev_mark = pressure
+        if evicted > 0:
+            if self.depth > self.min_depth:
+                self.depth -= 1
+                self.shrinks += 1
+            return self.depth
+        # budget for the PROSPECTIVE depth: (depth+1) staged fetches + the
+        # current fetch + one fetch of straddle slack must fit the cache
+        budget_ok = (
+            self._fetch_bytes > 0
+            and (self.depth + 3) * self._fetch_bytes <= self.cache.max_bytes
+        )
+        # headroom: background reads are draining — the in-flight table stays
+        # within the window already scheduled (plus one fetch of slack)
+        draining = inflight_blocks <= (self.depth + 1) * max(
+            1.0, self._fetch_blocks
+        )
+        if budget_ok and draining and self.depth < self.max_depth:
+            self.depth += 1
+            self.grows += 1
+        return self.depth
+
+    def epoch_boundary(self) -> None:
+        """Start the next epoch's decisions from a fresh pressure window (a
+        regime change at the boundary should not be charged to the old
+        depth).  The depth itself persists — storage did not change."""
+        self._ev_mark = self.cache.evictions + self.cache.rejections
+        self._fetches = 0
+
+    def snapshot(self) -> dict:
+        return {
+            "depth": self.depth,
+            "min_depth": self.min_depth,
+            "max_depth": self.max_depth,
+            "grows": self.grows,
+            "shrinks": self.shrinks,
+            "fetch_bytes_ewma": self._fetch_bytes,
+        }

@@ -85,7 +85,7 @@ class Pipeline:
         block_rows: Optional[int] = None,
         max_extent_rows: Optional[int] = None,
         io_workers: int = 1,
-        readahead: int = 0,
+        readahead=0,
         admission: str = "always",
         iostats: Any = None,
         **open_opts,
@@ -189,15 +189,18 @@ class Pipeline:
         max_outstanding: Optional[int] = None,
         straggler_factor: Optional[float] = None,
         straggler_min_latency: Optional[float] = None,
-        readahead: Optional[int] = None,
+        readahead=None,
         io_workers: Optional[int] = None,
+        cross_epoch: Optional[bool] = None,
     ) -> "Pipeline":
         """Consumer-side pool (``workers`` + straggler re-issue knobs) and,
         for convenience, the collection-side async knobs (``readahead`` /
         ``io_workers``) in one call — they are one decision ("how much
-        concurrency") even though they live on different layers.  Every
-        parameter is set-if-passed, so adjusting one knob never resets
-        another."""
+        concurrency") even though they live on different layers.
+        ``readahead`` takes an int or ``"auto"`` (feedback-driven depth);
+        ``cross_epoch=True`` lets the readahead window spill into epoch
+        e+1's first fetches at each epoch's tail.  Every parameter is
+        set-if-passed, so adjusting one knob never resets another."""
         kw: dict = {}
         if workers is not None:
             kw["prefetch_workers"] = int(workers)
@@ -208,9 +211,13 @@ class Pipeline:
         if straggler_min_latency is not None:
             kw["straggler_min_latency"] = float(straggler_min_latency)
         if readahead is not None:
-            kw["readahead"] = int(readahead)
+            from repro.data.readplan import normalize_readahead
+
+            kw["readahead"] = normalize_readahead(readahead)
         if io_workers is not None:
             kw["io_workers"] = int(io_workers)
+        if cross_epoch is not None:
+            kw["cross_epoch_prefetch"] = bool(cross_epoch)
         return self._replace(**kw)
 
     # ----------------------------------------------------------- autotune
@@ -266,6 +273,17 @@ class Pipeline:
                 params = {**self._spec.strategy_params,
                           "block_size": int(rec.block_size)}
                 self._replace(strategy_params=params)
+            # fold the CONCURRENCY pick in too (PR 5) — the recorded spec is
+            # the tuned config, readahead/io_workers included.  Only for
+            # URI-backed specs: collection-side knobs cannot take effect on
+            # a pre-opened collection (from_collection rejects them).
+            if self._spec.uri is not None:
+                conc: dict = {"io_workers": int(rec.io_workers)}
+                cache_on = (self._spec.cache_bytes is None
+                            or self._spec.cache_bytes > 0)
+                if cache_on:  # readahead stages through the cache
+                    conc["readahead"] = rec.readahead
+                self._replace(**conc)
         return self
 
     # -------------------------------------------------------------- build
@@ -320,6 +338,7 @@ class Pipeline:
             world_size=s.world_size,
             drop_last=s.drop_last,
             sort_fetch_indices=s.sort_fetch_indices,
+            cross_epoch_prefetch=s.cross_epoch_prefetch,
             **dataset_kw,
         )
         # no fingerprint for in-process collections (see DataPipeline.state)

@@ -55,7 +55,11 @@ __all__ = [
 
 #: Bumped when the spec schema changes incompatibly; ``from_json`` rejects
 #: specs from a future version instead of silently misreading them.
-SPEC_VERSION = 1
+#: History: 1 = PR 4 initial schema; 2 = PR 5 adds ``cross_epoch_prefetch``
+#: and the ``readahead="auto"`` spelling (older specs still load — missing
+#: fields take their defaults — but a version-2 spec presented to version-1
+#: code gets the version refusal rather than an "unknown field" puzzle).
+SPEC_VERSION = 2
 
 #: name -> strategy class.  Params are the dataclass fields, JSON-typed;
 #: ``weights`` / ``labels`` may instead arrive as ``weights_obs`` /
@@ -155,8 +159,8 @@ class DataSpec:
     # None = backend default (32768), 0 = UNBOUNDED (JSON has no way to
     # distinguish "unset" from "explicit None", so 0 carries that meaning)
     io_workers: int = 1  # >1: concurrent miss-extent reads
-    readahead: int = 0  # >0: fetches double-buffered ahead
-    admission: str = "always"  # always | auto | never
+    readahead: Any = 0  # >0: fetches double-buffered ahead; "auto" = adaptive
+    admission: str = "always"  # always | auto (stream + TinyLFU) | never
     open_opts: dict = dataclasses.field(default_factory=dict)  # opener kwargs
 
     # ---- sampling: WHICH rows, in WHAT order
@@ -181,6 +185,7 @@ class DataSpec:
     max_outstanding: int = 4  # resident fetch buffers in the pool
     straggler_factor: float = 3.0  # re-issue at this x median fetch latency
     straggler_min_latency: float = 0.05  # floor (s) before re-issue fires
+    cross_epoch_prefetch: bool = False  # readahead window spills into epoch e+1
 
     version: int = SPEC_VERSION
 
@@ -196,10 +201,13 @@ class DataSpec:
             raise ValueError(
                 f"admission must be always|auto|never, got {self.admission!r}"
             )
-        if self.prefetch_workers < 0 or self.io_workers < 1 or self.readahead < 0:
-            raise ValueError(
-                "prefetch_workers must be >= 0, io_workers >= 1, readahead >= 0"
-            )
+        from repro.data.readplan import normalize_readahead
+
+        # the one readahead grammar (int >= 0 | "auto"); raises on anything
+        # else, and normalizes e.g. a query-style "2" to the int spelling
+        object.__setattr__(self, "readahead", normalize_readahead(self.readahead))
+        if self.prefetch_workers < 0 or self.io_workers < 1:
+            raise ValueError("prefetch_workers must be >= 0, io_workers >= 1")
         if self.strategy not in STRATEGY_REGISTRY:
             raise ValueError(
                 f"unknown strategy {self.strategy!r}; known: "
@@ -253,7 +261,8 @@ class DataSpec:
         for content_free in ("rank", "prefetch_workers", "max_outstanding",
                              "straggler_factor", "straggler_min_latency",
                              "cache_bytes", "block_rows", "max_extent_rows",
-                             "io_workers", "readahead", "admission"):
+                             "io_workers", "readahead", "admission",
+                             "cross_epoch_prefetch"):
             d.pop(content_free, None)
         blob = json.dumps(d, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()[:16]

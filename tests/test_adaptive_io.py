@@ -1,0 +1,413 @@
+"""Adaptive I/O engine (ISSUE 5): feedback readahead, TinyLFU admission,
+cross-epoch prefetch, concurrency autotune.
+
+Acceptance invariants under test:
+
+- adaptation NEVER changes delivered data: with ``readahead="auto"``,
+  ``admission="auto"`` (TinyLFU), autotuned ``io_workers`` and cross-epoch
+  prefetch all on, the batch stream is bit-identical to the plain
+  synchronous path — per backend (csr, sharded-csr, h5ad, cloud://h5ad);
+- ``readahead="auto"`` / ``admission`` / ``cross_epoch_prefetch`` round-trip
+  through DataSpec JSON and leave the fingerprint unchanged (they move
+  bytes in time, not rows between batches);
+- the TinyLFU sketch keeps hot blocks resident when the weighted working
+  set exceeds ``cache_bytes`` (hit rate strictly above pure LRU);
+- the readahead controller grows under headroom, shrinks under eviction
+  pressure, and resets its window at epoch boundaries;
+- ``StreamDetector`` resets on epoch boundaries (regression: a weighted
+  epoch following a streaming one must not inherit the streak);
+- oversized ``BlockCache.put`` values are refused without wedging the LRU;
+  admission-policy counters surface in ``IOStats.snapshot``.
+"""
+import numpy as np
+import pytest
+
+from repro.core import BlockShuffling, BlockWeightedSampling, ScDataset, Streaming
+from repro.core.autotune import IOCostModel, recommend_concurrency
+from repro.data import IOStats, open_collection, write_chunked_store
+from repro.data.readplan import BlockCache, FrequencySketch, ReadaheadController
+from repro.data.synth import generate_tahoe_like, write_csr_shard, write_h5ad
+from repro.pipeline import DataSpec, Pipeline
+
+N, G = 2000, 32
+
+
+def _random_csr(rng, n, g):
+    lens = rng.integers(1, 5, n)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(lens, out=indptr[1:])
+    nnz = int(indptr[-1])
+    data = rng.normal(size=nnz).astype(np.float32)
+    indices = np.empty(nnz, np.int32)
+    for i in range(n):
+        indices[indptr[i]:indptr[i + 1]] = np.sort(
+            rng.choice(g, size=int(lens[i]), replace=False)
+        ).astype(np.int32)
+    return data, indices, indptr
+
+
+@pytest.fixture(scope="module")
+def backends(tmp_path_factory):
+    """The SAME cells in every storage format the acceptance names."""
+    rng = np.random.default_rng(11)
+    root = tmp_path_factory.mktemp("adaptive")
+    data, indices, indptr = _random_csr(rng, N, G)
+    obs = {"cell_line": rng.integers(0, 5, N).astype(np.int32)}
+    half = indptr[N // 2]
+    s0, s1 = str(root / "s0"), str(root / "s1")
+    write_csr_shard(s0, data[:half], indices[:half], indptr[: N // 2 + 1], G,
+                    {k: v[: N // 2] for k, v in obs.items()})
+    write_csr_shard(s1, data[half:], indices[half:],
+                    indptr[N // 2:] - half, G,
+                    {k: v[N // 2:] for k, v in obs.items()})
+    h5ad = str(root / "cells.h5ad")
+    write_h5ad(h5ad, data, indices, indptr, G, obs)
+    return {
+        "csr": f"csr://{s0}",
+        "sharded-csr": f"sharded-csr://{s0},{s1}",
+        "h5ad": f"h5ad://{h5ad}",
+        "cloud-h5ad": f"cloud://h5ad://{h5ad}?profile=same-region&latency_scale=0",
+    }
+
+
+@pytest.fixture(scope="module")
+def chunked(tmp_path_factory):
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(4096, 12)).astype(np.float32)
+    path = str(tmp_path_factory.mktemp("adaptive_ck") / "ck")
+    write_chunked_store(path, X, {"y": np.arange(len(X))}, chunk_rows=500)
+    return f"chunked://{path}", X
+
+
+# --------------------------------------------------- bit-identical delivery
+@pytest.mark.parametrize("backend", ["csr", "sharded-csr", "h5ad", "cloud-h5ad"])
+def test_adaptive_stream_bit_identical_per_backend(backends, backend):
+    """Everything adaptive ON vs everything OFF: same batches, two epochs,
+    weighted sampling with a working set far above the (tiny) cache."""
+    uri = backends[backend]
+    rng = np.random.default_rng(0)
+    weights = rng.random(N) ** 3 + 1e-3  # skewed redraw distribution
+
+    def run(**kw):
+        col = open_collection(uri, block_rows=32, **kw)
+        n = len(col)
+        ds = ScDataset(
+            col,
+            BlockWeightedSampling(block_size=32, weights=weights[:n]),
+            batch_size=32, fetch_factor=4, seed=7,
+            cross_epoch_prefetch=kw.get("readahead", 0) != 0,
+        )
+        out = [b.to_dense().copy() for b in ds.epochs(2)]
+        col.release()
+        return out
+
+    ref = run(cache_bytes=0)
+    got = run(cache_bytes=40_000, io_workers=4, readahead="auto",
+              admission="auto")
+    assert len(ref) == len(got)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_readahead_auto_spelling_and_validation(chunked):
+    uri, _ = chunked
+    col = open_collection(uri, readahead="auto", cache_bytes=1 << 20)
+    assert col.readahead_auto and col.readahead >= 1
+    assert col.async_enabled
+    col.close()
+    # query-string spelling
+    col2 = open_collection(uri + "?readahead=auto")
+    assert col2.readahead_auto
+    col2.close()
+    with pytest.raises(ValueError):
+        open_collection(uri, readahead="sometimes")
+    with pytest.raises(ValueError):
+        # auto stages through the cache exactly like a fixed depth
+        open_collection(uri, readahead="auto", cache_bytes=0)
+
+
+# ------------------------------------------------------ ReadaheadController
+def test_readahead_controller_grows_and_shrinks():
+    cache = BlockCache(max_bytes=1_000_000)
+    ctl = ReadaheadController(cache, interval=2, max_depth=4)
+    assert ctl.depth == 1
+    for _ in range(8):  # headroom, no evictions -> grow to max
+        ctl.observe(fetch_bytes=10_000, fetch_blocks=4, inflight_blocks=0)
+    assert ctl.depth == 4 and ctl.grows >= 3
+    cache.evictions += 5  # eviction pressure -> shrink, one step per window
+    ctl.observe(10_000, 4, 0)
+    ctl.observe(10_000, 4, 0)
+    assert ctl.depth == 3 and ctl.shrinks == 1
+    for _ in range(20):  # sustained pressure -> all the way to 0
+        cache.evictions += 3
+        ctl.observe(10_000, 4, 0)
+    assert ctl.depth == 0
+    # epoch boundary forgives the old window's evictions; depth persists
+    cache.evictions += 100
+    ctl.epoch_boundary()
+    ctl.observe(10_000, 4, 0)
+    ctl.observe(10_000, 4, 0)
+    assert ctl.depth == 1  # fresh window saw no evictions -> may grow again
+
+
+def test_readahead_controller_budget_cap():
+    cache = BlockCache(max_bytes=50_000)
+    ctl = ReadaheadController(cache, interval=1, max_depth=8)
+    for _ in range(10):  # each fetch ~1/3 of the budget: (K+2)*bytes caps K
+        ctl.observe(fetch_bytes=15_000, fetch_blocks=4, inflight_blocks=0)
+    assert ctl.depth == 1  # (1+2)*15k = 45k fits, (2+2)*15k would not
+
+
+def test_readahead_auto_engages_end_to_end(chunked):
+    uri, X = chunked
+    stats = IOStats()
+    col = open_collection(uri, iostats=stats, block_rows=64,
+                          cache_bytes=4 << 20, io_workers=2,
+                          readahead="auto")
+    ds = ScDataset(col, BlockShuffling(8), batch_size=32, fetch_factor=4,
+                   seed=1)
+    ref = [b.copy() for b in ScDataset(
+        open_collection(uri, block_rows=64), BlockShuffling(8),
+        batch_size=32, fetch_factor=4, seed=1)]
+    got = [b.copy() for b in ds]
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+    snap = col.stats()
+    assert snap["readahead"]["depth"] >= 1  # headroom: depth grew or held
+    assert stats.prefetched > 0  # the auto window actually staged blocks
+    col.close()
+
+
+# ------------------------------------------------------- TinyLFU admission
+def test_frequency_sketch_orders_hot_over_cold_and_ages():
+    sk = FrequencySketch(width=1024, reset_interval=64)
+    for _ in range(6):
+        sk.touch(42)
+    sk.touch(7)
+    assert sk.estimate(42) >= 5
+    assert sk.estimate(7) == 1  # doorkeeper only
+    assert sk.estimate(99) == 0  # never seen
+    hot_before = sk.estimate(42)
+    for k in range(1000, 1000 + 64):  # force an aging pass
+        sk.touch(k)
+    assert sk.ages >= 1
+    assert sk.estimate(42) < hot_before  # counters halved, doorkeeper cleared
+    with pytest.raises(ValueError):
+        FrequencySketch(width=1000)  # not a power of two
+
+
+def test_block_cache_put_admit_duel():
+    cache = BlockCache(max_bytes=100)
+    sk = FrequencySketch(width=1024)
+    val = np.zeros(10, np.float32)  # 40 bytes; two fit, three do not
+    for _ in range(3):
+        sk.touch(0), sk.touch(1)
+    sk.touch(2)
+    assert cache.put_admit(0, val, val.nbytes, sk.estimate)
+    assert cache.put_admit(1, val, val.nbytes, sk.estimate)
+    # cold candidate (freq 1) vs hot LRU victim (freq 3): REJECTED
+    assert not cache.put_admit(2, val, val.nbytes, sk.estimate)
+    assert cache.rejections == 1 and len(cache) == 2
+    assert cache.peek(0) is not None and cache.peek(1) is not None
+    # hot candidate vs colder victim: admitted, victim evicted
+    for _ in range(5):
+        sk.touch(3)
+    assert cache.put_admit(3, val, val.nbytes, sk.estimate)
+    assert len(cache) == 2 and cache.evictions == 1
+
+
+def test_tinylfu_beats_lru_on_overcapacity_weighted_redraws(chunked):
+    """Working set >> cache, broad hot set + churning cold tail: TinyLFU
+    admission must end with a strictly better hit rate than pure LRU on the
+    IDENTICAL fetch sequence (and identical delivered data)."""
+    uri, X = chunked
+    B = 64
+    n_blocks = len(X) // B  # 64 blocks
+    hot = np.arange(10)  # hot set fits the cache (12 blocks)
+    rng = np.random.default_rng(5)
+    fetches = []
+    for i in range(300):
+        if rng.random() < 0.7:
+            blk = int(rng.choice(hot))
+        else:
+            blk = int(rng.integers(10, n_blocks))  # cold tail
+        fetches.append(np.arange(blk * B, (blk + 1) * B))
+
+    def run(admission):
+        stats = IOStats()
+        col = open_collection(uri, iostats=stats, block_rows=B,
+                              cache_bytes=12 * B * X.shape[1] * 4,
+                              admission=admission)
+        outs = [col.fetch(f) for f in fetches]
+        col.close()
+        return outs, stats
+
+    lru_out, lru = run("always")
+    lfu_out, lfu = run("auto")
+    for a, b in zip(lru_out, lfu_out):
+        np.testing.assert_array_equal(a, b)
+    assert lfu.adm_rejected > 0  # the sketch actually took over from LRU
+    assert lfu.cache_hit_rate > lru.cache_hit_rate + 0.05
+    assert lfu.runs < lru.runs  # fewer physical reads for identical data
+
+
+# -------------------------------------------------------- epoch boundaries
+def test_stream_detector_resets_at_epoch_boundary(chunked):
+    """Regression: a streaming epoch's streak/high-water mark must not leak
+    into the next epoch — a weighted fetch that happens to sit forward of
+    the stale mark would be misclassified as stream-continuation and
+    wrongly bypass the cache."""
+    uri, _ = chunked
+    col = open_collection(uri, block_rows=64, admission="auto")
+    for lo in range(0, 2048, 256):  # streaming epoch: detector turns on
+        col.fetch(np.arange(lo, lo + 256))
+    assert col._stream.streaming
+    col.epoch_boundary()
+    assert not col._stream.streaming
+    # weighted epoch's first fetch: contiguous AND forward of the stale
+    # mark — without the reset this would extend the streak and bypass
+    ins0, byp0 = col.cache.insertions, col.cache.bypasses
+    col.fetch(np.arange(2048, 2048 + 128))
+    assert col.cache.insertions > ins0  # admitted (fresh detector)
+    assert col.cache.bypasses == byp0
+    col.close()
+
+
+def test_scdataset_signals_epoch_boundary(chunked):
+    uri, _ = chunked
+    col = open_collection(uri, block_rows=64, admission="auto")
+    ds = ScDataset(col, Streaming(), batch_size=64, fetch_factor=4, seed=0)
+    for _ in ds:
+        pass
+    assert col._stream.streak == 0  # reset fired at the epoch boundary
+    col.close()
+
+
+def test_cross_epoch_prefetch_stages_next_epoch(chunked):
+    """With the readahead window spilling across the boundary, epoch e+1's
+    first fetch finds staged blocks (prefetched > the in-epoch-only run),
+    and delivery stays bit-identical."""
+    uri, X = chunked
+
+    def run(cross):
+        stats = IOStats()
+        # cache far below the dataset: epoch e's tail has long evicted the
+        # blocks epoch e+1 starts with, so only cross-epoch staging can
+        # have them ready at the boundary
+        col = open_collection(uri, iostats=stats, block_rows=64,
+                              cache_bytes=64 << 10, io_workers=2, readahead=2)
+        ds = ScDataset(col, Streaming(), batch_size=64, fetch_factor=4,
+                       seed=0, cross_epoch_prefetch=cross)
+        out = [b.copy() for b in ds.epochs(2)]
+        col.close()
+        return out, stats
+
+    ref, off = run(False)
+    got, on = run(True)
+    assert len(ref) == len(got)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+    # the boundary fetches were staged: strictly more rendezvous deliveries
+    assert on.prefetched > off.prefetched
+    # staging never duplicates physical work; the only extra reads allowed
+    # are the FINAL epoch's cross-epoch window (epoch 2's first fetches,
+    # staged at epoch 1's tail but never consumed because iteration stops)
+    stranded = 2 * 4  # readahead (2 fetches) x 4 blocks per 256-row fetch
+    assert off.runs < on.runs <= off.runs + stranded
+    assert off.bytes_read < on.bytes_read <= off.bytes_read + stranded * 64 * 12 * 4
+
+
+# ------------------------------------- satellite: cache + counter coverage
+def test_block_cache_put_oversized_value_is_refused_not_wedged():
+    cache = BlockCache(max_bytes=100)
+    small = np.zeros(10, np.float32)  # 40B
+    cache.put(0, small, small.nbytes)
+    cache.put(1, small, small.nbytes)
+    big = np.zeros(100, np.float32)  # 400B > budget
+    cache.put(2, big, big.nbytes)  # must not evict, loop, or wedge
+    assert cache.peek(2) is None
+    assert len(cache) == 2 and cache.evictions == 0
+    assert cache.cur_bytes == 80
+    assert not cache.put_admit(2, big, big.nbytes, lambda k: 99)
+    assert len(cache) == 2 and cache.cur_bytes == 80
+    # the cache still works afterwards
+    cache.put(3, small, small.nbytes)
+    assert cache.peek(3) is not None
+
+
+def test_admission_counters_in_iostats_snapshot(chunked):
+    uri, _ = chunked
+    stats = IOStats()
+    col = open_collection(uri, iostats=stats, block_rows=64,
+                          admission="never")
+    col.fetch(np.arange(0, 256))
+    snap = stats.snapshot()
+    assert snap["adm_bypassed"] == 4 and stats.adm_bypassed == 4
+    assert snap["adm_rejected"] == 0
+    assert "spec_adm_bypassed" in snap and "spec_adm_rejected" in snap
+    col.close()
+    # TinyLFU rejections land in adm_rejected (cache holds ONE block; the
+    # resident pair {0, 5} is hot, the candidate cold, fetches scattered so
+    # the stream detector never engages)
+    stats2 = IOStats()
+    col2 = open_collection(uri, iostats=stats2, block_rows=64,
+                           cache_bytes=7000, admission="auto")
+    hotrows = np.concatenate([np.arange(0, 64), np.arange(320, 384)])
+    for _ in range(3):
+        col2.fetch(hotrows)
+    col2.fetch(np.arange(128, 192))  # cold candidate loses the duel
+    assert stats2.adm_rejected > 0
+    assert stats2.snapshot()["adm_rejected"] == stats2.adm_rejected
+    col2.close()
+    stats2.reset()
+    assert stats2.adm_rejected == 0 and stats2.adm_bypassed == 0
+
+
+# --------------------------------------------------- concurrency autotune
+def test_recommend_concurrency_scales_with_request_cost():
+    picks = []
+    for c_seek in (1e-6, 1e-3, 0.03, 0.09):
+        m = IOCostModel(c0=2e-3, c_seek=c_seek, c_byte=1e-9, row_bytes=300,
+                        runs_per_sample=0.05, n_rows=50_000)
+        picks.append(recommend_concurrency(m, batch_size=64, fetch_factor=8,
+                                           block_size=64))
+    workers = [w for w, _ in picks]
+    assert workers == sorted(workers)  # non-decreasing in per-request cost
+    assert workers[0] == 1 and workers[-1] > workers[0]
+    assert picks[0][1] == 0  # cheap store: nothing worth double-buffering
+    assert picks[-1][1] == "auto"  # latency-bound: adaptive depth
+
+
+def test_pipeline_autotune_records_concurrency_into_spec(backends):
+    pipe = (
+        Pipeline.from_uri(backends["sharded-csr"], cache_bytes=1 << 20)
+        .strategy("block", block_size=8)
+        .batch(32)
+        .autotune(budget=5e7, probes=1)
+        .build()
+    )
+    rec = pipe.recommendation
+    assert pipe.spec.io_workers == rec.io_workers
+    assert pipe.spec.readahead == rec.readahead
+    # the tuned spec (possibly carrying readahead="auto") round-trips
+    again = DataSpec.from_json(pipe.spec.to_json())
+    assert again == pipe.spec
+    pipe.close()
+
+
+# ------------------------------------------------- spec round-trip + prints
+def test_spec_adaptive_knobs_roundtrip_and_fingerprint_invariance():
+    base = DataSpec(uri="csr:///tmp/x", strategy="block",
+                    strategy_params={"block_size": 8})
+    tuned = base.replace(readahead="auto", admission="auto", io_workers=8,
+                         cross_epoch_prefetch=True, cache_bytes=123)
+    again = DataSpec.from_json(tuned.to_json())
+    assert again == tuned
+    assert again.readahead == "auto" and again.cross_epoch_prefetch is True
+    # adaptation moves bytes in TIME, never rows between batches: the
+    # fingerprint must not move
+    assert tuned.fingerprint() == base.fingerprint()
+    with pytest.raises(ValueError):
+        base.replace(readahead="sometimes")
+    with pytest.raises(ValueError):
+        base.replace(readahead=-1)

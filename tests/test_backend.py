@@ -61,16 +61,22 @@ def two_shards(tmp_path_factory):
 
 # ------------------------------------------------------------- pure planner
 def test_coalesce_and_split():
+    # spans are (n, 2) int64 arrays throughout the planner (vectorized)
     runs = coalesce_rows(np.array([0, 1, 2, 7, 8, 20]))
-    assert runs == [(0, 3), (7, 9), (20, 21)]
-    assert split_at_boundaries([(90, 110)], np.array([0, 100, 200])) == \
-        [(90, 100), (100, 110)]
-    assert split_max_extent([(0, 10)], 4) == [(0, 4), (4, 8), (8, 10)]
+    np.testing.assert_array_equal(runs, [(0, 3), (7, 9), (20, 21)])
+    assert runs.dtype == np.int64 and runs.shape == (3, 2)
+    np.testing.assert_array_equal(
+        split_at_boundaries([(90, 110)], np.array([0, 100, 200])),
+        [(90, 100), (100, 110)])
+    np.testing.assert_array_equal(
+        split_max_extent([(0, 10)], 4), [(0, 4), (4, 8), (8, 10)])
     # plan_reads composes all three; a run crossing a boundary AND the
     # extent cap splits at both
     plan = plan_reads(np.arange(95, 112), boundaries=np.array([0, 100, 200]),
                       max_extent_rows=8)
-    assert plan == [(95, 100), (100, 108), (108, 112)]
+    np.testing.assert_array_equal(plan, [(95, 100), (100, 108), (108, 112)])
+    # empty input -> empty (0, 2) plan
+    assert coalesce_rows(np.array([], dtype=np.int64)).shape == (0, 2)
 
 
 def test_block_cache_lru_byte_budget():
