@@ -62,6 +62,13 @@ class IOCostModel:
     # --- request-semantics extensions (PR 3)
     n_rows: float = 0.0  # collection size (enables the coalescing term); 0=off
     requests_per_sample: float = 0.0  # per-request ops per row (cloud:// GETs)
+    # --- admission-regime measurements (adaptive engine): decisions per
+    # cache touch at probe time.  A flip of the admission regime (TinyLFU
+    # starts rejecting, or the stream detector starts bypassing) reshapes
+    # the hit rate the model was fitted against, so model_drift() watches
+    # these rates too.
+    adm_bypass_rate: float = 0.0  # bypassing-policy skips per cache touch
+    adm_reject_rate: float = 0.0  # TinyLFU duel losses per cache touch
 
     def _coalesce_factor(self, k: float, b: int) -> float:
         """Expected fraction of ``k`` drawn blocks that start a new run.
@@ -189,6 +196,9 @@ def probe_collection(
     d_miss = stats.cache_misses - miss0
     d_runs = stats.runs - base["runs"]
     d_rows = stats.rows - base["rows"]
+    d_touch = max(1, d_hits + d_miss)
+    d_adm_b = stats.adm_bypassed - base["adm_bypassed"]
+    d_adm_r = stats.adm_rejected - base["adm_rejected"]
     return IOCostModel(
         c0=c0,
         c_seek=c_seek,
@@ -199,11 +209,17 @@ def probe_collection(
         cache_bytes=float(col.cache.max_bytes),
         n_rows=float(n),
         requests_per_sample=(stats.requests - req0) / max(1, d_rows),
+        adm_bypass_rate=d_adm_b / d_touch,
+        adm_reject_rate=d_adm_r / d_touch,
     )
 
 
 def model_drift(
-    model: IOCostModel, stats: Any, *, base: Optional[dict] = None
+    model: IOCostModel,
+    stats: Any,
+    *,
+    base: Optional[dict] = None,
+    ra_shifts: int = 0,
 ) -> float:
     """How far live :class:`~repro.data.iostats.IOStats` sit from ``model``.
 
@@ -213,7 +229,18 @@ def model_drift(
     - runs per sample — RELATIVE deviation from ``model.runs_per_sample``
       (the access-pattern shape: coalescing got better/worse);
     - cache hit rate — ABSOLUTE deviation from ``model.hit_rate`` (already
-      a 0..1 rate; relative deviation would explode near zero).
+      a 0..1 rate; relative deviation would explode near zero);
+    - admission rates — ABSOLUTE deviation of bypasses/rejections per
+      cache touch from the probe-time ``adm_bypass_rate`` /
+      ``adm_reject_rate``: an admission-regime flip (TinyLFU warming up,
+      the stream detector toggling) reshapes hit rate with a lag, so the
+      decision counters flag it earlier than the hit rate itself.
+
+    ``ra_shifts`` — number of readahead depth changes (controller grows +
+    shrinks) since the model was fitted; each contributes 0.5 drift
+    (capped at 1.0), so an adaptive readahead that had to move twice
+    forces a re-probe on its own (``ScDataset.autotune`` passes the delta
+    against its probe-time mark).
 
     ``base`` — a ``stats.snapshot()`` taken when the model was fitted.
     When given, drift is measured on the counter DELTAS since then, so a
@@ -227,13 +254,17 @@ def model_drift(
     threshold — the ROADMAP's "re-probe when IOStats drifts from the
     fitted model".
     """
-    runs, rows = stats.runs, stats.rows
-    hits, misses = stats.cache_hits, stats.cache_misses
+    snap = stats.snapshot()  # one consistent cut of every counter
+    runs, rows = snap["runs"], snap["rows"]
+    hits, misses = snap["cache_hits"], snap["cache_misses"]
+    adm_b, adm_r = snap["adm_bypassed"], snap["adm_rejected"]
     if base is not None:
         runs -= base.get("runs", 0)
         rows -= base.get("rows", 0)
         hits -= base.get("cache_hits", 0)
         misses -= base.get("cache_misses", 0)
+        adm_b -= base.get("adm_bypassed", 0)
+        adm_r -= base.get("adm_rejected", 0)
     drifts = [0.0]
     if rows > 0 and model.runs_per_sample is not None:
         ref = max(float(model.runs_per_sample), 1e-9)
@@ -241,6 +272,10 @@ def model_drift(
     touched = hits + misses
     if touched > 0:
         drifts.append(abs(hits / touched - model.hit_rate))
+        drifts.append(abs(adm_b / touched - model.adm_bypass_rate))
+        drifts.append(abs(adm_r / touched - model.adm_reject_rate))
+    if ra_shifts > 0:
+        drifts.append(min(1.0, 0.5 * float(ra_shifts)))
     return max(drifts)
 
 

@@ -20,6 +20,7 @@ restartable mid-epoch, identical across ranks.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Callable, Iterator, Optional
 
 import numpy as np
@@ -115,16 +116,18 @@ class ScDataset:
             fetch_callback, fetch_transform, batch_callback, batch_transform,
             prefetch_callback,
         )
-        self._state = LoaderState(seed=self.seed, epoch=0, fetch_cursor=0)
+        self._state = LoaderState(seed=self.seed, epoch=0, fetch_cursor=0)  # guarded-by: external
         # epoch -> materialized order; holds at most TWO epochs (current +
         # next) so cross-epoch prefetch at the tail does not evict the order
         # the remaining fetches of this epoch still slice from
-        self._order_cache: dict[int, np.ndarray] = {}
+        self._order_lock = threading.Lock()
+        self._order_cache: dict[int, np.ndarray] = {}  # guarded-by: _order_lock
         # Stamped by the Pipeline builder (repro.pipeline) with the spec's
         # content hash; surfaces in plan_epoch.  None for hand-wired loaders.
         self.spec_fingerprint: Optional[str] = None
-        self._tuned_model = None  # autotune(): cached fitted IOCostModel
-        self._tuned_base = None  # IOStats snapshot at probe time (drift deltas)
+        self._tuned_model = None  # guarded-by: external — autotune caller's
+        self._tuned_base = None  # guarded-by: external — IOStats probe base
+        self._tuned_ra_mark = 0  # guarded-by: external — ra depth-shift mark
 
     # ------------------------------------------------------------------ sizes
     def __len__(self) -> int:
@@ -169,18 +172,25 @@ class ScDataset:
         cached epoch NEAREST to it (ties to the lower — the iterating epoch
         precedes its cross-epoch prefetch target), so an epoch's remaining
         tail fetches never evict their own order by prefetching the next
-        one, even after a backward ``set_epoch``.  Assigned wholesale, so
-        concurrent PrefetchPool workers at worst recompute — never observe
-        a half-built dict."""
-        order = self._order_cache.get(epoch)
-        if order is None:
-            order = self.strategy.epoch_indices(self.n, self.seed, epoch)
-            kept = {epoch: order}
-            if self._order_cache:
-                near = min(self._order_cache, key=lambda e: (abs(e - epoch), e))
-                kept[near] = self._order_cache[near]
-            self._order_cache = kept
-        return order
+        one, even after a backward ``set_epoch``.  Locked: concurrent
+        PrefetchPool workers hitting a cold epoch must not each materialize
+        the full index array (hundreds of MB at atlas scale), and the
+        keep-two eviction must act on a consistent dict."""
+        order = self._order_cache.get(epoch)  # unlocked-ok: racy fast path on an immutable-once-cached value
+        if order is not None:
+            return order
+        with self._order_lock:
+            order = self._order_cache.get(epoch)
+            if order is None:
+                order = self.strategy.epoch_indices(self.n, self.seed, epoch)
+                kept = {epoch: order}
+                if self._order_cache:
+                    near = min(
+                        self._order_cache, key=lambda e: (abs(e - epoch), e)
+                    )
+                    kept[near] = self._order_cache[near]
+                self._order_cache = kept
+            return order
 
     def _global_fetch_count(self) -> int:
         total = self.strategy.epoch_len(self.n)
@@ -268,15 +278,26 @@ class ScDataset:
                 "autotune() needs a planned collection (open_collection); "
                 f"got {type(col).__name__}"
             )
+        # readahead depth changes since the last probe count as drift too:
+        # the controller moving means the I/O regime the model was fitted
+        # under no longer holds (see model_drift's ra_shifts)
+        ctl = getattr(col, "_ra_controller", None)
+        ra_now = (ctl.grows + ctl.shrinks) if ctl is not None else 0
         model = self._tuned_model
         if model is None or force or model_drift(
-            model, col.iostats, base=self._tuned_base
+            model,
+            col.iostats,
+            base=self._tuned_base,
+            ra_shifts=max(0, ra_now - self._tuned_ra_mark),
         ) > drift_threshold:
             model = probe_collection(col, probes=probes, probe_rows=probe_rows)
             self._tuned_model = model
             # drift is measured on counter deltas from HERE, so a late
             # regime change is not diluted by lifetime totals
             self._tuned_base = col.iostats.snapshot()
+            self._tuned_ra_mark = (
+                (ctl.grows + ctl.shrinks) if ctl is not None else 0
+            )
         rec = recommend_from(
             model,
             batch_size=self.batch_size,
@@ -291,7 +312,8 @@ class ScDataset:
                 self.strategy = dataclasses.replace(
                     self.strategy, block_size=int(rec.block_size)
                 )
-            self._order_cache = {}  # geometry changed; re-derive the order
+            with self._order_lock:
+                self._order_cache = {}  # geometry changed; re-derive the order
         return rec
 
     # -------------------------------------------------------------- state

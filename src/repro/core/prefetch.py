@@ -72,8 +72,9 @@ class PrefetchPool:
         self.straggler_factor = straggler_factor
         self.straggler_min_latency = straggler_min_latency
         self.enable_speculation = enable_speculation
-        # stats
-        self.stats = {
+        # Mutated by workers under __iter__'s per-iteration condition lock
+        # (a local the analyzer cannot name); read between iterations only.
+        self.stats = {  # guarded-by: external
             "fetches": 0,
             "speculative_reissues": 0,
             "duplicate_completions": 0,

@@ -457,29 +457,29 @@ class PlannedCollection:
         self._ra_fixed = 0 if ra_auto else int(readahead)
         self._ra_controller = (
             ReadaheadController(self.cache) if ra_auto else None
-        )
+        )  # guarded-by: external — observe() under _fl; depth reads stale-ok
         self.admission = admission
         # TinyLFU frequency sketch backing admission="auto" in the weighted
         # (non-streaming) regime; sized to the dataset's block universe so
         # collisions stay rare without over-allocating on small collections
-        self._sketch: Optional[FrequencySketch] = None
+        self._sketch: Optional[FrequencySketch] = None  # guarded-by: external
         if admission == "auto" and cache_bytes > 0:
             n_blocks = max(1, (len(adapter) + block_rows - 1) // block_rows)
             width = 1 << min(16, max(10, int(np.ceil(np.log2(2 * n_blocks)))))
             self._sketch = FrequencySketch(width=width)
         self._boundaries = adapter.boundaries()
-        self._stream = StreamDetector()
+        self._stream = StreamDetector()  # guarded-by: _fl
         self._avg_row_bytes = float(adapter.avg_row_bytes)
-        self._executor: Optional[ThreadPoolExecutor] = None
-        self._closed = False
+        self._executor: Optional[ThreadPoolExecutor] = None  # guarded-by: _exec_lock
+        self._closed = False  # guarded-by: _exec_lock
         self._exec_lock = threading.Lock()
         # rendezvous table: block id -> Future resolving to the block's value
         # while a background (or concurrent) read of it is in flight
-        self._inflight: dict[int, Future] = {}
+        self._inflight: dict[int, Future] = {}  # guarded-by: _fl
         # blocks staged by prefetch, not yet consumed by any fetch: their
         # first consumption counts as `prefetched` (not a cache hit), and
         # under a bypassing admission policy they are dropped after use
-        self._pf_marks: set[int] = set()
+        self._pf_marks: set[int] = set()  # guarded-by: _fl
         self._fl = threading.Lock()
 
     @property
@@ -514,15 +514,21 @@ class PlannedCollection:
                 self._ra_controller.epoch_boundary()
 
     def _pool(self) -> Optional[ThreadPoolExecutor]:
-        if not self.async_enabled or self._closed:
+        if not self.async_enabled:
             return None
-        if self._executor is None:
-            with self._exec_lock:
-                if self._executor is None and not self._closed:
-                    self._executor = ThreadPoolExecutor(
-                        max_workers=self.io_workers, thread_name_prefix="scds-io"
-                    )
-        return self._executor
+        # double-checked fast path: a stale non-None executor is the common
+        # steady state, and close() never swaps a live executor for another
+        ex = self._executor  # unlocked-ok: double-checked fast path
+        if ex is not None:
+            return ex
+        with self._exec_lock:
+            if self._closed:
+                return None
+            if self._executor is None:
+                self._executor = ThreadPoolExecutor(
+                    max_workers=self.io_workers, thread_name_prefix="scds-io"
+                )
+            return self._executor
 
     def close(self) -> None:
         """Shut down the I/O executor and drop any unconsumed prefetch

@@ -92,7 +92,9 @@ class CloudAdapter(StorageAdapter):
         self.inner = inner
         self.profile = profile
         self._sem = threading.Semaphore(int(profile.max_inflight))
-        self._iostats: Optional[IOStats] = None
+        # bound once by bind_iostats() before reader threads start; IOStats
+        # itself is internally locked
+        self._iostats: Optional[IOStats] = None  # guarded-by: external
 
     # ----------------------------------------------------- request path
     def bind_iostats(self, iostats: IOStats) -> None:

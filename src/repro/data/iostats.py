@@ -52,19 +52,19 @@ class PendingIO:
     result was delivered or dropped as a speculative duplicate.
     """
 
-    calls: int = 0
-    runs: int = 0
-    rows: int = 0
-    bytes_read: int = 0
-    cache_hits: int = 0
-    cache_misses: int = 0
-    prefetched: int = 0
-    requests: int = 0
-    adm_bypassed: int = 0
-    adm_rejected: int = 0
-    wall_s: float = 0.0
-    modeled_s: float = 0.0
-    request_wait_s: float = 0.0
+    calls: int = 0  # guarded-by: _lock
+    runs: int = 0  # guarded-by: _lock
+    rows: int = 0  # guarded-by: _lock
+    bytes_read: int = 0  # guarded-by: _lock
+    cache_hits: int = 0  # guarded-by: _lock
+    cache_misses: int = 0  # guarded-by: _lock
+    prefetched: int = 0  # guarded-by: _lock
+    requests: int = 0  # guarded-by: _lock
+    adm_bypassed: int = 0  # guarded-by: _lock
+    adm_rejected: int = 0  # guarded-by: _lock
+    wall_s: float = 0.0  # guarded-by: _lock
+    modeled_s: float = 0.0  # guarded-by: _lock
+    request_wait_s: float = 0.0  # guarded-by: _lock
 
     def __post_init__(self):
         # a deferred fetch's pool-thread reads may record requests into this
@@ -106,35 +106,35 @@ class IOStats:
     Neither changes delivered data — they explain hit-rate shape.
     """
 
-    calls: int = 0
-    runs: int = 0  # contiguous extents touched == random accesses
-    rows: int = 0
-    bytes_read: int = 0
-    cache_hits: int = 0  # planner block-cache hits (block granularity)
-    cache_misses: int = 0
-    prefetched: int = 0  # blocks served by readahead rendezvous
-    requests: int = 0  # per-request adapter ops (cloud:// GETs)
-    adm_bypassed: int = 0  # insertions skipped by a bypassing admission policy
-    adm_rejected: int = 0  # TinyLFU: candidates colder than the LRU victim
-    request_wait_s: float = 0.0  # summed per-request durations (overlappable)
-    wall_s: float = 0.0
-    simulate: Optional[StorageModel] = None
+    calls: int = 0  # guarded-by: _lock
+    runs: int = 0  # guarded-by: _lock — contiguous extents == random accesses
+    rows: int = 0  # guarded-by: _lock
+    bytes_read: int = 0  # guarded-by: _lock
+    cache_hits: int = 0  # guarded-by: _lock — planner block-cache hits
+    cache_misses: int = 0  # guarded-by: _lock
+    prefetched: int = 0  # guarded-by: _lock — readahead-rendezvous blocks
+    requests: int = 0  # guarded-by: _lock — per-request ops (cloud:// GETs)
+    adm_bypassed: int = 0  # guarded-by: _lock — bypassing-admission skips
+    adm_rejected: int = 0  # guarded-by: _lock — TinyLFU duels lost
+    request_wait_s: float = 0.0  # guarded-by: _lock — summed, overlappable
+    wall_s: float = 0.0  # guarded-by: _lock
+    simulate: Optional[StorageModel] = None  # set once at construction
     simulate_scale: float = 1.0
-    modeled_s: float = 0.0
+    modeled_s: float = 0.0  # guarded-by: _lock
     # speculative-duplicate executions (dropped from delivery)
-    spec_calls: int = 0
-    spec_runs: int = 0
-    spec_rows: int = 0
-    spec_bytes_read: int = 0
-    spec_cache_hits: int = 0
-    spec_cache_misses: int = 0
-    spec_prefetched: int = 0
-    spec_requests: int = 0
-    spec_adm_bypassed: int = 0
-    spec_adm_rejected: int = 0
-    spec_request_wait_s: float = 0.0
-    spec_wall_s: float = 0.0
-    spec_modeled_s: float = 0.0
+    spec_calls: int = 0  # guarded-by: _lock
+    spec_runs: int = 0  # guarded-by: _lock
+    spec_rows: int = 0  # guarded-by: _lock
+    spec_bytes_read: int = 0  # guarded-by: _lock
+    spec_cache_hits: int = 0  # guarded-by: _lock
+    spec_cache_misses: int = 0  # guarded-by: _lock
+    spec_prefetched: int = 0  # guarded-by: _lock
+    spec_requests: int = 0  # guarded-by: _lock
+    spec_adm_bypassed: int = 0  # guarded-by: _lock
+    spec_adm_rejected: int = 0  # guarded-by: _lock
+    spec_request_wait_s: float = 0.0  # guarded-by: _lock
+    spec_wall_s: float = 0.0  # guarded-by: _lock
+    spec_modeled_s: float = 0.0  # guarded-by: _lock
 
     def __post_init__(self):
         # Concurrent PrefetchPool workers record() through one shared
@@ -291,41 +291,51 @@ class IOStats:
 
     @property
     def cache_hit_rate(self) -> float:
-        total = self.cache_hits + self.cache_misses
-        return self.cache_hits / total if total else 0.0
+        # under _lock: hits and misses must come from one consistent state,
+        # or a rate read mid-record can exceed 1.0 / go negative in deltas
+        with self._lock:
+            total = self.cache_hits + self.cache_misses
+            return self.cache_hits / total if total else 0.0
 
     def snapshot(self) -> dict:
-        return {
-            "calls": self.calls,
-            "runs": self.runs,
-            "rows": self.rows,
-            "bytes_read": self.bytes_read,
-            "cache_hits": self.cache_hits,
-            "cache_misses": self.cache_misses,
-            "prefetched": self.prefetched,
-            "requests": self.requests,
-            "adm_bypassed": self.adm_bypassed,
-            "adm_rejected": self.adm_rejected,
-            "request_wait_s": self.request_wait_s,
-            "wall_s": self.wall_s,
-            "modeled_s": self.modeled_s,
-            "spec_calls": self.spec_calls,
-            "spec_runs": self.spec_runs,
-            "spec_rows": self.spec_rows,
-            "spec_bytes_read": self.spec_bytes_read,
-            "spec_cache_hits": self.spec_cache_hits,
-            "spec_cache_misses": self.spec_cache_misses,
-            "spec_prefetched": self.spec_prefetched,
-            "spec_requests": self.spec_requests,
-            "spec_adm_bypassed": self.spec_adm_bypassed,
-            "spec_adm_rejected": self.spec_adm_rejected,
-            "spec_request_wait_s": self.spec_request_wait_s,
-            "spec_wall_s": self.spec_wall_s,
-            "spec_modeled_s": self.spec_modeled_s,
-        }
+        # one consistent cut of every counter: without the lock a snapshot
+        # taken mid-record can pair e.g. the new `runs` with the old
+        # `bytes_read` and downstream deltas (autotune probes) go skewed
+        with self._lock:
+            return {
+                "calls": self.calls,
+                "runs": self.runs,
+                "rows": self.rows,
+                "bytes_read": self.bytes_read,
+                "cache_hits": self.cache_hits,
+                "cache_misses": self.cache_misses,
+                "prefetched": self.prefetched,
+                "requests": self.requests,
+                "adm_bypassed": self.adm_bypassed,
+                "adm_rejected": self.adm_rejected,
+                "request_wait_s": self.request_wait_s,
+                "wall_s": self.wall_s,
+                "modeled_s": self.modeled_s,
+                "spec_calls": self.spec_calls,
+                "spec_runs": self.spec_runs,
+                "spec_rows": self.spec_rows,
+                "spec_bytes_read": self.spec_bytes_read,
+                "spec_cache_hits": self.spec_cache_hits,
+                "spec_cache_misses": self.spec_cache_misses,
+                "spec_prefetched": self.spec_prefetched,
+                "spec_requests": self.spec_requests,
+                "spec_adm_bypassed": self.spec_adm_bypassed,
+                "spec_adm_rejected": self.spec_adm_rejected,
+                "spec_request_wait_s": self.spec_request_wait_s,
+                "spec_wall_s": self.spec_wall_s,
+                "spec_modeled_s": self.spec_modeled_s,
+            }
 
     def total_seconds(self) -> float:
         """Wall time plus any un-slept modeled time (simulate_scale < 1)."""
-        if self.simulate is None:
-            return self.wall_s
-        return self.wall_s + self.modeled_s * max(0.0, 1.0 - self.simulate_scale)
+        with self._lock:
+            if self.simulate is None:
+                return self.wall_s
+            return self.wall_s + self.modeled_s * max(
+                0.0, 1.0 - self.simulate_scale
+            )

@@ -200,18 +200,19 @@ class BlockCache:
         self.max_bytes = int(max_bytes)
         self._entries: collections.OrderedDict[Any, tuple[Any, int]] = (
             collections.OrderedDict()
-        )
+        )  # guarded-by: _lock
         self._lock = threading.Lock()
-        self.cur_bytes = 0
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.insertions = 0
-        self.bypasses = 0  # insertions skipped by an admission policy
-        self.rejections = 0  # candidates that lost the TinyLFU victim duel
+        self.cur_bytes = 0  # guarded-by: _lock
+        self.hits = 0  # guarded-by: _lock
+        self.misses = 0  # guarded-by: _lock
+        self.evictions = 0  # guarded-by: _lock
+        self.insertions = 0  # guarded-by: _lock
+        self.bypasses = 0  # guarded-by: _lock — admission-policy skips
+        self.rejections = 0  # guarded-by: _lock — lost TinyLFU victim duels
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def get(self, key) -> Optional[Any]:
         with self._lock:
@@ -324,22 +325,30 @@ class BlockCache:
 
     @property
     def hit_rate(self) -> float:
-        total = self.hits + self.misses
-        return self.hits / total if total else 0.0
+        # locked so the hits/misses pair comes from one consistent state
+        with self._lock:
+            total = self.hits + self.misses
+            return self.hits / total if total else 0.0
 
     def snapshot(self) -> dict:
-        return {
-            "entries": len(self._entries),
-            "cur_bytes": self.cur_bytes,
-            "max_bytes": self.max_bytes,
-            "hits": self.hits,
-            "misses": self.misses,
-            "evictions": self.evictions,
-            "insertions": self.insertions,
-            "bypasses": self.bypasses,
-            "rejections": self.rejections,
-            "hit_rate": self.hit_rate,
-        }
+        # one consistent cut — e.g. cur_bytes must agree with _entries, or
+        # a snapshot taken mid-eviction shows a budget overshoot that never
+        # happened.  hit_rate is inlined: the property takes the same
+        # non-reentrant lock and calling it here would self-deadlock.
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "entries": len(self._entries),
+                "cur_bytes": self.cur_bytes,
+                "max_bytes": self.max_bytes,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "insertions": self.insertions,
+                "bypasses": self.bypasses,
+                "rejections": self.rejections,
+                "hit_rate": self.hits / total if total else 0.0,
+            }
 
 
 class StreamDetector:
@@ -370,8 +379,8 @@ class StreamDetector:
 
     def __init__(self, threshold: int = 3):
         self.threshold = int(threshold)
-        self.streak = 0
-        self._last_hi: Optional[int] = None
+        self.streak = 0  # guarded-by: external — caller serializes observe()
+        self._last_hi: Optional[int] = None  # guarded-by: external
 
     def observe(self, block_ids: np.ndarray) -> bool:
         """Update with one fetch's sorted-unique block ids; returns the new
@@ -423,11 +432,14 @@ class FrequencySketch:
             raise ValueError("width must be a positive power of two")
         self.width = int(width)
         self.depth = int(depth)
-        self.table = np.zeros((self.depth, self.width), dtype=np.uint8)
-        self.door: set[int] = set()
-        self.ops = 0
+        # PlannedCollection touches the sketch from one planner thread at a
+        # time; saturating uint8 increments tolerate the (benign)
+        # lost-update race documented in the class docstring
+        self.table = np.zeros((self.depth, self.width), dtype=np.uint8)  # guarded-by: external
+        self.door: set[int] = set()  # guarded-by: external
+        self.ops = 0  # guarded-by: external
         self.reset_interval = int(reset_interval or width * 8)
-        self.ages = 0
+        self.ages = 0  # guarded-by: external
 
     def _slots(self, key: int) -> list[int]:
         k = (int(key) + 1) & self._MASK64  # avoid key 0's all-zero fixed point
@@ -547,13 +559,15 @@ class ReadaheadController:
         self.min_depth = int(min_depth)
         self.max_depth = int(max_depth)
         self.interval = int(interval)
-        self.depth = max(1, self.min_depth)
-        self.grows = 0
-        self.shrinks = 0
-        self._fetches = 0
-        self._ev_mark = cache.evictions + cache.rejections
-        self._fetch_bytes = 0.0  # EWMA of bytes one fetch's blocks occupy
-        self._fetch_blocks = 0.0  # EWMA of blocks one fetch touches
+        # observe() runs under the collection's rendezvous lock; depth
+        # readers tolerate staleness (see class docstring)
+        self.depth = max(1, self.min_depth)  # guarded-by: external
+        self.grows = 0  # guarded-by: external
+        self.shrinks = 0  # guarded-by: external
+        self._fetches = 0  # guarded-by: external
+        self._ev_mark = cache.evictions + cache.rejections  # guarded-by: external
+        self._fetch_bytes = 0.0  # guarded-by: external — EWMA bytes/fetch
+        self._fetch_blocks = 0.0  # guarded-by: external — EWMA blocks/fetch
 
     def observe(
         self, fetch_bytes: float, fetch_blocks: int, inflight_blocks: int

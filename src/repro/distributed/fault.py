@@ -82,7 +82,7 @@ class HeartbeatMonitor:
 
     def __init__(self, timeout_s: float = 5.0):
         self.timeout_s = timeout_s
-        self._last: dict[str, float] = {}
+        self._last: dict[str, float] = {}  # guarded-by: _lock
         self._lock = threading.Lock()
 
     def beat(self, member: str) -> None:

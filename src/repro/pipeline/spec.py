@@ -141,6 +141,26 @@ def _jsonable(x: Any) -> Any:
     return x
 
 
+# Every DataSpec field is classified into exactly one of these two sets —
+# machine-checked by `python tools/analyze` (dataspec-classification).  A
+# FINGERPRINT field changes the delivered byte stream, so it feeds
+# fingerprint() and a resume across a change of it is refused; a
+# CONTENT_FREE field changes wall-clock behaviour only (worker counts,
+# caching, placement of THIS rank in a shared sequence) and is excluded.
+# Adding a field without classifying it here fails CI.
+FINGERPRINT_FIELDS = frozenset({
+    "uri", "open_opts", "strategy", "strategy_params", "batch_size",
+    "fetch_factor", "drop_last", "sort_fetch_indices", "seed",
+    "world_size", "version",
+})
+CONTENT_FREE_FIELDS = frozenset({
+    "rank", "prefetch_workers", "max_outstanding", "straggler_factor",
+    "straggler_min_latency", "cache_bytes", "block_rows",
+    "max_extent_rows", "io_workers", "readahead", "admission",
+    "cross_epoch_prefetch",
+})
+
+
 @dataclasses.dataclass(frozen=True)
 class DataSpec:
     """Everything that determines a minibatch stream, in one frozen record.
@@ -258,11 +278,7 @@ class DataSpec:
         resume by :meth:`DataPipeline.load_state`.
         """
         d = self.to_dict()
-        for content_free in ("rank", "prefetch_workers", "max_outstanding",
-                             "straggler_factor", "straggler_min_latency",
-                             "cache_bytes", "block_rows", "max_extent_rows",
-                             "io_workers", "readahead", "admission",
-                             "cross_epoch_prefetch"):
+        for content_free in CONTENT_FREE_FIELDS:
             d.pop(content_free, None)
         blob = json.dumps(d, sort_keys=True).encode()
         return hashlib.sha256(blob).hexdigest()[:16]

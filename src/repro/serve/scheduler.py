@@ -23,6 +23,7 @@ equals the standalone batch=1 serve of the same prompt
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import deque
 from typing import Optional
 
@@ -71,13 +72,16 @@ class ContinuousBatcher:
         self.max_len = max_len
         self.eos_id = eos_id
         self.cache = model.init_cache(batch_slots, max_len)
-        self.slots: list[Optional[Request]] = [None] * batch_slots
+        # slots/cursor/completed belong to the single driver thread running
+        # step()/run(); only the submission queue takes concurrent producers
+        self.slots: list[Optional[Request]] = [None] * batch_slots  # guarded-by: external
         self.start = np.zeros(batch_slots, np.int32)
         self.deadline = np.zeros(batch_slots, np.int64)
         self.tokens = np.zeros(batch_slots, np.int32)
-        self.queue: deque[Request] = deque()
-        self.pos = 0  # shared absolute cursor: next position to be written
-        self.completed: list[Request] = []
+        self._lock = threading.Lock()
+        self.queue: deque[Request] = deque()  # guarded-by: _lock
+        self.pos = 0  # guarded-by: external — shared absolute decode cursor
+        self.completed: list[Request] = []  # guarded-by: external
 
         self._decode = jax.jit(
             lambda p, t, c, pos, start: model.decode(p, t, c, pos, start=start),
@@ -90,22 +94,32 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------------ api
     def submit(self, prompt: np.ndarray, max_new: int, rid: Optional[int] = None):
-        rid = rid if rid is not None else len(self.completed) + len(self.queue)
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+        """Enqueue a request; safe from any thread.  Auto-assigned rids are
+        derived under the lock so concurrent submitters never collide."""
+        prompt = np.asarray(prompt, np.int32)
+        with self._lock:
+            if rid is None:
+                rid = len(self.completed) + len(self.queue)
+            self.queue.append(Request(rid, prompt, max_new))
 
     def _admit(self) -> None:
         for slot in range(self.B):
-            if self.slots[slot] is not None or not self.queue:
+            if self.slots[slot] is not None:
                 continue
-            req = self.queue[0]
-            P = len(req.prompt)
-            if self.pos < P:
-                # The prompt must fit behind the shared cursor.  Moving the
-                # cursor would tear KV gaps into already-active slots, so:
-                if any(s is not None for s in self.slots):
-                    break  # wait; the cursor advances one per step (FIFO kept)
-                self.pos = P  # batch idle: jump the cursor freely
-            self.queue.popleft()
+            # peek/decide/pop under the lock; the expensive prefill below
+            # runs outside it so submitters are never blocked on a jit call
+            with self._lock:
+                if not self.queue:
+                    continue
+                req = self.queue[0]
+                P = len(req.prompt)
+                if self.pos < P:
+                    # The prompt must fit behind the shared cursor.  Moving
+                    # the cursor would tear KV gaps into active slots, so:
+                    if any(s is not None for s in self.slots):
+                        break  # wait; cursor advances per step (FIFO kept)
+                    self.pos = P  # batch idle: jump the cursor freely
+                self.queue.popleft()
             offset = self.pos - P
             cache1 = self.model.init_cache(1, self.max_len)
             logits, cache1 = self._prefill(
@@ -152,7 +166,7 @@ class ContinuousBatcher:
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         steps = 0
-        while (self.queue or any(s is not None for s in self.slots)) and steps < max_steps:
+        while (self.queue or any(s is not None for s in self.slots)) and steps < max_steps:  # unlocked-ok: emptiness probe; a late submit is caught next loop
             self.step()
             steps += 1
         return sorted(self.completed, key=lambda r: r.rid)

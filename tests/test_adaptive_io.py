@@ -29,6 +29,15 @@ from repro.data.readplan import BlockCache, FrequencySketch, ReadaheadController
 from repro.data.synth import generate_tahoe_like, write_csr_shard, write_h5ad
 from repro.pipeline import DataSpec, Pipeline
 
+
+@pytest.fixture(autouse=True)
+def _witness(lock_order_witness):
+    """Run every test here under the runtime lock-order witness: observed
+    lock acquisition orders must be a subset of the static lock graph
+    (tests/conftest.py; tools/analyze)."""
+    yield
+
+
 N, G = 2000, 32
 
 

@@ -1,0 +1,637 @@
+"""Self-tests for tools/analyze (the concurrency & contract gate) plus
+regression tests for the genuine violations it flagged in the hot path.
+
+Each check family gets a fixture source tree seeding a KNOWN violation and
+an assertion that it is reported with the right check id and file:line.
+The repo itself must analyze clean (the zero-findings-forward gate), and
+the runtime witness must catch an acquisition order the static graph
+missed.
+"""
+import importlib.util
+import textwrap
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from tools.analyze import run_all
+from tools.analyze.lockorder import static_lock_graph
+from tools.analyze.report import apply_baseline, load_baseline
+from tools.analyze.runtime import LockOrderWitness
+
+REPO_SRC = "src"
+BASELINE = "tools/analyze/baseline.json"
+
+
+def _tree(tmp_path, source, name="mod.py"):
+    """Write one dedented module into a fixture source root."""
+    root = tmp_path / "fixture_src"
+    root.mkdir(exist_ok=True)
+    text = textwrap.dedent(source)
+    (root / name).write_text(text)
+    return str(root), text
+
+
+def _line_of(text, marker):
+    for i, line in enumerate(text.splitlines(), start=1):
+        if marker in line:
+            return i
+    raise AssertionError(f"marker {marker!r} not in fixture")
+
+
+def _by_check(findings, check):
+    return [f for f in findings if f.check == check]
+
+
+# ---------------------------------------------------------------- lock checks
+
+class TestLockDiscipline:
+    def test_unlocked_access_read_and_write(self, tmp_path):
+        root, text = _tree(tmp_path, """
+            import threading
+
+            class C:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.count = 0  # guarded-by: _lock
+
+                def bump(self):
+                    with self._lock:
+                        self.count += 1
+
+                def peek(self):
+                    return self.count  # MARK-READ
+
+                def clobber(self):
+                    self.count = 0  # MARK-WRITE
+        """)
+        found = _by_check(run_all(root), "unlocked-access")
+        assert {(f.line, f.symbol) for f in found} == {
+            (_line_of(text, "MARK-READ"), "C.count"),
+            (_line_of(text, "MARK-WRITE"), "C.count"),
+        }
+        assert all(f.file.endswith("mod.py") for f in found)
+
+    def test_constructor_exempt_and_suppression(self, tmp_path):
+        root, _ = _tree(tmp_path, """
+            import threading
+
+            class C:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.count = 0  # guarded-by: _lock
+                    self.count += 1  # constructors are exempt
+
+                def fast(self):
+                    return self.count  # unlocked-ok: racy probe, documented
+
+                def above(self):
+                    # unlocked-ok: suppression on the line above also counts
+                    return self.count
+        """)
+        assert _by_check(run_all(root), "unlocked-access") == []
+
+    def test_blocking_under_lock(self, tmp_path):
+        root, text = _tree(tmp_path, """
+            import threading
+            import time
+
+            class C:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._sem = threading.Semaphore(4)
+
+                def slow(self, fut):
+                    with self._lock:
+                        time.sleep(0.1)  # MARK-SLEEP
+                        fut.result()  # MARK-RESULT
+                        with self._sem:  # MARK-SEM
+                            pass
+
+                def fine(self, parts):
+                    with self._lock:
+                        return ", ".join(parts)  # str.join is not blocking
+        """)
+        found = _by_check(run_all(root), "blocking-under-lock")
+        assert {f.line for f in found} == {
+            _line_of(text, "MARK-SLEEP"),
+            _line_of(text, "MARK-RESULT"),
+            _line_of(text, "MARK-SEM"),
+        }
+
+    def test_bad_annotation(self, tmp_path):
+        root, text = _tree(tmp_path, """
+            import threading
+
+            class C:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.a = 0  # guarded-by: no_such_lock  MARK-BAD
+                    self.b = 0  # guarded-by: external
+        """)
+        found = _by_check(run_all(root), "bad-annotation")
+        assert [(f.line, f.symbol) for f in found] == [
+            (_line_of(text, "MARK-BAD"), "C.a")
+        ]
+
+
+# ------------------------------------------------------------- lock ordering
+
+class TestLockOrder:
+    CYCLE_SRC = """
+        import threading
+
+        class A:
+            def __init__(self, other: "B" = None):
+                self._la = threading.Lock()
+                self.other = other
+
+            def one(self):
+                with self._la:
+                    if self.other is not None:
+                        self.other.two()
+
+            def plain(self):
+                with self._la:
+                    pass
+
+        class B:
+            def __init__(self, other: "A" = None):
+                self._lb = threading.Lock()
+                self.other = other
+
+            def two(self):
+                with self._lb:
+                    if self.other is not None:
+                        self.other.plain()
+    """
+
+    def test_cross_class_cycle_detected(self, tmp_path):
+        root, _ = _tree(tmp_path, self.CYCLE_SRC)
+        graph = static_lock_graph(root)
+        assert ("mod.A._la", "mod.B._lb") in graph.edges
+        assert ("mod.B._lb", "mod.A._la") in graph.edges
+        found = _by_check(run_all(root), "lock-order-cycle")
+        cycles = [f for f in found if "cycle" in f.message]
+        assert len(cycles) == 1
+        assert "mod.A._la" in cycles[0].symbol and "mod.B._lb" in cycles[0].symbol
+        # the fixed point also derives the conservative transitive
+        # re-acquisition A.one -> B.two -> A.plain (self-deadlock if
+        # ``other`` loops back to the same instance)
+        self_deadlocks = [f for f in found if "self-deadlock" in f.message]
+        assert [f.symbol for f in self_deadlocks] == ["mod.A._la"]
+
+    def test_self_deadlock_detected(self, tmp_path):
+        root, text = _tree(tmp_path, """
+            import threading
+
+            class S:
+                def __init__(self):
+                    self._lock = threading.Lock()
+
+                def helper(self):
+                    with self._lock:
+                        pass
+
+                def outer(self):
+                    with self._lock:
+                        self.helper()  # MARK-CALL
+        """)
+        found = _by_check(run_all(root), "lock-order-cycle")
+        assert len(found) == 1
+        assert found[0].symbol == "mod.S._lock"
+        assert "self-deadlock" in found[0].message
+
+    def test_nested_order_is_not_a_cycle(self, tmp_path):
+        root, _ = _tree(tmp_path, """
+            import threading
+
+            class C:
+                def __init__(self):
+                    self._outer = threading.Lock()
+                    self._inner = threading.Lock()
+
+                def both(self):
+                    with self._outer:
+                        with self._inner:
+                            pass
+        """)
+        graph = static_lock_graph(root)
+        assert ("mod.C._outer", "mod.C._inner") in graph.edges
+        assert _by_check(run_all(root), "lock-order-cycle") == []
+
+
+# ------------------------------------------------------------ runtime witness
+
+WITNESS_SRC = """
+    import threading
+
+    class Inner:
+        def __init__(self):
+            self._lock = threading.Lock()
+
+        def poke(self):
+            with self._lock:
+                pass
+
+    class Outer:
+        def __init__(self, inner: Inner):
+            self._lock = threading.Lock()
+            self.inner = inner
+
+        def good(self):
+            with self._lock:
+                self.inner.poke()
+
+        def bad(self):
+            # statically invisible: `with self.inner._lock` is not a
+            # self-attribute acquisition, so only the witness can see the
+            # inverted order
+            with self.inner._lock:
+                with self._lock:
+                    pass
+    """
+
+
+class TestRuntimeWitness:
+    @pytest.fixture()
+    def fixture_mod(self, tmp_path):
+        root, _ = _tree(tmp_path, WITNESS_SRC)
+        spec = importlib.util.spec_from_file_location("wmod", f"{root}/mod.py")
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        return root, mod
+
+    def test_predicted_order_passes(self, fixture_mod):
+        root, mod = fixture_mod
+        graph = static_lock_graph(root)
+        assert ("mod.Outer._lock", "mod.Inner._lock") in graph.edges
+        witness = LockOrderWitness(graph)
+        with witness.installed():
+            outer = mod.Outer(mod.Inner())
+            outer.good()
+        assert ("mod.Outer._lock", "mod.Inner._lock") in witness.edges
+        assert witness.unpredicted() == set()
+
+    def test_unpredicted_order_caught(self, fixture_mod):
+        root, mod = fixture_mod
+        witness = LockOrderWitness(static_lock_graph(root))
+        with witness.installed():
+            outer = mod.Outer(mod.Inner())
+            outer.bad()
+        assert witness.unpredicted() == {
+            ("mod.Inner._lock", "mod.Outer._lock")
+        }
+
+    def test_unknown_sites_stay_real(self, fixture_mod):
+        root, _ = fixture_mod
+        witness = LockOrderWitness(static_lock_graph(root))
+        with witness.installed():
+            lk = threading.Lock()  # this site is not in the fixture graph
+            assert type(lk).__name__ != "_WitnessLock"
+            with lk:
+                pass
+        assert witness.edges == set()
+
+
+# ----------------------------------------------------------------- contracts
+
+class TestContracts:
+    def test_iostats_pairing_violations(self, tmp_path):
+        root, text = _tree(tmp_path, """
+            import dataclasses
+            import threading
+
+            @dataclasses.dataclass
+            class PendingIO:
+                calls: int = 0
+                orphan: int = 0  # MARK-ORPHAN
+
+            @dataclasses.dataclass
+            class IOStats:
+                calls: int = 0
+                spec_calls: int = 0
+                spec_ghost: int = 0  # MARK-GHOST
+
+                def __post_init__(self):
+                    self._lock = threading.Lock()
+
+                def record(self, n=1):
+                    with self._lock:
+                        self.calls += n
+
+                def snapshot(self):
+                    with self._lock:
+                        return {"calls": self.calls,
+                                "spec_calls": self.spec_calls}
+
+                def reset(self):
+                    with self._lock:
+                        self.calls = self.spec_calls = 0
+
+                def commit(self, pend, speculative=False):
+                    prefix = "spec_" if speculative else ""
+                    with self._lock:
+                        for f in dataclasses.fields(PendingIO):
+                            name = prefix + f.name
+                            setattr(self, name,
+                                    getattr(self, name) + getattr(pend, f.name))
+        """)
+        found = _by_check(run_all(root), "iostats-pairing")
+        orphan_line = _line_of(text, "MARK-ORPHAN")
+        orphan = [f for f in found if f.symbol == "IOStats.orphan"]
+        assert orphan and all(f.line == orphan_line for f in orphan)
+        msgs = " | ".join(f.message for f in orphan)
+        assert "no matching IOStats field" in msgs
+        assert "speculative mirror" in msgs
+        assert "snapshot()" in msgs and "reset()" in msgs
+        ghost = [f for f in found if f.symbol == "IOStats.spec_ghost"]
+        assert [f.line for f in ghost] == [_line_of(text, "MARK-GHOST")]
+
+    def test_dataspec_classification_violations(self, tmp_path):
+        root, text = _tree(tmp_path, """
+            import dataclasses
+
+            FINGERPRINT_FIELDS = frozenset({"seed", "ghost"})  # MARK-SETS
+            CONTENT_FREE_FIELDS = frozenset({"rank"})
+
+            @dataclasses.dataclass(frozen=True)
+            class DataSpec:
+                seed: int = 0
+                rank: int = 0
+                mystery: int = 0  # MARK-MYSTERY
+
+                def fingerprint(self):  # MARK-FP
+                    return str({"seed": self.seed})
+        """)
+        found = _by_check(run_all(root), "dataspec-classification")
+        by_symbol = {f.symbol: f for f in found}
+        assert by_symbol["DataSpec.mystery"].line == _line_of(text, "MARK-MYSTERY")
+        assert "unclassified" in by_symbol["DataSpec.mystery"].message
+        assert by_symbol["DataSpec.ghost"].line == _line_of(text, "MARK-SETS")
+        assert "not a DataSpec field" in by_symbol["DataSpec.ghost"].message
+        assert by_symbol["DataSpec.fingerprint"].line == _line_of(text, "MARK-FP")
+        assert "CONTENT_FREE_FIELDS" in by_symbol["DataSpec.fingerprint"].message
+
+    def test_adapter_protocol_violations(self, tmp_path):
+        root, text = _tree(tmp_path, """
+            def register_backend(scheme):
+                def deco(fn):
+                    return fn
+                return deco
+
+            class StorageAdapter:
+                def __len__(self):
+                    raise NotImplementedError
+                def read_range(self, start, stop):
+                    raise NotImplementedError
+                def take(self, piece, rows):
+                    raise NotImplementedError
+                def concat(self, pieces):
+                    raise NotImplementedError
+                def nbytes_of(self, rows):
+                    raise NotImplementedError
+                def avg_row_bytes(self):
+                    raise NotImplementedError
+                def schema(self):
+                    raise NotImplementedError
+                def bind_iostats(self, iostats):
+                    pass
+                def close(self):
+                    pass
+
+            class HalfAdapter(StorageAdapter):  # MARK-HALF
+                def __len__(self):
+                    return 0
+                def read_range(self, start, stop):
+                    return None
+                def take(self, piece, rows):
+                    return piece
+                def concat(self, pieces):
+                    return pieces
+                def nbytes_of(self, rows):
+                    return 0
+
+            class WrapAdapter(StorageAdapter):  # MARK-WRAP
+                def __init__(self, inner):
+                    self.inner = inner
+                def __len__(self):
+                    return len(self.inner)
+                def read_range(self, start, stop):
+                    return self.inner.read_range(start, stop)
+                def take(self, piece, rows):
+                    return self.inner.take(piece, rows)
+                def concat(self, pieces):
+                    return self.inner.concat(pieces)
+                def nbytes_of(self, rows):
+                    return self.inner.nbytes_of(rows)
+                def avg_row_bytes(self):
+                    return self.inner.avg_row_bytes()
+                def schema(self):
+                    return self.inner.schema()
+
+            @register_backend("half")
+            def _open_half(path) -> HalfAdapter:
+                return HalfAdapter()
+
+            @register_backend("wrap")
+            def _open_wrap(path) -> WrapAdapter:
+                return WrapAdapter(HalfAdapter())
+
+            @register_backend("lost")
+            def _open_lost(path):  # MARK-LOST: no return annotation
+                return None
+        """)
+        found = _by_check(run_all(root), "adapter-protocol")
+        by_symbol = {f.symbol for f in found}
+        assert by_symbol == {
+            "HalfAdapter.avg_row_bytes", "HalfAdapter.schema",
+            "WrapAdapter.bind_iostats", "WrapAdapter.close",
+            "register_backend:lost",
+        }
+        half_lines = {f.line for f in found if f.symbol.startswith("Half")}
+        assert half_lines == {_line_of(text, "MARK-HALF")}
+        wrap_lines = {f.line for f in found if f.symbol.startswith("Wrap")}
+        assert wrap_lines == {_line_of(text, "MARK-WRAP")}
+
+
+# ------------------------------------------------------------ repo-clean gate
+
+class TestRepoGate:
+    def test_repo_analyzes_clean(self):
+        """The zero-findings-forward gate: the real source tree must have
+        no findings beyond the committed baseline (empty today)."""
+        findings = run_all(REPO_SRC)
+        fresh, stale = apply_baseline(findings, load_baseline(BASELINE))
+        assert fresh == [], "\n".join(f.render() for f in fresh)
+        assert stale == []
+
+    def test_repo_lock_graph_is_predicted_shape(self):
+        """The repo's cross-class lock edges are deliberate and few; a new
+        one should be a conscious decision (update this test)."""
+        graph = static_lock_graph(REPO_SRC)
+        cross = {
+            (a, b) for a, b in graph.edges
+            if a.rsplit(".", 2)[0] != b.rsplit(".", 2)[0]
+        }
+        assert cross == {
+            (
+                "repro.data.backend.PlannedCollection._fl",
+                "repro.data.readplan.BlockCache._lock",
+            ),
+            (
+                "repro.data.cloud.CloudAdapter._sem",
+                "repro.data.iostats.IOStats._lock",
+            ),
+        }
+
+
+# -------------------------------------------- regressions for the fixed bugs
+
+class TestRegressions:
+    def test_iostats_snapshot_never_tears(self):
+        """snapshot()/cache_hit_rate under concurrent record(): every
+        consistent cut must keep runs*2 == bytes_read (the writer always
+        records them paired)."""
+        from repro.data import IOStats
+
+        stats = IOStats()
+        stop = threading.Event()
+
+        def writer():
+            while not stop.is_set():
+                stats.record(runs=1, rows=1, bytes_read=2, wall_s=0.0,
+                             cache_hits=1, cache_misses=1)
+
+        threads = [threading.Thread(target=writer) for _ in range(4)]
+        for t in threads:
+            t.start()
+        try:
+            for _ in range(300):
+                snap = stats.snapshot()
+                assert snap["bytes_read"] == 2 * snap["runs"], snap
+                assert 0.0 <= stats.cache_hit_rate <= 1.0
+        finally:
+            stop.set()
+            for t in threads:
+                t.join()
+
+    def test_blockcache_snapshot_is_consistent(self):
+        """snapshot() under concurrent put(): entries * nb == cur_bytes in
+        every cut (all values share one size), and the inlined hit_rate
+        does not self-deadlock."""
+        from repro.data.readplan import BlockCache
+
+        nb = 64
+        cache = BlockCache(max_bytes=nb * 32)
+        stop = threading.Event()
+
+        def writer(tag):
+            k = 0
+            while not stop.is_set():
+                cache.put((tag, k), object(), nb)
+                k += 1
+
+        threads = [threading.Thread(target=writer, args=(i,)) for i in range(4)]
+        for t in threads:
+            t.start()
+        try:
+            for _ in range(300):
+                snap = cache.snapshot()
+                assert snap["cur_bytes"] == nb * snap["entries"], snap
+                assert 0.0 <= snap["hit_rate"] <= 1.0
+                assert len(cache) >= 0
+                assert 0.0 <= cache.hit_rate <= 1.0
+        finally:
+            stop.set()
+            for t in threads:
+                t.join()
+
+    def test_epoch_order_computed_once_under_concurrency(self):
+        """Concurrent cold _epoch_order() calls must materialize the epoch
+        index array exactly once (the double-checked lock), not per caller."""
+        from repro.core import BlockShuffling, ScDataset
+
+        class CountingStrategy:
+            def __init__(self):
+                self.inner = BlockShuffling(8)
+                self.calls = 0
+
+            def epoch_indices(self, n, seed, epoch):
+                self.calls += 1
+                time.sleep(0.02)  # widen the race window
+                return self.inner.epoch_indices(n, seed, epoch)
+
+            def epoch_len(self, n):
+                return self.inner.epoch_len(n)
+
+        X = np.arange(4096 * 2, dtype=np.float32).reshape(4096, 2)
+        strat = CountingStrategy()
+        ds = ScDataset(X, strat, batch_size=32, fetch_factor=2, seed=1)
+        results = []
+        barrier = threading.Barrier(8)
+
+        def worker():
+            barrier.wait()
+            results.append(ds._epoch_order(5))
+
+        threads = [threading.Thread(target=worker) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert strat.calls == 1
+        for r in results[1:]:
+            np.testing.assert_array_equal(results[0], r)
+
+    def test_scheduler_concurrent_submits_get_unique_rids(self):
+        """submit() from many threads must never mint duplicate rids (the
+        len(completed)+len(queue) read now happens under the lock)."""
+        from repro.serve.scheduler import ContinuousBatcher
+
+        b = ContinuousBatcher.__new__(ContinuousBatcher)
+        b._lock = threading.Lock()
+        b.queue = __import__("collections").deque()
+        b.completed = []
+        barrier = threading.Barrier(8)
+
+        def worker():
+            barrier.wait()
+            for _ in range(50):
+                b.submit(np.array([1, 2], np.int32), max_new=1)
+
+        threads = [threading.Thread(target=worker) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        rids = [r.rid for r in b.queue]
+        assert len(rids) == 400
+        assert len(set(rids)) == 400
+
+    def test_pool_single_executor_and_close_is_final(self, tmp_path):
+        """_pool() must hand every caller ONE executor (no duplicate pools
+        leaking threads) and never resurrect one after close()."""
+        from repro.data import open_collection, write_chunked_store
+
+        X = np.arange(1024 * 2, dtype=np.float32).reshape(1024, 2)
+        path = str(tmp_path / "ck")
+        write_chunked_store(path, X, {"y": np.arange(len(X))}, chunk_rows=128)
+        col = open_collection(f"chunked://{path}", io_workers=4)
+        pools = []
+        barrier = threading.Barrier(8)
+
+        def worker():
+            barrier.wait()
+            pools.append(col._pool())
+
+        threads = [threading.Thread(target=worker) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert all(p is pools[0] and p is not None for p in pools)
+        col.close()
+        assert col._pool() is None
+        col.release()

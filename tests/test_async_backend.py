@@ -19,6 +19,14 @@ from repro.core import BlockShuffling, PrefetchPool, ScDataset, Streaming
 from repro.data import IOStats, StreamDetector, open_collection, write_chunked_store, write_csr_shard
 
 
+@pytest.fixture(autouse=True)
+def _witness(lock_order_witness):
+    """Run every test here under the runtime lock-order witness: observed
+    lock acquisition orders must be a subset of the static lock graph
+    (tests/conftest.py; tools/analyze)."""
+    yield
+
+
 @pytest.fixture(scope="module")
 def chunked(tmp_path_factory):
     """(uri, X): dense chunked store — fast, exact float comparison."""

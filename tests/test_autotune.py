@@ -138,3 +138,102 @@ def test_probe_collection_cached_vs_uncached_changes_recommendation(tmp_path):
     assert rc.cache_reserved_bytes > 0 and ru.cache_reserved_bytes == 0
     assert rc.fetch_factor < ru.fetch_factor
     assert rc.rationale != ru.rationale
+
+
+# --------------------------------------- admission/readahead drift (PR 6)
+def test_model_drift_flags_admission_regime_flip():
+    """Admission-decision counters drifting from the probe-time rates must
+    flag a re-probe even while the hit rate still matches the model."""
+    from repro.core.autotune import model_drift
+    from repro.data import IOStats
+
+    model = IOCostModel(c0=0.01, c_seek=1e-3, c_byte=1e-9, row_bytes=100.0,
+                        runs_per_sample=0.5, hit_rate=0.5,
+                        adm_bypass_rate=0.0, adm_reject_rate=0.0)
+    calm = IOStats()
+    calm.record(runs=50, rows=100, bytes_read=100, wall_s=0.0,
+                cache_hits=50, cache_misses=50)
+    assert model_drift(model, calm) == pytest.approx(0.0)
+
+    # same hit rate, but the stream detector started bypassing admission
+    flipped = IOStats()
+    flipped.record(runs=50, rows=100, bytes_read=100, wall_s=0.0,
+                   cache_hits=50, cache_misses=50, adm_bypassed=80)
+    assert model_drift(model, flipped) == pytest.approx(0.8)
+
+    # TinyLFU rejections drift the same way
+    duels = IOStats()
+    duels.record(runs=50, rows=100, bytes_read=100, wall_s=0.0,
+                 cache_hits=50, cache_misses=50, adm_rejected=60)
+    assert model_drift(model, duels) == pytest.approx(0.6)
+
+
+def test_model_drift_base_isolates_recent_admission_flip():
+    """With a probe-time baseline snapshot, only post-probe deltas count:
+    a long bypass-heavy history before the probe must not mask (or fake)
+    drift afterwards."""
+    from repro.core.autotune import model_drift
+    from repro.data import IOStats
+
+    model = IOCostModel(c0=0.01, c_seek=1e-3, c_byte=1e-9, row_bytes=100.0,
+                        runs_per_sample=0.5, hit_rate=0.5,
+                        adm_bypass_rate=0.0, adm_reject_rate=0.0)
+    stats = IOStats()
+    stats.record(runs=500, rows=1000, bytes_read=100, wall_s=0.0,
+                 cache_hits=500, cache_misses=500, adm_bypassed=900)
+    base = stats.snapshot()
+    # lifetime totals scream drift; the post-probe window is calm
+    assert model_drift(model, stats) == pytest.approx(0.9)
+    stats.record(runs=50, rows=100, bytes_read=100, wall_s=0.0,
+                 cache_hits=50, cache_misses=50)
+    assert model_drift(model, stats, base=base) == pytest.approx(0.0)
+
+
+def test_model_drift_readahead_shifts():
+    """Each readahead depth change contributes 0.5 drift, capped at 1.0."""
+    from repro.core.autotune import model_drift
+    from repro.data import IOStats
+
+    model = IOCostModel(c0=0.01, c_seek=1e-3, c_byte=1e-9, row_bytes=100.0)
+    empty = IOStats()
+    assert model_drift(model, empty) == 0.0
+    assert model_drift(model, empty, ra_shifts=1) == pytest.approx(0.5)
+    assert model_drift(model, empty, ra_shifts=2) == pytest.approx(1.0)
+    assert model_drift(model, empty, ra_shifts=7) == pytest.approx(1.0)
+
+
+def test_autotune_reprobes_on_readahead_shift(tmp_path):
+    """ScDataset.autotune must re-probe when the adaptive readahead
+    controller moved since the cached model was fitted, and must keep the
+    cached model when nothing changed."""
+    from repro.core import BlockShuffling, ScDataset
+    from repro.data import open_collection, write_chunked_store
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(8192, 8)).astype(np.float32)
+    path = str(tmp_path / "ck")
+    write_chunked_store(path, X, {"y": np.arange(len(X))}, chunk_rows=1024)
+    col = open_collection(f"chunked://{path}", block_rows=64,
+                         cache_bytes=32 << 20, readahead="auto")
+    try:
+        ds = ScDataset(col, BlockShuffling(64), batch_size=64,
+                       fetch_factor=4, seed=0)
+        kw = dict(mem_budget_bytes=60e6, probes=2, probe_rows=256)
+        ds.autotune(**kw)
+        first = ds._tuned_model
+        assert first is not None
+        # steady state: second call reuses the cached fit
+        ds.autotune(**kw)
+        assert ds._tuned_model is first
+        # the controller moving twice is 1.0 drift on its own -> re-probe
+        col._ra_controller.grows += 2
+        ds.autotune(**kw)
+        assert ds._tuned_model is not first
+        assert ds._tuned_ra_mark == col._ra_controller.grows + \
+            col._ra_controller.shrinks
+        # and the new mark absorbs the shift: a further call is cached again
+        second = ds._tuned_model
+        ds.autotune(**kw)
+        assert ds._tuned_model is second
+    finally:
+        col.release()

@@ -7,6 +7,14 @@ import pytest
 from repro.core import BlockShuffling, PrefetchPool, ScDataset
 
 
+@pytest.fixture(autouse=True)
+def _witness(lock_order_witness):
+    """Run every test here under the runtime lock-order witness: observed
+    lock acquisition orders must be a subset of the static lock graph
+    (tests/conftest.py; tools/analyze)."""
+    yield
+
+
 def _X(n=8192):
     return np.arange(n * 2, dtype=np.float32).reshape(n, 2)
 

@@ -1,0 +1,59 @@
+"""Static concurrency & contract analyzer (CI gate).
+
+Run from the repo root::
+
+    python tools/analyze --src src --baseline tools/analyze/baseline.json
+
+Check families (ids used in findings and the baseline):
+
+- ``unlocked-access`` / ``blocking-under-lock`` / ``bad-annotation`` —
+  lock discipline over ``# guarded-by:`` annotations (:mod:`.locks`);
+- ``lock-order-cycle`` — cycles in the static lock-acquisition graph
+  (:mod:`.lockorder`), cross-checked at runtime by :mod:`.runtime`;
+- ``iostats-pairing`` / ``dataspec-classification`` / ``adapter-protocol``
+  — API contracts (:mod:`.contracts`).
+
+See ``docs/analysis.md`` for the annotation grammar and workflow.
+"""
+from __future__ import annotations
+
+from .contracts import check_adapters, check_dataspec, check_iostats
+from .lockorder import check_lock_order, static_lock_graph
+from .locks import check_locks
+from .model import SourceModel, build_model
+from .report import Finding, apply_baseline, baseline_entry, load_baseline
+
+__all__ = [
+    "Finding",
+    "SourceModel",
+    "apply_baseline",
+    "baseline_entry",
+    "build_model",
+    "check_adapters",
+    "check_dataspec",
+    "check_iostats",
+    "check_lock_order",
+    "check_locks",
+    "load_baseline",
+    "run_all",
+    "static_lock_graph",
+]
+
+CHECKS = (
+    check_locks,
+    check_lock_order,
+    check_iostats,
+    check_dataspec,
+    check_adapters,
+)
+
+
+def run_all(src_root: str, model: SourceModel | None = None) -> list[Finding]:
+    """Every finding from every check family, sorted by location."""
+    if model is None:
+        model = build_model(src_root)
+    findings: list[Finding] = []
+    for check in CHECKS:
+        findings.extend(check(model))
+    findings.sort(key=lambda f: (f.file, f.line, f.check, f.symbol))
+    return findings

@@ -1,0 +1,69 @@
+"""CLI for the analyzer — ``python tools/analyze --src src``."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):  # `python tools/analyze` (no parent package)
+    _REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    sys.path.insert(0, _REPO)
+
+from tools.analyze import build_model, run_all
+from tools.analyze.lockorder import build_graph
+from tools.analyze.report import apply_baseline, baseline_entry, load_baseline
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="tools/analyze",
+        description="static concurrency & contract analyzer",
+    )
+    ap.add_argument("--src", default="src", help="source root to analyze")
+    ap.add_argument("--baseline", default=None,
+                    help="JSON baseline of accepted findings")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON (baseline-entry shaped)")
+    ap.add_argument("--graph", action="store_true",
+                    help="print the static lock graph and exit")
+    args = ap.parse_args(argv)
+
+    model = build_model(args.src)
+    if args.graph:
+        graph = build_graph(model)
+        print(f"{len(graph.sites)} lock site(s):")
+        for (file, line), lid in sorted(graph.sites.items()):
+            print(f"  {lid} [{graph.kinds[lid]}] @ {file}:{line}")
+        print(f"{len(graph.edges)} edge(s):")
+        for a, b in sorted(graph.edges):
+            file, line = graph.provenance[(a, b)]
+            print(f"  {a} -> {b} @ {file}:{line}")
+        return 0
+
+    findings = run_all(args.src, model=model)
+    fresh, stale = apply_baseline(findings, load_baseline(args.baseline))
+
+    if args.json:
+        print(json.dumps([baseline_entry(f) | {"line": f.line} for f in fresh],
+                         indent=2))
+    else:
+        for f in fresh:
+            print(f.render())
+    for e in stale:
+        print(
+            f"warning: stale baseline entry (no longer found): "
+            f"{e.get('check')} {e.get('file')} {e.get('symbol')}",
+            file=sys.stderr,
+        )
+    n_base = len(findings) - len(fresh)
+    print(
+        f"analyze: {len(findings)} finding(s), {n_base} baselined, "
+        f"{len(fresh)} blocking, {len(stale)} stale baseline entr(ies)",
+        file=sys.stderr,
+    )
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,385 @@
+"""Check family 3 — cross-cutting API contracts.
+
+Three contracts that hold the repo's counters, caching semantics and
+adapter registry together, each cheap to break silently in a refactor:
+
+- ``iostats-pairing``: every counter in :class:`PendingIO` must have a
+  matched pair of ``IOStats`` fields (main + ``spec_*``), be written by a
+  recording method, appear in ``snapshot()``, be zeroed by ``reset()``,
+  and be merged by ``commit()`` — so a new counter added in one place
+  cannot silently vanish from the others.
+- ``dataspec-classification``: every ``DataSpec`` field must be listed in
+  exactly one of the module-level ``FINGERPRINT_FIELDS`` /
+  ``CONTENT_FREE_FIELDS`` frozensets, with no stale names, and
+  ``fingerprint()`` must consume ``CONTENT_FREE_FIELDS`` — machine-checking
+  the refusal semantics: a spec field either changes delivered bytes (and
+  the fingerprint) or is *explicitly* declared content-free.
+- ``adapter-protocol``: every class reachable from a
+  ``@register_backend(...)`` opener's return annotation must concretely
+  implement the full storage contract (a body that is just ``raise
+  NotImplementedError`` does not count), and wrapper adapters (those
+  holding ``self.inner``) must forward ``bind_iostats`` / ``close``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from .model import ClassInfo, SourceModel, parse_file
+from .report import Finding
+
+#: methods every registered adapter must implement with a real body.
+#: (boundaries / obs_keys / obs_column / bind_iostats / close have usable
+#: StorageAdapter defaults and are only required on wrappers, below.)
+ADAPTER_REQUIRED = (
+    "__len__", "read_range", "take", "concat", "nbytes_of",
+    "avg_row_bytes", "schema",
+)
+#: wrappers that hold an inner adapter must forward lifecycle calls too —
+#: the default no-ops would silently drop iostats binding and leak handles.
+WRAPPER_REQUIRED = ("bind_iostats", "close")
+
+
+# --------------------------------------------------------------------------
+# small AST helpers
+# --------------------------------------------------------------------------
+
+def _class_fields(cls: ClassInfo) -> list[tuple[str, int]]:
+    """Class-level AnnAssign fields (dataclass counters), with lines."""
+    out = []
+    for stmt in cls.node.body:
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+            out.append((stmt.target.id, stmt.lineno))
+    return out
+
+
+def _self_write_targets(fn: ast.FunctionDef) -> set[str]:
+    """Attributes of ``self`` written (Assign/AugAssign, incl. chained)."""
+    out: set[str] = set()
+    for node in ast.walk(fn):
+        targets: list[ast.expr] = []
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        for t in targets:
+            if (
+                isinstance(t, ast.Attribute)
+                and isinstance(t.value, ast.Name)
+                and t.value.id in ("self", "pend")
+            ):
+                out.add(t.attr)
+    return out
+
+
+def _dict_string_keys(fn: ast.FunctionDef) -> set[str]:
+    out: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Dict):
+            for k in node.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    out.add(k.value)
+    return out
+
+
+def _is_abstract_body(fn: ast.FunctionDef) -> bool:
+    """True when the body is only doc/ellipsis/``raise NotImplementedError``."""
+    real = [
+        s for s in fn.body
+        if not (isinstance(s, ast.Expr) and isinstance(s.value, ast.Constant))
+    ]
+    if not real:
+        return True  # docstring/ellipsis only — a Protocol stub
+    if len(real) == 1 and isinstance(real[0], ast.Raise):
+        exc = real[0].exc
+        name = ""
+        if isinstance(exc, ast.Call):
+            exc = exc.func
+        if isinstance(exc, ast.Name):
+            name = exc.id
+        elif isinstance(exc, ast.Attribute):
+            name = exc.attr
+        return name == "NotImplementedError"
+    return False
+
+
+def _find_class(model: SourceModel, name: str) -> Optional[ClassInfo]:
+    return model.resolve_class(name)
+
+
+# --------------------------------------------------------------------------
+# iostats pairing
+# --------------------------------------------------------------------------
+
+def iostats_counter_names(model_or_path) -> list[str]:
+    """The canonical counter list: PendingIO's dataclass fields.
+
+    Accepts a built :class:`SourceModel` or a path to ``iostats.py`` (the
+    docs gate calls it with the file path to stay import-free).
+    """
+    if isinstance(model_or_path, SourceModel):
+        cls = _find_class(model_or_path, "PendingIO")
+        return [n for n, _ in _class_fields(cls)] if cls else []
+    info = parse_file(model_or_path, src_root="/")
+    for cls in info.classes:
+        if cls.name == "PendingIO":
+            return [n for n, _ in _class_fields(cls)]
+    return []
+
+
+def _commit_is_generic(fn: ast.FunctionDef) -> bool:
+    """commit() iterating ``dataclasses.fields(PendingIO)`` merges every
+    counter pair by construction."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            fname = f.attr if isinstance(f, ast.Attribute) else getattr(f, "id", "")
+            if fname == "fields" and any(
+                isinstance(a, ast.Name) and a.id == "PendingIO" for a in node.args
+            ):
+                return True
+    return False
+
+
+def check_iostats(model: SourceModel) -> list[Finding]:
+    pend = _find_class(model, "PendingIO")
+    stats = _find_class(model, "IOStats")
+    if pend is None or stats is None:
+        return []  # not this repo's layout — nothing to check
+    findings: list[Finding] = []
+    counters = _class_fields(pend)
+    stat_fields = {n for n, _ in _class_fields(stats)}
+    writes: set[str] = set()
+    for mname, fn in stats.methods.items():
+        if mname not in ("reset", "snapshot", "commit", "__post_init__"):
+            writes |= _self_write_targets(fn)
+    snap = stats.methods.get("snapshot")
+    snap_keys = _dict_string_keys(snap) if snap else set()
+    reset = stats.methods.get("reset")
+    reset_targets = _self_write_targets(reset) if reset else set()
+    commit = stats.methods.get("commit")
+    commit_generic = commit is not None and _commit_is_generic(commit)
+
+    def miss(counter: str, line: int, what: str) -> None:
+        findings.append(Finding(
+            check="iostats-pairing",
+            file=stats.file,
+            line=line,
+            symbol=f"IOStats.{counter}",
+            message=f"counter {counter!r} (PendingIO) {what}",
+        ))
+
+    for name, line in counters:
+        spec = f"spec_{name}"
+        if name not in stat_fields:
+            miss(name, line, "has no matching IOStats field")
+        if spec not in stat_fields:
+            miss(name, line, f"has no speculative mirror IOStats.{spec}")
+        if name not in writes:
+            miss(name, line, "is never written by a recording method")
+        for k in (name, spec):
+            if k not in snap_keys:
+                miss(name, line, f"is missing from snapshot() (key {k!r})")
+            if k not in reset_targets:
+                miss(name, line, f"is not zeroed by reset() (field {k!r})")
+        if not commit_generic and commit is not None:
+            merged = _self_write_targets(commit)
+            if name not in merged or spec not in merged:
+                miss(name, line, "is not merged by commit()")
+    if commit is None:
+        findings.append(Finding(
+            check="iostats-pairing", file=stats.file, line=stats.line,
+            symbol="IOStats.commit",
+            message="IOStats has no commit() merging PendingIO buffers",
+        ))
+    # spec_* fields with no primary counterpart are stale leftovers
+    counter_names = {n for n, _ in counters}
+    for n, line in _class_fields(stats):
+        if n.startswith("spec_") and n[5:] not in counter_names:
+            findings.append(Finding(
+                check="iostats-pairing", file=stats.file, line=line,
+                symbol=f"IOStats.{n}",
+                message=f"speculative counter {n!r} has no PendingIO primary",
+            ))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# dataspec classification
+# --------------------------------------------------------------------------
+
+def _module_frozenset(tree: ast.Module, name: str) -> Optional[tuple[set[str], int]]:
+    for stmt in tree.body:
+        targets = []
+        if isinstance(stmt, ast.Assign):
+            targets = [t.id for t in stmt.targets if isinstance(t, ast.Name)]
+            value = stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+            targets, value = [stmt.target.id], stmt.value
+        else:
+            continue
+        if name not in targets or value is None:
+            continue
+        names: set[str] = set()
+        for node in ast.walk(value):
+            if isinstance(node, ast.Constant) and isinstance(node.value, str):
+                names.add(node.value)
+        return names, stmt.lineno
+    return None
+
+
+def check_dataspec(model: SourceModel) -> list[Finding]:
+    spec = _find_class(model, "DataSpec")
+    if spec is None:
+        return []
+    findings: list[Finding] = []
+    mod = model.modules[spec.file]
+
+    def bad(line: int, symbol: str, msg: str) -> None:
+        findings.append(Finding(
+            check="dataspec-classification", file=spec.file, line=line,
+            symbol=symbol, message=msg,
+        ))
+
+    fields = _class_fields(spec)
+    fp = _module_frozenset(mod.tree, "FINGERPRINT_FIELDS")
+    cf = _module_frozenset(mod.tree, "CONTENT_FREE_FIELDS")
+    if fp is None or cf is None:
+        missing = [n for n, v in
+                   (("FINGERPRINT_FIELDS", fp), ("CONTENT_FREE_FIELDS", cf))
+                   if v is None]
+        bad(spec.line, "DataSpec",
+            f"module-level {' and '.join(missing)} classification set(s) "
+            "not found next to DataSpec")
+        return findings
+    fp_names, fp_line = fp
+    cf_names, cf_line = cf
+    field_names = {n for n, _ in fields}
+    for name, line in fields:
+        in_fp, in_cf = name in fp_names, name in cf_names
+        if in_fp and in_cf:
+            bad(line, f"DataSpec.{name}",
+                f"field {name!r} is in BOTH FINGERPRINT_FIELDS and "
+                "CONTENT_FREE_FIELDS")
+        elif not in_fp and not in_cf:
+            bad(line, f"DataSpec.{name}",
+                f"field {name!r} is unclassified: add it to "
+                "FINGERPRINT_FIELDS (changes delivered bytes) or "
+                "CONTENT_FREE_FIELDS (explicitly content-free)")
+    for name in sorted((fp_names | cf_names) - field_names):
+        which = "FINGERPRINT_FIELDS" if name in fp_names else "CONTENT_FREE_FIELDS"
+        bad(fp_line if name in fp_names else cf_line, f"DataSpec.{name}",
+            f"{which} lists {name!r}, which is not a DataSpec field")
+    fpm = spec.methods.get("fingerprint")
+    if fpm is None:
+        bad(spec.line, "DataSpec.fingerprint", "DataSpec has no fingerprint()")
+    else:
+        uses = any(
+            isinstance(n, ast.Name) and n.id == "CONTENT_FREE_FIELDS"
+            for n in ast.walk(fpm)
+        )
+        if not uses:
+            bad(fpm.lineno, "DataSpec.fingerprint",
+                "fingerprint() does not consume CONTENT_FREE_FIELDS — the "
+                "classification sets and the fingerprint can drift apart")
+    return findings
+
+
+# --------------------------------------------------------------------------
+# adapter protocol
+# --------------------------------------------------------------------------
+
+def _registered_adapter_classes(model: SourceModel) -> list[tuple[ClassInfo, str, int]]:
+    """(adapter class, scheme, opener line) for every @register_backend."""
+    out = []
+    for mod in model.modules.values():
+        for stmt in mod.tree.body:
+            if not isinstance(stmt, ast.FunctionDef):
+                continue
+            scheme = None
+            for dec in stmt.decorator_list:
+                if (
+                    isinstance(dec, ast.Call)
+                    and isinstance(dec.func, ast.Name)
+                    and dec.func.id == "register_backend"
+                    and dec.args
+                    and isinstance(dec.args[0], ast.Constant)
+                ):
+                    scheme = dec.args[0].value
+            if scheme is None:
+                continue
+            ret = stmt.returns
+            cname = None
+            if isinstance(ret, ast.Name):
+                cname = ret.id
+            elif isinstance(ret, ast.Attribute):
+                cname = ret.attr
+            elif isinstance(ret, ast.Constant) and isinstance(ret.value, str):
+                cname = ret.value.split(".")[-1]
+            cls = model.resolve_class(cname) if cname else None
+            if cls is None:
+                out.append((None, scheme, stmt.lineno, mod.file, stmt.name))
+            else:
+                out.append((cls, scheme, stmt.lineno, mod.file, stmt.name))
+    return out
+
+
+def _concrete_in_mro(model: SourceModel, cls: ClassInfo, mname: str) -> bool:
+    for c in model.mro(cls):
+        fn = c.methods.get(mname)
+        if fn is not None:
+            return not _is_abstract_body(fn)
+    return False
+
+
+def _is_wrapper(cls: ClassInfo) -> bool:
+    return "inner" in cls.attr_types or any(
+        isinstance(n, ast.Attribute)
+        and n.attr == "inner"
+        and isinstance(n.value, ast.Name)
+        and n.value.id == "self"
+        for fn in cls.methods.values()
+        for n in ast.walk(fn)
+    )
+
+
+def check_adapters(model: SourceModel) -> list[Finding]:
+    findings: list[Finding] = []
+    for entry in _registered_adapter_classes(model):
+        cls, scheme, line, file, opener = entry
+        if cls is None:
+            findings.append(Finding(
+                check="adapter-protocol", file=file, line=line,
+                symbol=f"register_backend:{scheme}",
+                message=(
+                    f"opener {opener!r} for scheme {scheme!r} has no "
+                    "resolvable adapter-class return annotation"
+                ),
+            ))
+            continue
+        for mname in ADAPTER_REQUIRED:
+            if not _concrete_in_mro(model, cls, mname):
+                findings.append(Finding(
+                    check="adapter-protocol", file=cls.file, line=cls.line,
+                    symbol=f"{cls.name}.{mname}",
+                    message=(
+                        f"registered adapter {cls.name} (scheme {scheme!r}) "
+                        f"does not concretely implement {mname}()"
+                    ),
+                ))
+        if _is_wrapper(cls):
+            for mname in WRAPPER_REQUIRED:
+                own = any(mname in c.methods and not _is_abstract_body(c.methods[mname])
+                          for c in model.mro(cls)
+                          if c.name not in ("StorageAdapter", "Collection"))
+                if not own:
+                    findings.append(Finding(
+                        check="adapter-protocol", file=cls.file, line=cls.line,
+                        symbol=f"{cls.name}.{mname}",
+                        message=(
+                            f"wrapper adapter {cls.name} holds self.inner but "
+                            f"does not forward {mname}() — the StorageAdapter "
+                            "default would silently drop it"
+                        ),
+                    ))
+    return findings

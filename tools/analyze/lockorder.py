@@ -1,0 +1,243 @@
+"""Check family 2 — the static lock-acquisition graph and its cycles.
+
+Every lock is a creation site ``self.X = threading.Lock()`` identified as
+``module.Class.attr``.  The graph has an edge ``A -> B`` when some thread
+may acquire B while holding A:
+
+- directly — a ``with self.B:`` nested inside ``with self.A:``;
+- transitively — a call made under A to a method whose *may-acquire* set
+  (fixed point over the call graph, with best-effort receiver typing from
+  the source model and virtual dispatch through in-model subclasses)
+  contains B.
+
+A cycle in this graph is a potential deadlock (``lock-order-cycle``); a
+self-edge on a non-reentrant ``threading.Lock`` is certain self-deadlock.
+The analysis is deliberately conservative: unresolvable receivers
+contribute nothing, so the graph can miss edges through dynamic dispatch —
+which is exactly what the runtime witness (:mod:`tools.analyze.runtime`)
+cross-checks: acquisition orders observed under the concurrency test
+suites must be a subset of this graph.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Optional
+
+from .model import ClassInfo, SourceModel, build_model
+from .report import Finding
+
+
+@dataclasses.dataclass
+class StaticLockGraph:
+    #: (holder id, acquired id) — ids are "module.Class.attr"
+    edges: set[tuple[str, str]]
+    #: (realpath of file, line of the threading.<Factory>() call) -> id
+    sites: dict[tuple[str, int], str]
+    #: id -> lock kind ("lock" | "rlock" | "semaphore")
+    kinds: dict[str, str]
+    #: (a, b) -> (file, line) of one statement inducing the edge
+    provenance: dict[tuple[str, str], tuple[str, int]]
+
+
+def _call_targets(
+    model: SourceModel, cls: ClassInfo, call: ast.Call
+) -> list[tuple[ClassInfo, str]]:
+    """Possible (class, method) targets of a call made inside ``cls``."""
+    fn = call.func
+    if not isinstance(fn, ast.Attribute):
+        return []
+    mname = fn.attr
+    recv = fn.value
+    owner: Optional[ClassInfo] = None
+    if isinstance(recv, ast.Name) and recv.id == "self":
+        owner = cls
+    elif (
+        isinstance(recv, ast.Attribute)
+        and isinstance(recv.value, ast.Name)
+        and recv.value.id == "self"
+    ):
+        tname = cls.attr_types.get(recv.attr)
+        owner = model.resolve_class(tname) if tname else None
+    if owner is None:
+        return []
+    targets: list[tuple[ClassInfo, str]] = []
+    found = model.find_method(owner, mname)
+    if found is not None:
+        targets.append((found[0], mname))
+    for sub in model.subclasses(owner):  # virtual dispatch
+        if mname in sub.methods:
+            targets.append((sub, mname))
+    return targets
+
+
+def _locks_of_with(node: ast.With, cls: ClassInfo) -> list[str]:
+    out = []
+    for item in node.items:
+        e = item.context_expr
+        if (
+            isinstance(e, ast.Attribute)
+            and isinstance(e.value, ast.Name)
+            and e.value.id == "self"
+            and e.attr in cls.locks
+        ):
+            out.append(cls.lock_id(e.attr))
+    return out
+
+
+def _walk_method(
+    model: SourceModel,
+    cls: ClassInfo,
+    fn: ast.FunctionDef,
+    may_acquire: dict[tuple[str, str], set[str]],
+    edges: dict[tuple[str, str], tuple[str, int]],
+) -> set[str]:
+    """Collect edges for one method; returns its DIRECT acquire set."""
+    direct: set[str] = set()
+
+    def visit(node: ast.AST, held: tuple[str, ...]) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            body = node.body if not isinstance(node, ast.Lambda) else [node.body]
+            for child in body:
+                visit(child, ())  # runs later, no locks inherited
+            return
+        if isinstance(node, ast.With):
+            acquired = _locks_of_with(node, cls)
+            for item in node.items:
+                visit(item.context_expr, held)
+            inner = held
+            for lid in acquired:
+                direct.add(lid)
+                for h in inner:
+                    edges.setdefault((h, lid), (cls.file, node.lineno))
+                inner = inner + (lid,)
+            for child in node.body:
+                visit(child, inner)
+            return
+        if isinstance(node, ast.Call) and held:
+            for tcls, tm in _call_targets(model, cls, node):
+                for lid in may_acquire.get((tcls.name, tm), set()):
+                    for h in held:
+                        edges.setdefault((h, lid), (cls.file, node.lineno))
+        for child in ast.iter_child_nodes(node):
+            visit(child, held)
+
+    for child in fn.body:
+        visit(child, ())
+    return direct
+
+
+def _fixed_point(model: SourceModel) -> dict[tuple[str, str], set[str]]:
+    """(class name, method) -> every lock id the call MAY acquire."""
+    may: dict[tuple[str, str], set[str]] = {}
+    calls: dict[tuple[str, str], list[tuple[str, str]]] = {}
+    for cls in model.classes():
+        for mname, fn in cls.methods.items():
+            key = (cls.name, mname)
+            direct: set[str] = set()
+            callees: list[tuple[str, str]] = []
+            for node in ast.walk(fn):
+                if isinstance(node, ast.With):
+                    direct.update(_locks_of_with(node, cls))
+                elif isinstance(node, ast.Call):
+                    callees.extend(
+                        (t.name, m) for t, m in _call_targets(model, cls, node)
+                    )
+            may[key] = direct
+            calls[key] = callees
+    changed = True
+    while changed:
+        changed = False
+        for key, callees in calls.items():
+            cur = may[key]
+            before = len(cur)
+            for ck in callees:
+                cur |= may.get(ck, set())
+            if len(cur) != before:
+                changed = True
+    return may
+
+
+def build_graph(model: SourceModel) -> StaticLockGraph:
+    may = _fixed_point(model)
+    edges: dict[tuple[str, str], tuple[str, int]] = {}
+    sites: dict[tuple[str, int], str] = {}
+    kinds: dict[str, str] = {}
+    for cls in model.classes():
+        for attr, site in cls.locks.items():
+            lid = cls.lock_id(attr)
+            sites[(os.path.realpath(site.file), site.line)] = lid
+            kinds[lid] = site.kind
+        for _, fn in cls.methods.items():
+            _walk_method(model, cls, fn, may, edges)
+    return StaticLockGraph(
+        edges=set(edges), sites=sites, kinds=kinds, provenance=edges
+    )
+
+
+def static_lock_graph(src_root: str) -> StaticLockGraph:
+    """Build the graph straight from a source tree (the witness entry)."""
+    return build_graph(build_model(src_root))
+
+
+def _cycles(edges: set[tuple[str, str]]) -> list[list[str]]:
+    """Elementary cycles, via DFS over each node (graphs here are tiny)."""
+    adj: dict[str, list[str]] = {}
+    for a, b in sorted(edges):
+        adj.setdefault(a, []).append(b)
+    seen_cycles: set[tuple[str, ...]] = set()
+    out: list[list[str]] = []
+
+    def dfs(start: str, node: str, path: list[str]) -> None:
+        for nxt in adj.get(node, []):
+            if nxt == start:
+                cyc = path[:]
+                # canonicalize rotation so each cycle reports once
+                i = cyc.index(min(cyc))
+                canon = tuple(cyc[i:] + cyc[:i])
+                if canon not in seen_cycles:
+                    seen_cycles.add(canon)
+                    out.append(list(canon))
+            elif nxt not in path and nxt > start:
+                # only explore nodes > start: every cycle is found from its
+                # smallest node exactly once
+                dfs(start, nxt, path + [nxt])
+
+    for node in sorted(adj):
+        dfs(node, node, [node])
+    return out
+
+
+def check_lock_order(model: SourceModel) -> list[Finding]:
+    graph = build_graph(model)
+    findings: list[Finding] = []
+    for a, b in sorted(graph.edges):
+        if a == b and graph.kinds.get(a) == "lock":
+            file, line = graph.provenance[(a, b)]
+            findings.append(Finding(
+                check="lock-order-cycle",
+                file=file,
+                line=line,
+                symbol=a,
+                message=(
+                    f"re-acquisition of non-reentrant lock {a} while already "
+                    "held (certain self-deadlock)"
+                ),
+            ))
+    for cyc in _cycles({(a, b) for a, b in graph.edges if a != b}):
+        closing = (cyc[-1], cyc[0]) if len(cyc) > 1 else (cyc[0], cyc[0])
+        file, line = graph.provenance.get(
+            closing, graph.provenance.get((cyc[0], cyc[1] if len(cyc) > 1 else cyc[0]), ("?", 0))
+        )
+        findings.append(Finding(
+            check="lock-order-cycle",
+            file=file,
+            line=line,
+            symbol=" -> ".join(cyc),
+            message=(
+                "lock-order cycle (potential deadlock): "
+                + " -> ".join(cyc + [cyc[0]])
+            ),
+        ))
+    return findings

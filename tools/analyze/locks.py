@@ -1,0 +1,198 @@
+"""Check family 1 — lock discipline.
+
+Two checks over every class in the model:
+
+- ``unlocked-access``: a read/write of a ``# guarded-by: <lock>`` attribute
+  outside a ``with self.<lock>:`` block (suppress a deliberate racy read
+  with ``# unlocked-ok: <reason>``).  Constructors (``__init__`` /
+  ``__post_init__``) are exempt — the object is not shared yet.
+- ``blocking-under-lock``: a blocking call made while a ``threading.Lock``
+  / ``RLock`` is held — ``Future.result``, ``sleep``, ``os.pread``,
+  ``.acquire()``, executor ``shutdown``/``wait``/``join``, adapter
+  ``read_range`` (physical I/O), or acquiring a semaphore slot.  Holding a
+  hot-path mutex across any of those serializes every concurrent fetch on
+  one straggler.  Suppress with ``# blocking-ok: <reason>``.
+
+Plus ``bad-annotation`` for guard names that are not a lock attribute of
+the class (and not the reserved ``external``).
+
+Scope (by design): access checking is per owning class — cross-object
+reads of another instance's fields (e.g. a controller reading monotonic
+cache counters) are the owning class's documented contract, not lint.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from .model import EXTERNAL, ClassInfo, ModuleInfo, SourceModel
+from .report import Finding
+
+CONSTRUCTORS = ("__init__", "__post_init__", "__del__")
+
+#: method names whose call is assumed to block (on any receiver)
+BLOCKING_ATTR_CALLS = {
+    "result", "acquire", "wait", "shutdown", "join", "pread", "sleep",
+    "read_range",
+}
+BLOCKING_NAME_CALLS = {"sleep", "pread"}
+
+
+def _dotted(node: ast.AST) -> str:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+def _suppressed(line: int, lines: set[int]) -> bool:
+    return line in lines or (line - 1) in lines
+
+
+def _blocking_call(call: ast.Call) -> Optional[str]:
+    """Human name of the blocking operation, or None."""
+    fn = call.func
+    if isinstance(fn, ast.Name):
+        return fn.id if fn.id in BLOCKING_NAME_CALLS else None
+    if not isinstance(fn, ast.Attribute):
+        return None
+    if fn.attr not in BLOCKING_ATTR_CALLS:
+        return None
+    recv = _dotted(fn.value)
+    if fn.attr == "join" and (
+        isinstance(fn.value, ast.Constant) or recv in ("os.path", "posixpath")
+    ):
+        return None  # str.join / path join — not a blocking primitive
+    return f"{recv}.{fn.attr}" if recv else fn.attr
+
+
+def _with_lock_attrs(node: ast.With, cls: ClassInfo) -> list[str]:
+    """Lock attributes of ``cls`` acquired by this with-statement."""
+    out = []
+    for item in node.items:
+        e = item.context_expr
+        if (
+            isinstance(e, ast.Attribute)
+            and isinstance(e.value, ast.Name)
+            and e.value.id == "self"
+            and e.attr in cls.locks
+        ):
+            out.append(e.attr)
+    return out
+
+
+class _MethodWalker:
+    def __init__(self, cls: ClassInfo, mod: ModuleInfo, findings: list[Finding]):
+        self.cls = cls
+        self.mod = mod
+        self.findings = findings
+
+    def walk(self, node: ast.AST, held: frozenset) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            # a nested def/lambda runs later, on an unknown thread with no
+            # locks inherited — analyze its body with an empty held set
+            body = node.body if not isinstance(node, ast.Lambda) else [node.body]
+            for child in body:
+                self.walk(child, frozenset())
+            return
+        if isinstance(node, ast.With):
+            acquired = _with_lock_attrs(node, self.cls)
+            for item in node.items:
+                self.walk(item.context_expr, held)
+            for attr in acquired:
+                site = self.cls.locks[attr]
+                if site.kind == "semaphore" and self._exclusive_held(held):
+                    self._blocking(node.lineno, f"semaphore self.{attr} acquire",
+                                   held)
+            inner = held.union(acquired)
+            for child in node.body:
+                self.walk(child, inner)
+            return
+        if isinstance(node, ast.Attribute):
+            self._check_access(node, held)
+        elif isinstance(node, ast.Call):
+            op = _blocking_call(node)
+            if op is not None and self._exclusive_held(held):
+                self._blocking(node.lineno, f"{op}()", held)
+        for child in ast.iter_child_nodes(node):
+            self.walk(child, held)
+
+    # ---------------------------------------------------------------- bits
+    def _exclusive_held(self, held: frozenset) -> Optional[str]:
+        for attr in held:
+            if self.cls.locks[attr].is_exclusive:
+                return attr
+        return None
+
+    def _blocking(self, line: int, op: str, held: frozenset) -> None:
+        if _suppressed(line, self.mod.blocking_ok):
+            return
+        lock = self._exclusive_held(held)
+        self.findings.append(Finding(
+            check="blocking-under-lock",
+            file=self.mod.file,
+            line=line,
+            symbol=f"{self.cls.name}.{self._method}",
+            message=(
+                f"blocking call {op} while holding self.{lock} in "
+                f"{self.cls.name}.{self._method}"
+            ),
+        ))
+
+    def _check_access(self, node: ast.Attribute, held: frozenset) -> None:
+        if not (isinstance(node.value, ast.Name) and node.value.id == "self"):
+            return
+        entry = self.cls.guarded.get(node.attr)
+        if entry is None:
+            return
+        guard, _ = entry
+        if guard == EXTERNAL or guard in held:
+            return
+        if _suppressed(node.lineno, self.mod.unlocked_ok):
+            return
+        mode = "write" if isinstance(node.ctx, (ast.Store, ast.Del)) else "read"
+        self.findings.append(Finding(
+            check="unlocked-access",
+            file=self.mod.file,
+            line=node.lineno,
+            symbol=f"{self.cls.name}.{node.attr}",
+            message=(
+                f"{mode} of self.{node.attr} (guarded-by: {guard}) outside "
+                f"`with self.{guard}:` in {self.cls.name}.{self._method}"
+            ),
+        ))
+
+    def run(self, method: str, fn: ast.FunctionDef) -> None:
+        self._method = method
+        for child in fn.body:
+            self.walk(child, frozenset())
+
+
+def check_locks(model: SourceModel) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in model.modules.values():
+        for cls in mod.classes:
+            for attr, (guard, line) in sorted(cls.guarded.items()):
+                if guard != EXTERNAL and guard not in cls.locks:
+                    findings.append(Finding(
+                        check="bad-annotation",
+                        file=mod.file,
+                        line=line,
+                        symbol=f"{cls.name}.{attr}",
+                        message=(
+                            f"guarded-by: {guard} on {cls.name}.{attr} names "
+                            f"no Lock/RLock/Semaphore attribute of {cls.name} "
+                            f"(known: {sorted(cls.locks) or 'none'}; use "
+                            f"'external' for externally-serialized fields)"
+                        ),
+                    ))
+            if not cls.guarded and not cls.locks:
+                continue
+            walker = _MethodWalker(cls, mod, findings)
+            for mname, fn in cls.methods.items():
+                if mname in CONSTRUCTORS:
+                    continue
+                walker.run(mname, fn)
+    return findings

@@ -1,0 +1,333 @@
+"""The shared AST source model every check family walks.
+
+Parses a source tree once into :class:`SourceModel`: per-module ASTs, the
+``# guarded-by:`` / suppression comment maps, per-class lock-creation sites
+(``self.X = threading.Lock()``), guarded-attribute declarations, a light
+attribute-type table (``self.cache = BlockCache(...)`` => ``BlockCache``),
+and method tables with base-class links.
+
+Annotation grammar (documented in ``docs/analysis.md``):
+
+- ``# guarded-by: <lock>`` on the line that first assigns an attribute —
+  every later ``self.<attr>`` access in the owning class must sit inside
+  ``with self.<lock>:``.  ``<lock>`` must be a ``threading.Lock`` /
+  ``RLock`` / ``Semaphore`` attribute of the same class, or the reserved
+  word ``external`` (the field IS shared mutable state, but serialization
+  is external to the class — a caller-held lock, or a documented
+  single-writer protocol — so in-class access checking is off).
+- ``# unlocked-ok: <reason>`` on (or immediately above) an access line —
+  suppresses the unlocked-access check there (double-checked fast paths,
+  documented stale-tolerant reads).
+- ``# blocking-ok: <reason>`` — same, for the blocking-under-lock check.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Optional
+
+EXTERNAL = "external"  # reserved guard name: externally-serialized field
+
+GUARDED_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][A-Za-z0-9_]*)")
+UNLOCKED_OK_RE = re.compile(r"#\s*unlocked-ok:\s*\S")
+BLOCKING_OK_RE = re.compile(r"#\s*blocking-ok:\s*\S")
+
+#: threading factory name -> lock kind.  Conditions are excluded on purpose:
+#: a Condition wraps a lock the wait/notify protocol owns; modeling it as a
+#: plain mutex would mispredict the witness (wait() releases while blocked).
+LOCK_FACTORIES = {
+    "Lock": "lock",
+    "RLock": "rlock",
+    "Semaphore": "semaphore",
+    "BoundedSemaphore": "semaphore",
+}
+
+
+@dataclasses.dataclass
+class LockSite:
+    cls: str
+    attr: str
+    kind: str  # lock | rlock | semaphore
+    file: str  # path as given to parse_tree
+    line: int  # line of the threading.<Factory>() call
+
+    @property
+    def is_exclusive(self) -> bool:
+        return self.kind in ("lock", "rlock")
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    name: str
+    module: str  # dotted module path, e.g. "repro.data.backend"
+    file: str
+    line: int
+    bases: list[str]
+    node: ast.ClassDef
+    locks: dict[str, LockSite] = dataclasses.field(default_factory=dict)
+    #: attr -> (guard name, declaration line)
+    guarded: dict[str, tuple[str, int]] = dataclasses.field(default_factory=dict)
+    #: attr -> bare class name of the assigned value (best effort)
+    attr_types: dict[str, str] = dataclasses.field(default_factory=dict)
+    methods: dict[str, ast.FunctionDef] = dataclasses.field(default_factory=dict)
+
+    def lock_id(self, attr: str) -> str:
+        return f"{self.module}.{self.name}.{attr}"
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    file: str
+    module: str
+    tree: ast.Module
+    lines: list[str]
+    guard_comments: dict[int, str] = dataclasses.field(default_factory=dict)
+    unlocked_ok: set[int] = dataclasses.field(default_factory=set)
+    blocking_ok: set[int] = dataclasses.field(default_factory=set)
+    classes: list[ClassInfo] = dataclasses.field(default_factory=list)
+
+
+class SourceModel:
+    """All modules under one source root, cross-linked by class name."""
+
+    def __init__(self) -> None:
+        self.modules: dict[str, ModuleInfo] = {}  # file -> info
+        self._by_name: dict[str, list[ClassInfo]] = {}
+
+    # ------------------------------------------------------------- lookup
+    def classes(self) -> list[ClassInfo]:
+        return [c for m in self.modules.values() for c in m.classes]
+
+    def resolve_class(self, name: str) -> Optional[ClassInfo]:
+        """The unique class of that bare name, or None (unknown/ambiguous)."""
+        hits = self._by_name.get(name, [])
+        return hits[0] if len(hits) == 1 else None
+
+    def mro(self, cls: ClassInfo) -> list[ClassInfo]:
+        """cls plus its in-model ancestors, nearest first (linearized by
+        simple DFS — good enough for single-inheritance repo code)."""
+        out, seen, stack = [], set(), [cls]
+        while stack:
+            c = stack.pop(0)
+            if c.name in seen:
+                continue
+            seen.add(c.name)
+            out.append(c)
+            for b in c.bases:
+                bc = self.resolve_class(b)
+                if bc is not None:
+                    stack.append(bc)
+        return out
+
+    def subclasses(self, cls: ClassInfo) -> list[ClassInfo]:
+        out = []
+        for c in self.classes():
+            if c is cls:
+                continue
+            if any(m.name == cls.name for m in self.mro(c)):
+                out.append(c)
+        return out
+
+    def find_method(self, cls: ClassInfo, name: str) -> Optional[tuple[ClassInfo, ast.FunctionDef]]:
+        for c in self.mro(cls):
+            fn = c.methods.get(name)
+            if fn is not None:
+                return c, fn
+        return None
+
+    # ------------------------------------------------------------- build
+    def add_module(self, info: ModuleInfo) -> None:
+        self.modules[info.file] = info
+        for c in info.classes:
+            self._by_name.setdefault(c.name, []).append(c)
+
+
+def _comment_maps(lines: list[str]) -> tuple[dict[int, str], set[int], set[int]]:
+    guards: dict[int, str] = {}
+    unlocked: set[int] = set()
+    blocking: set[int] = set()
+    for i, text in enumerate(lines, start=1):
+        m = GUARDED_RE.search(text)
+        if m:
+            guards[i] = m.group(1)
+        if UNLOCKED_OK_RE.search(text):
+            unlocked.add(i)
+        if BLOCKING_OK_RE.search(text):
+            blocking.add(i)
+    return guards, unlocked, blocking
+
+
+def _lock_kind_of(value: ast.AST) -> Optional[str]:
+    """``threading.Lock()`` / bare ``Lock()`` call -> kind, else None."""
+    if not isinstance(value, ast.Call):
+        return None
+    fn = value.func
+    if isinstance(fn, ast.Attribute):
+        name = fn.attr
+    elif isinstance(fn, ast.Name):
+        name = fn.id
+    else:
+        return None
+    return LOCK_FACTORIES.get(name)
+
+
+def _value_class_names(value: ast.AST) -> list[str]:
+    """Bare names of classes plausibly constructed in ``value`` — the first
+    resolvable one becomes the attribute's inferred type.  Handles direct
+    calls, ``X(...) if cond else None``, ``arg or X(...)`` and plain
+    ``self.x = param`` (the caller resolves params via annotations)."""
+    out: list[str] = []
+    for node in ast.walk(value):
+        if isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Name):
+                out.append(fn.id)
+            elif isinstance(fn, ast.Attribute):
+                out.append(fn.attr)
+    return out
+
+
+def _annotation_class_name(ann: ast.AST) -> Optional[str]:
+    """Innermost plausible class name of an annotation: ``X`` -> X,
+    ``Optional[X]`` -> X, ``"X"`` -> X."""
+    if isinstance(ann, ast.Name):
+        return ann.id
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return ann.value.split("[")[-1].rstrip("]").split(".")[-1] or None
+    if isinstance(ann, ast.Subscript):
+        return _annotation_class_name(ann.slice)
+    if isinstance(ann, ast.Attribute):
+        return ann.attr
+    return None
+
+
+def _guard_for_stmt(stmt: ast.stmt, guards: dict[int, str]) -> Optional[tuple[str, int]]:
+    """guarded-by annotation on any line the statement spans."""
+    for ln in range(stmt.lineno, (stmt.end_lineno or stmt.lineno) + 1):
+        g = guards.get(ln)
+        if g is not None:
+            return g, stmt.lineno
+    return None
+
+
+def _scan_class(cls: ast.ClassDef, module: str, file: str,
+                guards: dict[int, str]) -> ClassInfo:
+    info = ClassInfo(
+        name=cls.name,
+        module=module,
+        file=file,
+        line=cls.lineno,
+        bases=[b.id if isinstance(b, ast.Name) else getattr(b, "attr", "")
+               for b in cls.bases],
+        node=cls,
+    )
+    # class-level fields (dataclass style): AnnAssign / Assign targets
+    for stmt in cls.body:
+        if isinstance(stmt, ast.FunctionDef):
+            info.methods[stmt.name] = stmt
+            continue
+        targets: list[str] = []
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+            targets = [stmt.target.id]
+        elif isinstance(stmt, ast.Assign):
+            targets = [t.id for t in stmt.targets if isinstance(t, ast.Name)]
+        if not targets:
+            continue
+        g = _guard_for_stmt(stmt, guards)
+        if g is not None:
+            for t in targets:
+                info.guarded[t] = g
+
+    # instance attributes: every `self.X = ...` anywhere in the class body
+    param_types: dict[str, dict[str, str]] = {}
+    for mname, fn in info.methods.items():
+        ptypes: dict[str, str] = {}
+        for arg in list(fn.args.args) + list(fn.args.kwonlyargs):
+            if arg.annotation is not None:
+                cn = _annotation_class_name(arg.annotation)
+                if cn:
+                    ptypes[arg.arg] = cn
+        param_types[mname] = ptypes
+
+    for mname, fn in info.methods.items():
+        for stmt in ast.walk(fn):
+            target: Optional[ast.Attribute] = None
+            value: Optional[ast.AST] = None
+            ann: Optional[ast.AST] = None
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 and \
+                    isinstance(stmt.targets[0], ast.Attribute):
+                target, value = stmt.targets[0], stmt.value
+            elif isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Attribute):
+                target, value, ann = stmt.target, stmt.value, stmt.annotation
+            if target is None or not (
+                isinstance(target.value, ast.Name) and target.value.id == "self"
+            ):
+                continue
+            attr = target.attr
+            kind = _lock_kind_of(value) if value is not None else None
+            if kind is not None and attr not in info.locks:
+                info.locks[attr] = LockSite(
+                    cls=cls.name, attr=attr, kind=kind, file=file,
+                    line=value.lineno,
+                )
+            g = _guard_for_stmt(stmt, guards)
+            if g is not None and attr not in info.guarded:
+                info.guarded[attr] = g
+            if attr not in info.attr_types:
+                cand: list[str] = []
+                if value is not None:
+                    cand.extend(_value_class_names(value))
+                    if isinstance(value, ast.Name):
+                        cand.append(param_types.get(mname, {}).get(value.id, ""))
+                    for sub in ast.walk(value):
+                        if isinstance(sub, ast.Name):
+                            pt = param_types.get(mname, {}).get(sub.id)
+                            if pt:
+                                cand.append(pt)
+                if ann is not None:
+                    cn = _annotation_class_name(ann)
+                    if cn:
+                        cand.append(cn)
+                for cn in cand:
+                    if cn:
+                        info.attr_types[attr] = cn
+                        break
+    return info
+
+
+def module_name_for(path: str, src_root: str) -> str:
+    rel = os.path.relpath(path, src_root)
+    return rel[:-3].replace(os.sep, ".") if rel.endswith(".py") else rel
+
+
+def parse_file(path: str, src_root: str) -> ModuleInfo:
+    with open(path) as f:
+        text = f.read()
+    lines = text.splitlines()
+    tree = ast.parse(text, filename=path)
+    guards, unlocked, blocking = _comment_maps(lines)
+    module = module_name_for(path, src_root)
+    info = ModuleInfo(
+        file=path, module=module, tree=tree, lines=lines,
+        guard_comments=guards, unlocked_ok=unlocked, blocking_ok=blocking,
+    )
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef):
+            info.classes.append(_scan_class(node, module, path, guards))
+    return info
+
+
+def build_model(src_root: str) -> SourceModel:
+    model = SourceModel()
+    for dirpath, dirnames, filenames in os.walk(src_root):
+        dirnames[:] = sorted(
+            d for d in dirnames
+            if d not in ("__pycache__", ".git", ".pytest_cache")
+        )
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                model.add_module(parse_file(os.path.join(dirpath, fn), src_root))
+    return model

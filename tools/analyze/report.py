@@ -1,0 +1,67 @@
+"""Findings and the zero-findings-forward baseline.
+
+A :class:`Finding` is one violation at one ``file:line``.  The baseline file
+(``tools/analyze/baseline.json``) holds findings that predate the gate and
+are *accepted* — entries match on ``(check, file, symbol)`` (NOT line, so
+unrelated edits above a baselined finding do not churn the file).  The gate
+fails on any finding not covered by the baseline, and warns on stale
+baseline entries so the file shrinks monotonically toward the empty list.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    check: str  # check id, e.g. "unlocked-access"
+    file: str  # path as analyzed (relative to the --src root's parent)
+    line: int
+    symbol: str  # "Class.attr" / "Class.method" / "module" — baseline key
+    message: str
+
+    def render(self) -> str:
+        return f"{self.file}:{self.line}: [{self.check}] {self.message}"
+
+    def key(self) -> tuple:
+        return (self.check, self.file, self.symbol)
+
+
+def load_baseline(path: Optional[str]) -> list[dict]:
+    if path is None or not os.path.exists(path):
+        return []
+    with open(path) as f:
+        entries = json.load(f)
+    if not isinstance(entries, list):
+        raise ValueError(f"baseline {path} must be a JSON list of findings")
+    return entries
+
+
+def apply_baseline(
+    findings: list[Finding], entries: list[dict]
+) -> tuple[list[Finding], list[dict]]:
+    """(unbaselined findings, stale baseline entries)."""
+    keys = {
+        (e.get("check"), e.get("file"), e.get("symbol")) for e in entries
+    }
+    fresh = [f for f in findings if f.key() not in keys]
+    found_keys = {f.key() for f in findings}
+    stale = [
+        e
+        for e in entries
+        if (e.get("check"), e.get("file"), e.get("symbol")) not in found_keys
+    ]
+    return fresh, stale
+
+
+def baseline_entry(f: Finding) -> dict:
+    """The JSON form to paste into baseline.json to accept ``f``."""
+    return {
+        "check": f.check,
+        "file": f.file,
+        "symbol": f.symbol,
+        "reason": "TODO: justify why this finding is accepted",
+    }

@@ -1,0 +1,173 @@
+"""Runtime lock-order witness — the dynamic cross-check of the static graph.
+
+:class:`LockOrderWitness` monkeypatches the ``threading`` lock factories so
+that locks created at the *exact source sites* the static analysis found
+(``StaticLockGraph.sites``: ``(realpath, lineno)`` of the
+``threading.Lock()`` call) come back wrapped in :class:`_WitnessLock`.
+Wrapped locks keep a thread-local held stack and record an edge
+``(held, acquired)`` on every successful acquisition.  Locks created
+anywhere else — stdlib internals, queue mutexes, locals the analyzer does
+not model — get the real factory object and are invisible.
+
+After a concurrency test runs under the witness, every observed edge must
+be a subset of the static graph's edges: an unpredicted edge means the
+static analysis failed to see an acquisition path (a resolution gap to fix
+or a genuinely dynamic order to document), which is precisely the blind
+spot a purely static deadlock check cannot self-diagnose.
+
+Usage (see ``tests/conftest.py``)::
+
+    graph = static_lock_graph("src")
+    witness = LockOrderWitness(graph)
+    with witness.installed():
+        ...  # run the concurrent workload
+    assert not witness.unpredicted()
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import sys
+import threading
+from typing import Iterator, Optional
+
+from .lockorder import StaticLockGraph, static_lock_graph  # noqa: F401
+
+_FACTORIES = ("Lock", "RLock", "Semaphore", "BoundedSemaphore")
+
+
+class _WitnessLock:
+    """A lock wrapper that reports acquisition order to its witness."""
+
+    __slots__ = ("_real", "_id", "_witness")
+
+    def __init__(self, real, lock_id: str, witness: "LockOrderWitness"):
+        self._real = real
+        self._id = lock_id
+        self._witness = witness
+
+    def acquire(self, blocking: bool = True, timeout: Optional[float] = None):
+        # Lock wants timeout=-1 for "forever", Semaphore wants None — pass
+        # the timeout through only when the caller gave one.
+        if timeout is None:
+            ok = self._real.acquire(blocking)
+        else:
+            ok = self._real.acquire(blocking, timeout)
+        if ok:
+            self._witness._on_acquire(self._id)
+        return ok
+
+    def release(self):
+        self._witness._on_release(self._id)
+        self._real.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def locked(self):
+        return self._real.locked()
+
+    def __getattr__(self, name):
+        return getattr(self._real, name)
+
+
+class LockOrderWitness:
+    """Records (held -> acquired) edges for statically-known lock sites."""
+
+    def __init__(self, graph: StaticLockGraph):
+        self.graph = graph
+        #: observed (holder id, acquired id) pairs
+        self.edges: set[tuple[str, str]] = set()
+        #: lock id -> times acquired (sanity: did the workload exercise it?)
+        self.acquires: dict[str, int] = {}
+        self._tl = threading.local()
+        self._elock = threading.Lock()  # guards edges/acquires dicts
+        self._saved: dict[str, object] = {}
+        self._real_cache: dict[str, str] = {}
+        self._installed = False
+
+    # ------------------------------------------------------------ recording
+    def _stack(self) -> list:
+        st = getattr(self._tl, "stack", None)
+        if st is None:
+            st = self._tl.stack = []
+        return st
+
+    def _on_acquire(self, lock_id: str) -> None:
+        st = self._stack()
+        with self._elock:
+            self.acquires[lock_id] = self.acquires.get(lock_id, 0) + 1
+            for held in st:
+                self.edges.add((held, lock_id))
+        st.append(lock_id)
+
+    def _on_release(self, lock_id: str) -> None:
+        st = self._stack()
+        # release order need not be LIFO; drop the most recent matching hold
+        for i in range(len(st) - 1, -1, -1):
+            if st[i] == lock_id:
+                del st[i]
+                break
+
+    # ---------------------------------------------------------- patching
+    def _site_of_caller(self) -> Optional[str]:
+        frame = sys._getframe(2)  # factory wrapper -> creating code
+        fname = frame.f_code.co_filename
+        real = self._real_cache.get(fname)
+        if real is None:
+            real = self._real_cache[fname] = os.path.realpath(fname)
+        return self.graph.sites.get((real, frame.f_lineno))
+
+    def _wrap_factory(self, real_factory):
+        witness = self
+
+        def factory(*args, **kwargs):
+            obj = real_factory(*args, **kwargs)
+            lock_id = witness._site_of_caller()
+            if lock_id is None:
+                return obj
+            return _WitnessLock(obj, lock_id, witness)
+
+        return factory
+
+    def install(self) -> None:
+        if self._installed:
+            return
+        for name in _FACTORIES:
+            self._saved[name] = getattr(threading, name)
+            setattr(threading, name, self._wrap_factory(self._saved[name]))
+        self._installed = True
+
+    def uninstall(self) -> None:
+        if not self._installed:
+            return
+        for name, real in self._saved.items():
+            setattr(threading, name, real)
+        self._saved.clear()
+        self._installed = False
+
+    @contextlib.contextmanager
+    def installed(self) -> Iterator["LockOrderWitness"]:
+        self.install()
+        try:
+            yield self
+        finally:
+            self.uninstall()
+
+    # ----------------------------------------------------------- verdict
+    def unpredicted(self) -> set[tuple[str, str]]:
+        """Observed acquisition orders the static graph did not predict."""
+        return self.edges - self.graph.edges
+
+    def report(self) -> str:
+        lines = [f"witness: {len(self.edges)} observed edge(s), "
+                 f"{sum(self.acquires.values())} acquisition(s)"]
+        for a, b in sorted(self.edges):
+            tag = "ok" if (a, b) in self.graph.edges else "UNPREDICTED"
+            lines.append(f"  {a} -> {b} [{tag}]")
+        return "\n".join(lines)

@@ -14,6 +14,11 @@ Three checks keep the docs honest against the code:
    ``repro.pipeline.DataSpec`` must appear as a ``| `field` |`` row in
    ``docs/pipeline.md`` (the spec-field reference is generated from the
    dataclass; adding a field without documenting it fails the build).
+4. **IOStats counter table** — every counter in the analyzer's registry
+   (``tools.analyze.contracts.iostats_counter_names``, i.e. the
+   ``PendingIO`` dataclass fields — the same list the iostats-pairing
+   contract check enforces) must appear as a ``| `counter` |`` row in
+   ``docs/architecture.md``.
 
 Exit code 0 = docs fresh; nonzero with a pointed message otherwise.
 """
@@ -25,9 +30,12 @@ import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, REPO)  # for tools.analyze (the counter registry)
 
 README = os.path.join(REPO, "README.md")
 PIPELINE_DOC = os.path.join(REPO, "docs", "pipeline.md")
+ARCH_DOC = os.path.join(REPO, "docs", "architecture.md")
+IOSTATS_SRC = os.path.join(REPO, "src", "repro", "data", "iostats.py")
 
 
 def check_scheme_table(readme_text: str) -> list[str]:
@@ -71,6 +79,20 @@ def spec_field_table() -> str:
             default = ""
         rows.append(f"| `{f.name}` | `{default}` | TODO |")
     return "\n".join(rows)
+
+
+def check_iostats_counters(arch_doc_text: str) -> list[str]:
+    """Every IOStats counter needs a ``| `counter` |`` row in
+    docs/architecture.md.  The counter list comes from the static
+    analyzer's registry (PendingIO's fields, read via AST — no import of
+    the analyzed module), so the docs table, the runtime counters and the
+    iostats-pairing contract check all share one source of truth."""
+    from tools.analyze.contracts import iostats_counter_names
+
+    counters = iostats_counter_names(IOSTATS_SRC)
+    if not counters:
+        return ["<no PendingIO counters found in src/repro/data/iostats.py>"]
+    return [c for c in counters if f"| `{c}`" not in arch_doc_text]
 
 
 def extract_quickstart(readme_text: str) -> str:
@@ -127,6 +149,20 @@ def main() -> int:
         )
         return 1
     print("OK: every DataSpec field documented in docs/pipeline.md")
+
+    if not os.path.exists(ARCH_DOC):
+        print("FAIL: docs/architecture.md (IOStats counter table) is missing")
+        return 1
+    with open(ARCH_DOC) as f:
+        missing_counters = check_iostats_counters(f.read())
+    if missing_counters:
+        print(
+            f"FAIL: IOStats counter(s) missing from docs/architecture.md's "
+            f"counter table: {missing_counters}\n"
+            "      add a | `counter` | row per PendingIO field"
+        )
+        return 1
+    print("OK: every IOStats counter documented in docs/architecture.md")
     return 0
 
 
