@@ -4,7 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows (shared ``emit`` helper) and a
 summary.  Individual benches: ``python -m benchmarks.bench_fig2_throughput``.
 Environment knobs: BENCH_N_CELLS (default 150000), BENCH_MEASURE_S (1.5),
 BENCH_SKIP (comma-list: fig2,fig3,fig4,fig5,table2,roofline,kernels,
-autotune,adaptive).
+autotune,adaptive,resilience).
 
 ``--smoke`` runs ONLY the fast CI gates on a tiny fixture:
 
@@ -25,7 +25,12 @@ autotune,adaptive).
    the ``cross-region`` cloud fixture, counter-modeled samples/sec): the
    adaptive configuration (TinyLFU admission + readahead="auto" +
    autotuned io_workers) must beat the BEST static (readahead,
-   io_workers, admission) cell by ``ADAPTIVE_FLOOR`` (1.3x).
+   io_workers, admission) cell by ``ADAPTIVE_FLOOR`` (1.3x);
+5. self-healing I/O -> ``BENCH_PR7.json`` (flaky cross-region store: ~5%
+   transient GET failures + a heavy latency tail, real scaled sleeps):
+   the no-retry control arm must FAIL the epoch, retries must hold
+   >= 0.7x fault-free wall-clock throughput, and hedged reads must cut
+   p95 per-fetch time below 0.9x retry-only's.
 """
 from __future__ import annotations
 
@@ -81,7 +86,19 @@ def smoke() -> int:
         f"({adaptive['best_static']}; floor {bench_adaptive.ADAPTIVE_FLOOR}x) "
         f"-> {'OK' if aok else 'FAIL'}"
     )
-    return 0 if (ok and cok and pok and aok) else 1
+    from benchmarks import bench_resilience
+
+    res = bench_resilience.run_resilience(write_json=True)
+    rok = res["pass"]
+    g = res["gates"]
+    print(
+        f"# smoke: resilience no_retry_failed={g['no_retry_failed']}, "
+        f"retry {g['retry_sps_ratio']:.2f}x fault-free "
+        f"(floor {g['retry_floor']}x), hedged p95 "
+        f"{g['hedge_p95_ratio']:.2f}x retry-only "
+        f"(ceil {g['hedge_p95_fraction']}x) -> {'OK' if rok else 'FAIL'}"
+    )
+    return 0 if (ok and cok and pok and aok and rok) else 1
 
 
 def main() -> None:
@@ -127,6 +144,10 @@ def main() -> None:
         from benchmarks import bench_adaptive
 
         bench_adaptive.run()
+    if "resilience" not in skip:
+        from benchmarks import bench_resilience
+
+        bench_resilience.run()
 
     print(f"# total bench time: {time.time()-t_all:.0f}s")
 

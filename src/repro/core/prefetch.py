@@ -63,6 +63,7 @@ class PrefetchPool:
         straggler_factor: float = 3.0,
         straggler_min_latency: float = 0.05,
         enable_speculation: bool = True,
+        heartbeat=None,
     ):
         if num_workers < 1:
             raise ValueError("num_workers must be >= 1")
@@ -72,11 +73,20 @@ class PrefetchPool:
         self.straggler_factor = straggler_factor
         self.straggler_min_latency = straggler_min_latency
         self.enable_speculation = enable_speculation
+        # Liveness monitor (duck-typed `.beat(name)` / `.suspects()`, e.g.
+        # repro.distributed.fault.HeartbeatMonitor).  Workers beat once per
+        # claim and once per completed fetch; a worker whose beat goes stale
+        # (stuck mid-read past the monitor's timeout) gets its claimed fetch
+        # re-issued through the straggler path WITHOUT waiting for the
+        # latency-median deadline — liveness catches hangs the latency
+        # statistics cannot see (e.g. the very first fetch of an epoch).
+        self.heartbeat = heartbeat
         # Mutated by workers under __iter__'s per-iteration condition lock
         # (a local the analyzer cannot name); read between iterations only.
         self.stats = {  # guarded-by: external
             "fetches": 0,
             "speculative_reissues": 0,
+            "heartbeat_reissues": 0,
             "duplicate_completions": 0,
             "worker_fetches": collections.Counter(),
         }
@@ -92,15 +102,25 @@ class PrefetchPool:
         cond = threading.Condition(lock)
         results: dict[int, _FetchResult] = {}
         claimed_at: dict[int, float] = {}
+        claimed_by: dict[int, int] = {}
         inflight: collections.Counter = collections.Counter()
         latencies: collections.deque = collections.deque(maxlen=32)
         done_flag = threading.Event()
         next_to_yield = start_cursor
         errors: list[BaseException] = []
 
-        def claim() -> Optional[int]:
-            with cond:
-                while True:
+        def claim(wid: int) -> Optional[int]:
+            while True:
+                # snapshot the suspect set OUTSIDE cond: the monitor takes
+                # its own lock, and nesting it under the pool's condition
+                # would add a lock edge the static graph cannot trace
+                # through a duck-typed attribute
+                sus = (
+                    set(self.heartbeat.suspects())
+                    if self.heartbeat is not None
+                    else ()
+                )
+                with cond:
                     if done_flag.is_set() or errors:
                         return None
                     # primary work
@@ -113,18 +133,38 @@ class PrefetchPool:
                             pending.appendleft(cur)
                             break
                         claimed_at[cur] = time.monotonic()
+                        claimed_by[cur] = wid
                         inflight[cur] += 1
                         return cur
-                    # speculation on stragglers
-                    if self.enable_speculation and latencies:
-                        med = sorted(latencies)[len(latencies) // 2]
-                        deadline = max(self.straggler_min_latency, med * self.straggler_factor)
+                    # speculation: latency stragglers AND hung (heartbeat-
+                    # suspect) claim holders — the latter re-issue without
+                    # waiting for a latency median to exist
+                    if self.enable_speculation and (latencies or sus):
+                        med = (
+                            sorted(latencies)[len(latencies) // 2]
+                            if latencies
+                            else 0.0
+                        )
+                        deadline = max(
+                            self.straggler_min_latency,
+                            med * self.straggler_factor,
+                        )
                         now = time.monotonic()
                         for cur, t0 in list(claimed_at.items()):
-                            if cur not in results and inflight[cur] == 1 and now - t0 > deadline:
+                            if cur in results or inflight[cur] != 1:
+                                continue
+                            hung = f"w{claimed_by.get(cur)}" in sus
+                            late = bool(latencies) and now - t0 > deadline
+                            if hung or late:
                                 claimed_at[cur] = now
+                                claimed_by[cur] = wid
                                 inflight[cur] += 1
-                                self.stats["speculative_reissues"] += 1
+                                key = (
+                                    "heartbeat_reissues"
+                                    if hung
+                                    else "speculative_reissues"
+                                )
+                                self.stats[key] += 1
                                 return cur
                     if not claimed_at and not pending:
                         return None
@@ -137,10 +177,13 @@ class PrefetchPool:
         can_defer = iostats is not None and hasattr(iostats, "deferred")
 
         def worker(wid: int):
+            hb = self.heartbeat
             while True:
-                cur = claim()
+                cur = claim(wid)
                 if cur is None:
                     return
+                if hb is not None:
+                    hb.beat(f"w{wid}")  # alive at claim time
                 t0 = time.monotonic()
                 pend = None
                 try:
@@ -155,6 +198,8 @@ class PrefetchPool:
                         cond.notify_all()
                     return
                 dt = time.monotonic() - t0
+                if hb is not None:
+                    hb.beat(f"w{wid}")  # survived the fetch
                 with cond:
                     inflight[cur] -= 1
                     duplicate = cur in results

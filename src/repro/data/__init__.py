@@ -20,6 +20,10 @@ Registered URI schemes (see the README's scheme table):
 ``cloud://<inner-uri>``   any of the above behind object-store request
                           semantics (first-byte latency, bandwidth,
                           ``max_inflight``) — :mod:`repro.data.cloud`
+``fault://<inner-uri>``   any of the above behind seeded, deterministic
+                          fault injection (transient errors, latency
+                          spikes, shard blackouts, stuck reads) —
+                          :mod:`repro.data.faults`
 ========================  ===================================================
 
 **Writing a new storage adapter** — the full authoring guide, with the
@@ -49,6 +53,14 @@ from .backend import (
 from .chunked_store import ChunkedStore, write_chunked_store
 from .cloud import CLOUD_PROFILES, CloudAdapter, CloudProfile
 from .csr_store import CSRBatch, CSRStore, ShardedCSRStore, write_csr_shard
+from .faults import (
+    FaultInjectingAdapter,
+    FaultProfile,
+    RetryBudgetExhausted,
+    RetryPolicy,
+    ShardBreaker,
+    TransientStorageError,
+)
 from .h5ad import H5adAdapter, H5adStore, ShardedH5adAdapter
 from .iostats import CLOUD_OBJECT, NVME_SSD, SATA_SSD, IOStats, PendingIO, StorageModel
 from .readplan import BlockCache, StreamDetector, coalesce_rows, plan_reads
@@ -80,6 +92,12 @@ __all__ = [
     "CloudProfile",
     "CloudAdapter",
     "CLOUD_PROFILES",
+    "FaultProfile",
+    "FaultInjectingAdapter",
+    "TransientStorageError",
+    "RetryBudgetExhausted",
+    "RetryPolicy",
+    "ShardBreaker",
     "IOStats",
     "PendingIO",
     "StorageModel",

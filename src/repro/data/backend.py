@@ -23,6 +23,7 @@ benchmarks come for free.  See :mod:`repro.data` for the written contract.
 """
 from __future__ import annotations
 
+import concurrent.futures as _cf
 import json
 import os
 import threading
@@ -414,6 +415,32 @@ class PlannedCollection:
       the LRU victim to displace it, which keeps hot blocks resident across
       weighted / class-balanced redraws instead of thrashing.
 
+    **Resilience** (all off by default — the failure-free path is byte for
+    byte the legacy behavior):
+
+    - ``retries > 0`` — every physical read runs under a
+      :class:`~repro.data.faults.RetryPolicy`: transient failures
+      (``OSError``/``TimeoutError``, incl. injected
+      :class:`~repro.data.faults.TransientStorageError`) are retried with
+      exponential backoff + decorrelated jitter, bounded by the attempt
+      budget and the optional per-read ``retry_deadline_s``; exhaustion
+      raises a terminal :class:`~repro.data.faults.RetryBudgetExhausted`.
+      Failed rendezvous futures are deregistered BEFORE they are poisoned,
+      and a waiter that observes a poisoned future re-issues the block
+      idempotently through the rendezvous table — delivered batches under
+      faults stay bitwise identical to the fault-free run.
+    - ``hedge_factor > 0`` (needs ``io_workers > 1``) — a miss read that
+      overruns ``max(hedge_min_s, hedge_factor * wait_EWMA)`` gets a
+      duplicate read submitted; first success wins, the loser is discarded
+      (``hedges_issued`` / ``hedges_won`` count the duplicates — their
+      physical work is deliberately NOT folded into runs/bytes, which
+      describe delivered reads).
+    - ``breaker_threshold > 0`` — consecutive failures of one shard open a
+      :class:`~repro.data.faults.ShardBreaker`; while open, background
+      prefetch skips the shard entirely and demand fetches probe it with a
+      capped retry budget until a half-open probe closes it
+      (``breaker_opens`` / ``breaker_closes`` in IOStats).
+
     Thread-safe: the BlockCache and the rendezvous table lock their own
     bookkeeping; reads and batch assembly run unlocked so PrefetchPool
     workers overlap I/O and CPU.  In async mode concurrent fetches of the
@@ -434,11 +461,23 @@ class PlannedCollection:
         io_workers: int = 1,
         readahead=0,
         admission: str = "always",
+        retries: int = 0,
+        retry_backoff_s: float = 0.005,
+        retry_max_backoff_s: float = 0.25,
+        retry_deadline_s: float = 0.0,
+        hedge_factor: float = 0.0,
+        hedge_min_s: float = 0.05,
+        breaker_threshold: int = 0,
+        breaker_cooldown_s: float = 1.0,
     ):
         if block_rows <= 0:
             raise ValueError("block_rows must be positive")
         if io_workers < 1:
             raise ValueError("io_workers must be >= 1")
+        if retries < 0 or hedge_factor < 0 or breaker_threshold < 0:
+            raise ValueError("resilience knobs must be non-negative")
+        if hedge_min_s <= 0:
+            raise ValueError("hedge_min_s must be positive")
         readahead = normalize_readahead(readahead)
         ra_auto = readahead == "auto"
         if admission not in ("always", "auto", "never"):
@@ -481,6 +520,31 @@ class PlannedCollection:
         # under a bypassing admission policy they are dropped after use
         self._pf_marks: set[int] = set()  # guarded-by: _fl
         self._fl = threading.Lock()
+        # resilience: policy objects are frozen/internally-locked, set once
+        self._retry = None  # guarded-by: external — frozen RetryPolicy
+        if retries > 0:
+            from .faults import RetryPolicy  # lazy: faults imports backend
+
+            self._retry = RetryPolicy(
+                retries=int(retries),
+                backoff_s=float(retry_backoff_s),
+                max_backoff_s=float(retry_max_backoff_s),
+                deadline_s=float(retry_deadline_s),
+            )
+        self._breaker = None  # guarded-by: external — set once, locks itself
+        if breaker_threshold > 0:
+            from .faults import ShardBreaker  # lazy: faults imports backend
+
+            self._breaker = ShardBreaker(
+                int(breaker_threshold), float(breaker_cooldown_s)
+            )
+        self.hedge_factor = float(hedge_factor)
+        self.hedge_min_s = float(hedge_min_s)
+        # per-physical-read seconds, smoothed: drives the hedge deadline and
+        # the readahead controller's storage-tier signal.  A single float
+        # store/load — the benign read-modify-write race only blurs the
+        # smoothing, never corrupts scheduling.
+        self._wait_ewma = 0.0  # guarded-by: external — benign-race EWMA
 
     @property
     def readahead(self) -> int:
@@ -595,13 +659,191 @@ class PlannedCollection:
         return self.fetch(rows)
 
     # ---------------------------------------------------- read primitives
+    def _shard_of(self, row: int) -> int:
+        """Physical shard (boundary interval) containing ``row`` — the unit
+        of circuit breaking.  Boundary-free adapters are one shard 0."""
+        edges = self._boundaries
+        if edges is None or len(edges) <= 2:
+            return 0
+        return int(np.searchsorted(edges, row, side="right") - 1)
+
     def _read_one(self, lo: int, hi: int) -> tuple[Any, int]:
-        """ONE physical read + its per-read simulated latency, slept in the
-        reading thread so concurrent reads overlap it like real storage."""
-        piece = self.adapter.read_range(lo, hi)
+        """ONE logical read (retried under the policy, if any) + its per-read
+        simulated latency, slept in the reading thread so concurrent reads
+        overlap it like real storage.  Also feeds the wait EWMA — backoff
+        sleeps inflate it, which conservatively widens the hedge deadline
+        while storage is misbehaving."""
+        t0 = time.perf_counter()
+        piece = self._resilient_read(lo, hi)
         nb = piece_nbytes(piece)
         self.iostats.sleep_for(runs=1, bytes_read=nb)
+        dt = time.perf_counter() - t0
+        prev = self._wait_ewma
+        self._wait_ewma = dt if prev == 0.0 else 0.8 * prev + 0.2 * dt
         return piece, nb
+
+    def _resilient_read(self, lo: int, hi: int) -> Any:
+        """One logical contiguous read: bounded retries with decorrelated-
+        jitter backoff and an optional per-read deadline, feeding the
+        per-shard circuit breaker.  With nothing configured this is a bare
+        ``adapter.read_range`` — the legacy path, byte for byte."""
+        retry, breaker = self._retry, self._breaker
+        if retry is None and breaker is None:
+            return self.adapter.read_range(lo, hi)
+        from .faults import RetryBudgetExhausted, is_transient  # lazy: cycle
+
+        shard = self._shard_of(lo)
+        budget = retry.retries if retry is not None else 0
+        if breaker is not None and breaker.admit(shard) == "open":
+            # breaker open and not our turn to probe: demand reads still go
+            # through (delivery must survive), but with a capped budget —
+            # the blackout is outlived by backoff, not by hammering a shard
+            # known to be dark
+            budget = min(budget, 1)
+        deadline = (
+            time.monotonic() + retry.deadline_s
+            if retry is not None and retry.deadline_s > 0
+            else None
+        )
+        attempt, prev_delay = 0, 0.0
+        while True:
+            try:
+                piece = self.adapter.read_range(lo, hi)
+            except BaseException as e:
+                # breaker transitions are recorded by THIS caller, outside
+                # the breaker's lock (no breaker->stats lock edge)
+                if breaker is not None and breaker.record_failure(shard):
+                    self.iostats.record_resilience(breaker_opens=1)
+                if retry is None or not is_transient(e):
+                    raise
+                if attempt >= budget:
+                    raise RetryBudgetExhausted(
+                        f"read [{lo}, {hi}) failed after {attempt + 1} "
+                        f"attempts (budget {budget})"
+                    ) from e
+                delay = retry.backoff(lo, hi, attempt, prev_delay)
+                if deadline is not None:
+                    left = deadline - time.monotonic()
+                    if left <= 0.0:
+                        raise RetryBudgetExhausted(
+                            f"read [{lo}, {hi}) deadline "
+                            f"({retry.deadline_s:.3f}s) exhausted after "
+                            f"{attempt + 1} attempts"
+                        ) from e
+                    delay = min(delay, left)
+                time.sleep(delay)
+                self.iostats.record_resilience(retries=1, retry_wait_s=delay)
+                prev_delay = delay
+                attempt += 1
+                continue
+            if breaker is not None and breaker.record_success(shard):
+                self.iostats.record_resilience(breaker_closes=1)
+            return piece
+
+    def _gather_hedged(
+        self,
+        read_futs: list,
+        spans,
+        pool: ThreadPoolExecutor,
+        pend,
+    ) -> list:
+        """Gather a fetch's concurrent miss reads with tail hedging.
+
+        Each primary gets ``max(hedge_min_s, hedge_factor * wait_EWMA)``
+        from fetch issue time; one that overruns it races a duplicate read,
+        first SUCCESS wins and the loser is discarded.  Both sides execute
+        the identical ``_read_one`` over the identical span, so which one
+        wins can never change delivered bytes — only ``hedges_won``."""
+        t_issue = time.perf_counter()
+        out = []
+        for fut, (lo, hi) in zip(read_futs, spans):
+            ewma = self._wait_ewma
+            tail = max(self.hedge_min_s, self.hedge_factor * ewma)
+            left = t_issue + tail - time.perf_counter()
+            try:
+                out.append(fut.result(timeout=max(0.0, left)))
+                continue
+            except _cf.TimeoutError:  # py3.10: NOT the builtin TimeoutError
+                pass
+            hedge = pool.submit(self._read_one_for, lo, hi, pend)
+            self.iostats.record_resilience(hedges_issued=1)
+            val, hedge_won = self._first_success(fut, hedge)
+            if hedge_won:
+                self.iostats.record_resilience(hedges_won=1)
+            out.append(val)
+        return out
+
+    @staticmethod
+    def _first_success(primary: Future, hedge: Future) -> tuple[Any, bool]:
+        """Race a late primary against its hedge; first SUCCESS wins (a
+        failed racer defers to the other, both failing re-raises the last
+        failure).  Ties prefer the primary.  Returns (result, hedge_won)."""
+        waiting = {primary, hedge}
+        last_exc: Optional[BaseException] = None
+        while waiting:
+            done, waiting = _cf.wait(waiting, return_when=_cf.FIRST_COMPLETED)
+            if primary in done:
+                exc = primary.exception()
+                if exc is None:
+                    return primary.result(), False
+                last_exc = exc
+            if hedge in done:
+                exc = hedge.exception()
+                if exc is None:
+                    return hedge.result(), True
+                last_exc = exc
+        assert last_exc is not None
+        raise last_exc
+
+    def _reissue_block(self, b: int) -> tuple[Any, int, int, str]:
+        """Idempotent recovery of ONE block whose rendezvous producer
+        failed.  Re-checks the cache, joins any newer in-flight read, else
+        claims the block in the rendezvous table and reads it synchronously
+        (retries included, so other waiters of the failed future converge on
+        this one recovery read).  Returns ``(value, physical_runs,
+        bytes_read, outcome)`` for the calling fetch's accounting; outcome
+        ``"served"`` means no new physical read was issued here.  A second
+        failure propagates — recovery gets one round, the retry budget
+        lives inside the read itself."""
+        with self._fl:
+            val = self.cache.peek(b)
+            if val is not None:
+                return val, 0, 0, "served"
+            other = self._inflight.get(b)
+            if other is None:
+                f: Future = Future()
+                self._inflight[b] = f
+        if other is not None:
+            # someone else is already recovering it; their terminal failure
+            # (RetryBudgetExhausted is not transient) is terminal for us too
+            return other.result(), 0, 0, "served"
+        try:
+            spans = self._spans_for_blocks(np.asarray([b]))
+            results = [self._read_one(lo, hi) for lo, hi in spans]
+            pieces = [p for p, _ in results]
+            nb = sum(x for _, x in results)
+            pending: dict[int, list] = {b: []}
+            self._slice_spans_into_blocks(
+                self.adapter, self.block_rows, spans, pieces, pending
+            )
+            plist = pending[b]
+            val = plist[0] if len(plist) == 1 else self.adapter.concat(plist)
+            with self._fl:
+                streaming = self._stream.streaming
+            outcome = self._cache_put(b, val, last_block=b, streaming=streaming)
+            f.set_result(val)
+            with self._fl:
+                if self._inflight.get(b) is f:
+                    del self._inflight[b]
+            return val, len(spans), nb, outcome
+        except BaseException as e:
+            # deregister BEFORE poisoning, same publish discipline as the
+            # fetch/prefetch producers
+            with self._fl:
+                if self._inflight.get(b) is f:
+                    del self._inflight[b]
+            f.set_exception(e)
+            raise
 
     def _read_one_for(self, lo: int, hi: int, pend) -> tuple[Any, int]:
         """Pool-thread read on behalf of a (possibly deferred) consumer:
@@ -689,6 +931,7 @@ class PlannedCollection:
                         len(blocks) * B * self._avg_row_bytes,
                         len(blocks),
                         len(self._inflight),
+                        wait_s=self._wait_ewma,
                     )
         if self._sketch is not None:
             # one popularity touch per block per fetch — the frequency
@@ -759,10 +1002,17 @@ class PlannedCollection:
         spans: list[tuple[int, int]] = []
         read_futs = None
         pieces: list[Any] = []
+        pool: Optional[ThreadPoolExecutor] = None
+        pend = None
         if missing:
             spans = self._spans_for_blocks(np.asarray(missing))
             pool = self._pool()
-            if pool is not None and self.io_workers > 1 and len(spans) > 1:
+            # a single span normally reads inline (no pool round-trip), but
+            # hedging needs a future to race — a lone tail GET is exactly
+            # the straggler a hedge exists to duplicate
+            if pool is not None and self.io_workers > 1 and (
+                len(spans) > 1 or self.hedge_factor > 0.0
+            ):
                 pend = self.iostats.current_pending()
                 read_futs = [
                     pool.submit(self._read_one_for, lo, hi, pend)
@@ -788,7 +1038,10 @@ class PlannedCollection:
         if missing:
             try:
                 if read_futs is not None:
-                    results = [f.result() for f in read_futs]
+                    if self.hedge_factor > 0.0 and pool is not None:
+                        results = self._gather_hedged(read_futs, spans, pool, pend)
+                    else:
+                        results = [f.result() for f in read_futs]
                 else:
                     results = [self._read_one(lo, hi) for lo, hi in spans]
                 pieces = [p for p, _ in results]
@@ -807,22 +1060,52 @@ class PlannedCollection:
                     f = claimed.get(bb)
                     if f is not None:
                         f.set_result(val)
-            except BaseException as e:
-                for f in claimed.values():
-                    if not f.done():
-                        f.set_exception(e)
-                raise
-            finally:
                 if claimed:
                     with self._fl:
                         for bb, f in claimed.items():
                             if self._inflight.get(bb) is f:
                                 del self._inflight[bb]
+            except BaseException as e:
+                # deregister BEFORE poisoning the futures: a waiter arriving
+                # after this block observes an empty rendezvous slot and
+                # issues its own read, instead of latching onto a future
+                # that is about to fail (the failure-poisoning bug).  One
+                # already holding the future sees the exception and recovers
+                # through _reissue_block.
+                if claimed:
+                    with self._fl:
+                        for bb, f in claimed.items():
+                            if self._inflight.get(bb) is f:
+                                del self._inflight[bb]
+                for f in claimed.values():
+                    if not f.done():
+                        f.set_exception(e)
+                raise
 
         # ---- rendezvous with reads other threads own ---------------------
+        reissue_runs = 0
         for b, fut in waits.items():
-            local[b] = fut.result()  # re-raises the producer's failure
-            pf_blocks.append(b)
+            try:
+                local[b] = fut.result()  # raises the producer's failure
+                pf_blocks.append(b)
+            except BaseException:
+                if self._retry is None:
+                    raise  # no retry budget: the producer's failure is ours
+                # the producer failed but retries remain: re-issue the block
+                # idempotently instead of re-raising a failure this fetch
+                # never attempted itself
+                val, runs2, nb2, outcome = self._reissue_block(b)
+                local[b] = val
+                if outcome == "served":
+                    hits += 1  # another recoverer delivered it to us
+                else:
+                    missing.append(b)  # a miss this fetch served itself
+                    reissue_runs += runs2
+                    bytes_read += nb2
+                    if outcome == "bypassed":
+                        adm_bypassed += 1
+                    elif outcome == "rejected":
+                        adm_rejected += 1
         if waits:
             with self._fl:
                 for b in waits:
@@ -849,7 +1132,7 @@ class PlannedCollection:
             merged = self.adapter.take(merged, inv)
 
         self.iostats.record(
-            runs=len(spans),
+            runs=len(spans) + reissue_runs,
             rows=len(rows),
             bytes_read=bytes_read,
             wall_s=time.perf_counter() - t0,
@@ -880,11 +1163,23 @@ class PlannedCollection:
         rows = np.asarray(rows, dtype=np.int64)
         if rows.size == 0:
             return 0
-        blocks = np.unique(rows // self.block_rows)
+        block_list = np.unique(rows // self.block_rows).tolist()
+        if self._breaker is not None:
+            # graceful degradation: BACKGROUND staging skips shards whose
+            # breaker is open (speculative reads of a dark shard only feed
+            # its failure count); demand fetches still probe them with a
+            # capped budget, so delivery survives.  A block is keyed by its
+            # first row's shard — one straddling a boundary follows the
+            # shard it starts in.
+            block_list = [
+                b
+                for b in block_list
+                if not self._breaker.is_open(self._shard_of(b * self.block_rows))
+            ]
         todo: list[int] = []
         futs: dict[int, Future] = {}
         with self._fl:
-            for b in blocks.tolist():
+            for b in block_list:
                 if b in self._inflight or self.cache.peek(b) is not None:
                     continue
                 f: Future = Future()
@@ -993,6 +1288,29 @@ class PlannedCollection:
                 "ops": self._sketch.ops,
                 "ages": self._sketch.ages,
             }
+        if (
+            self._retry is not None
+            or self._breaker is not None
+            or self.hedge_factor > 0.0
+        ):
+            res: dict = {
+                "wait_ewma_s": self._wait_ewma,
+                "hedge_factor": self.hedge_factor,
+                "hedge_min_s": self.hedge_min_s,
+            }
+            if self._retry is not None:
+                res["retry"] = {
+                    "retries": self._retry.retries,
+                    "backoff_s": self._retry.backoff_s,
+                    "max_backoff_s": self._retry.max_backoff_s,
+                    "deadline_s": self._retry.deadline_s,
+                }
+            if self._breaker is not None:
+                res["breaker"] = self._breaker.snapshot()
+            out["resilience"] = res
+        snap = getattr(self.adapter, "fault_snapshot", None)
+        if snap is not None:
+            out["faults"] = snap()
         return out
 
 
@@ -1117,6 +1435,14 @@ def open_collection(
     io_workers=_UNSET,
     readahead=_UNSET,
     admission=_UNSET,
+    retries=_UNSET,
+    retry_backoff_s=_UNSET,
+    retry_max_backoff_s=_UNSET,
+    retry_deadline_s=_UNSET,
+    hedge_factor=_UNSET,
+    hedge_min_s=_UNSET,
+    breaker_threshold=_UNSET,
+    breaker_cooldown_s=_UNSET,
     **opts,
 ) -> PlannedCollection:
     """Open any registered storage format behind the unified planned layer.
@@ -1135,7 +1461,12 @@ def open_collection(
     ``admission`` (``always`` | ``auto`` | ``never``; ``auto`` detects
     forward-streaming epochs and bypasses LRU insertion for them, and
     switches to TinyLFU frequency admission when the sampled working set
-    exceeds ``cache_bytes``).  The knobs may also ride in
+    exceeds ``cache_bytes``).  Resilience knobs (all off by default; see the
+    :class:`PlannedCollection` docstring): ``retries`` + ``retry_backoff_s``
+    / ``retry_max_backoff_s`` / ``retry_deadline_s`` (bounded retries with
+    decorrelated-jitter backoff), ``hedge_factor`` / ``hedge_min_s`` (tail
+    hedging of miss reads), ``breaker_threshold`` / ``breaker_cooldown_s``
+    (per-shard circuit breaking).  The knobs may also ride in
     the query string (``?cache_bytes=0&io_workers=4&admission=auto``); an
     explicit keyword argument wins over the query.  Unknown query keys reach
     the opener, which rejects what it does not understand — nothing is
@@ -1163,6 +1494,18 @@ def open_collection(
     # one shared grammar for the adaptive spelling: int >= 0 or "auto"
     readahead = knob(readahead, "readahead", 0, cast=normalize_readahead)
     admission = knob(admission, "admission", "always", cast=str)
+    retries = knob(retries, "retries", 0)
+    retry_backoff_s = knob(retry_backoff_s, "retry_backoff_s", 0.005, cast=float)
+    retry_max_backoff_s = knob(
+        retry_max_backoff_s, "retry_max_backoff_s", 0.25, cast=float
+    )
+    retry_deadline_s = knob(retry_deadline_s, "retry_deadline_s", 0.0, cast=float)
+    hedge_factor = knob(hedge_factor, "hedge_factor", 0.0, cast=float)
+    hedge_min_s = knob(hedge_min_s, "hedge_min_s", 0.05, cast=float)
+    breaker_threshold = knob(breaker_threshold, "breaker_threshold", 0)
+    breaker_cooldown_s = knob(
+        breaker_cooldown_s, "breaker_cooldown_s", 1.0, cast=float
+    )
     adapter = _REGISTRY[scheme](rest, **opts)
     return PlannedCollection(
         adapter,
@@ -1173,4 +1516,12 @@ def open_collection(
         io_workers=int(io_workers),
         readahead=readahead,
         admission=str(admission),
+        retries=int(retries),
+        retry_backoff_s=float(retry_backoff_s),
+        retry_max_backoff_s=float(retry_max_backoff_s),
+        retry_deadline_s=float(retry_deadline_s),
+        hedge_factor=float(hedge_factor),
+        hedge_min_s=float(hedge_min_s),
+        breaker_threshold=int(breaker_threshold),
+        breaker_cooldown_s=float(breaker_cooldown_s),
     )

@@ -48,6 +48,13 @@ class CloudProfile:
     ``max_inflight`` — concurrent-request cap (client connection pool /
     service throttle); ``scale`` — multiplier on the slept latency (keep
     ratios, shrink wall-clock for tests and CI).
+
+    ``tail_p`` > 0 adds a **heavy tail**: that fraction of GETs (drawn
+    deterministically from ``tail_seed`` and the GET's ordinal, so a run's
+    tail events replay exactly) take ``tail_mult`` times the modeled
+    duration — the p99-GET pathology hedged reads exist for.  The draw is
+    per-ordinal, not per-range, so which request eats the spike depends only
+    on issue order, never on the data.
     """
 
     name: str
@@ -55,10 +62,20 @@ class CloudProfile:
     bw_Bps: float
     max_inflight: int = 64
     scale: float = 1.0
+    tail_p: float = 0.0
+    tail_mult: float = 4.0
+    tail_seed: int = 0
 
-    def request_seconds(self, nbytes: int) -> float:
-        """Modeled duration of ONE GET of ``nbytes`` (unscaled)."""
-        return self.first_byte_s + nbytes / self.bw_Bps
+    def request_seconds(self, nbytes: int, seq: Optional[int] = None) -> float:
+        """Modeled duration of ONE GET of ``nbytes`` (unscaled).  ``seq`` is
+        the GET's ordinal, used for the deterministic tail draw."""
+        base = self.first_byte_s + nbytes / self.bw_Bps
+        if seq is not None and self.tail_p > 0.0:
+            from .faults import mix_u01  # lazy: faults imports backend
+
+            if mix_u01(self.tail_seed, 5, seq) < self.tail_p:
+                base *= self.tail_mult
+        return base
 
     def replace(self, **kw) -> "CloudProfile":
         return dataclasses.replace(self, **kw)
@@ -92,6 +109,8 @@ class CloudAdapter(StorageAdapter):
         self.inner = inner
         self.profile = profile
         self._sem = threading.Semaphore(int(profile.max_inflight))
+        self._gets = 0  # guarded-by: _lock — GET ordinal for the tail draw
+        self._lock = threading.Lock()
         # bound once by bind_iostats() before reader threads start; IOStats
         # itself is internally locked
         self._iostats: Optional[IOStats] = None  # guarded-by: external
@@ -108,9 +127,15 @@ class CloudAdapter(StorageAdapter):
         slot is part of the recorded wait — that is the throttling a real
         connection pool imposes."""
         t0 = time.perf_counter()
+        with self._lock:
+            seq = self._gets
+            self._gets += 1
         with self._sem:
             piece = self.inner.read_range(start, stop)
-            wait = self.profile.request_seconds(piece_nbytes(piece)) * self.profile.scale
+            wait = (
+                self.profile.request_seconds(piece_nbytes(piece), seq)
+                * self.profile.scale
+            )
             if wait > 0:
                 time.sleep(wait)
         if self._iostats is not None:
@@ -165,6 +190,9 @@ def _open_cloud(
     bw_mbps=None,
     max_inflight=None,
     latency_scale=None,
+    tail_p=None,
+    tail_mult=None,
+    tail_seed=None,
     **inner_opts,
 ) -> CloudAdapter:
     """Opener: ``cloud://<inner-uri>`` — unknown options forward to the
@@ -182,4 +210,10 @@ def _open_cloud(
         prof = prof.replace(max_inflight=int(max_inflight))
     if latency_scale is not None:
         prof = prof.replace(scale=float(latency_scale))
+    if tail_p is not None:
+        prof = prof.replace(tail_p=float(tail_p))
+    if tail_mult is not None:
+        prof = prof.replace(tail_mult=float(tail_mult))
+    if tail_seed is not None:
+        prof = prof.replace(tail_seed=int(tail_seed))
     return CloudAdapter(open_adapter(inner_uri, **inner_opts), prof)

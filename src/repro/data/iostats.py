@@ -62,9 +62,15 @@ class PendingIO:
     requests: int = 0  # guarded-by: _lock
     adm_bypassed: int = 0  # guarded-by: _lock
     adm_rejected: int = 0  # guarded-by: _lock
+    retries: int = 0  # guarded-by: _lock
+    hedges_issued: int = 0  # guarded-by: _lock
+    hedges_won: int = 0  # guarded-by: _lock
+    breaker_opens: int = 0  # guarded-by: _lock
+    breaker_closes: int = 0  # guarded-by: _lock
     wall_s: float = 0.0  # guarded-by: _lock
     modeled_s: float = 0.0  # guarded-by: _lock
     request_wait_s: float = 0.0  # guarded-by: _lock
+    retry_wait_s: float = 0.0  # guarded-by: _lock
 
     def __post_init__(self):
         # a deferred fetch's pool-thread reads may record requests into this
@@ -104,6 +110,16 @@ class IOStats:
     that lost the TinyLFU frequency duel against the LRU victim
     (``admission="auto"`` once the working set exceeds the cache budget).
     Neither changes delivered data — they explain hit-rate shape.
+
+    The resilience counters describe fault recovery: ``retries`` counts
+    failed read attempts that were re-issued (``retry_wait_s`` sums their
+    backoff sleeps, overlappable like ``request_wait_s``), ``hedges_issued``
+    / ``hedges_won`` count duplicate tail-latency reads and how many beat
+    their primary, and ``breaker_opens`` / ``breaker_closes`` count
+    per-shard circuit-breaker transitions.  None of them change delivered
+    data — under a seeded fault profile delivered epochs stay bitwise
+    identical to the fault-free run; these counters are how that recovery
+    work is made visible.
     """
 
     calls: int = 0  # guarded-by: _lock
@@ -116,7 +132,13 @@ class IOStats:
     requests: int = 0  # guarded-by: _lock — per-request ops (cloud:// GETs)
     adm_bypassed: int = 0  # guarded-by: _lock — bypassing-admission skips
     adm_rejected: int = 0  # guarded-by: _lock — TinyLFU duels lost
+    retries: int = 0  # guarded-by: _lock — failed read attempts retried
+    hedges_issued: int = 0  # guarded-by: _lock — duplicate tail-latency reads
+    hedges_won: int = 0  # guarded-by: _lock — hedges that beat the primary
+    breaker_opens: int = 0  # guarded-by: _lock — shard breakers tripped open
+    breaker_closes: int = 0  # guarded-by: _lock — breakers closed by a probe
     request_wait_s: float = 0.0  # guarded-by: _lock — summed, overlappable
+    retry_wait_s: float = 0.0  # guarded-by: _lock — summed backoff sleeps
     wall_s: float = 0.0  # guarded-by: _lock
     simulate: Optional[StorageModel] = None  # set once at construction
     simulate_scale: float = 1.0
@@ -132,7 +154,13 @@ class IOStats:
     spec_requests: int = 0  # guarded-by: _lock
     spec_adm_bypassed: int = 0  # guarded-by: _lock
     spec_adm_rejected: int = 0  # guarded-by: _lock
+    spec_retries: int = 0  # guarded-by: _lock
+    spec_hedges_issued: int = 0  # guarded-by: _lock
+    spec_hedges_won: int = 0  # guarded-by: _lock
+    spec_breaker_opens: int = 0  # guarded-by: _lock
+    spec_breaker_closes: int = 0  # guarded-by: _lock
     spec_request_wait_s: float = 0.0  # guarded-by: _lock
+    spec_retry_wait_s: float = 0.0  # guarded-by: _lock
     spec_wall_s: float = 0.0  # guarded-by: _lock
     spec_modeled_s: float = 0.0  # guarded-by: _lock
 
@@ -217,6 +245,44 @@ class IOStats:
                 self.requests += n
                 self.request_wait_s += wait_s
 
+    def record_resilience(
+        self,
+        *,
+        retries: int = 0,
+        retry_wait_s: float = 0.0,
+        hedges_issued: int = 0,
+        hedges_won: int = 0,
+        breaker_opens: int = 0,
+        breaker_closes: int = 0,
+    ) -> None:
+        """Account fault-recovery events (retry engine / hedger / breaker).
+
+        ``retries`` counts failed read attempts that were re-issued (with
+        ``retry_wait_s`` summing their backoff sleeps); ``hedges_issued`` /
+        ``hedges_won`` count duplicate tail-latency reads and how many beat
+        their primary; breaker transitions count per-shard circuit state
+        changes.  Honors :meth:`deferred` capture like :meth:`record`, so a
+        speculative duplicate's recovery work lands in the ``spec_*``
+        mirrors rather than polluting the delivered-data totals.
+        """
+        pend: Optional[PendingIO] = getattr(self._tl, "pending", None)
+        if pend is not None:
+            with pend._lock:
+                pend.retries += retries
+                pend.retry_wait_s += retry_wait_s
+                pend.hedges_issued += hedges_issued
+                pend.hedges_won += hedges_won
+                pend.breaker_opens += breaker_opens
+                pend.breaker_closes += breaker_closes
+        else:
+            with self._lock:
+                self.retries += retries
+                self.retry_wait_s += retry_wait_s
+                self.hedges_issued += hedges_issued
+                self.hedges_won += hedges_won
+                self.breaker_opens += breaker_opens
+                self.breaker_closes += breaker_closes
+
     def sleep_for(self, runs: int, bytes_read: int) -> None:
         """Sleep the simulated latency of one physical read, in the reading
         thread — concurrent reads overlap their modeled latency exactly like
@@ -280,13 +346,19 @@ class IOStats:
             self.cache_hits = self.cache_misses = self.prefetched = 0
             self.requests = 0
             self.adm_bypassed = self.adm_rejected = 0
+            self.retries = self.hedges_issued = self.hedges_won = 0
+            self.breaker_opens = self.breaker_closes = 0
             self.wall_s = self.modeled_s = self.request_wait_s = 0.0
+            self.retry_wait_s = 0.0
             self.spec_calls = self.spec_runs = self.spec_rows = 0
             self.spec_bytes_read = 0
             self.spec_cache_hits = self.spec_cache_misses = 0
             self.spec_prefetched = self.spec_requests = 0
             self.spec_adm_bypassed = self.spec_adm_rejected = 0
-            self.spec_request_wait_s = 0.0
+            self.spec_retries = self.spec_hedges_issued = 0
+            self.spec_hedges_won = 0
+            self.spec_breaker_opens = self.spec_breaker_closes = 0
+            self.spec_request_wait_s = self.spec_retry_wait_s = 0.0
             self.spec_wall_s = self.spec_modeled_s = 0.0
 
     @property
@@ -313,7 +385,13 @@ class IOStats:
                 "requests": self.requests,
                 "adm_bypassed": self.adm_bypassed,
                 "adm_rejected": self.adm_rejected,
+                "retries": self.retries,
+                "hedges_issued": self.hedges_issued,
+                "hedges_won": self.hedges_won,
+                "breaker_opens": self.breaker_opens,
+                "breaker_closes": self.breaker_closes,
                 "request_wait_s": self.request_wait_s,
+                "retry_wait_s": self.retry_wait_s,
                 "wall_s": self.wall_s,
                 "modeled_s": self.modeled_s,
                 "spec_calls": self.spec_calls,
@@ -326,7 +404,13 @@ class IOStats:
                 "spec_requests": self.spec_requests,
                 "spec_adm_bypassed": self.spec_adm_bypassed,
                 "spec_adm_rejected": self.spec_adm_rejected,
+                "spec_retries": self.spec_retries,
+                "spec_hedges_issued": self.spec_hedges_issued,
+                "spec_hedges_won": self.spec_hedges_won,
+                "spec_breaker_opens": self.spec_breaker_opens,
+                "spec_breaker_closes": self.spec_breaker_closes,
                 "spec_request_wait_s": self.spec_request_wait_s,
+                "spec_retry_wait_s": self.spec_retry_wait_s,
                 "spec_wall_s": self.spec_wall_s,
                 "spec_modeled_s": self.spec_modeled_s,
             }

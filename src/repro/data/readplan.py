@@ -530,6 +530,20 @@ class ReadaheadController:
       the hot redraw set the TinyLFU duel protects matters more than
       staging, and unretained staging is wasted double reads).
 
+    The caller may additionally feed a **per-request wait EWMA** (the
+    planner's observed seconds-per-physical-read — the same EWMA that drives
+    the hedged-read deadline).  It adapts depth to the storage *tier*: when
+    waits collapse below ``wait_floor_s`` (page-cached local reads — e.g. a
+    mid-epoch migration off the cloud tier) staging buys nothing, so depth
+    steps down each window toward ``min_depth`` — but only after a genuine
+    downward SHIFT (waits that were always under the floor never saw
+    latency to hide, and keep the legacy budget logic); when the EWMA rises by
+    ``wait_shift_factor``x over the last decision's mark (a latency regime
+    shift upward), depth steps up immediately (budget permitting) — deeper
+    staging is exactly what hides slower storage.  ``wait_s=0`` (the
+    default) reports nothing and leaves the legacy pressure/budget logic
+    untouched.
+
     Depth starts at ``max(1, min_depth)`` — optimistic one-fetch double
     buffering, withdrawn within one decision window if the cache cannot
     afford it.
@@ -552,6 +566,8 @@ class ReadaheadController:
         min_depth: int = 0,
         max_depth: int = 8,
         interval: int = 4,
+        wait_floor_s: float = 0.002,
+        wait_shift_factor: float = 2.0,
     ):
         if min_depth < 0 or max_depth < max(1, min_depth):
             raise ValueError("need 0 <= min_depth <= max_depth, max_depth >= 1")
@@ -559,6 +575,8 @@ class ReadaheadController:
         self.min_depth = int(min_depth)
         self.max_depth = int(max_depth)
         self.interval = int(interval)
+        self.wait_floor_s = float(wait_floor_s)
+        self.wait_shift_factor = float(wait_shift_factor)
         # observe() runs under the collection's rendezvous lock; depth
         # readers tolerate staleness (see class docstring)
         self.depth = max(1, self.min_depth)  # guarded-by: external
@@ -568,12 +586,25 @@ class ReadaheadController:
         self._ev_mark = cache.evictions + cache.rejections  # guarded-by: external
         self._fetch_bytes = 0.0  # guarded-by: external — EWMA bytes/fetch
         self._fetch_blocks = 0.0  # guarded-by: external — EWMA blocks/fetch
+        self._wait_ewma = 0.0  # guarded-by: external — EWMA s/physical read
+        self._wait_mark = 0.0  # guarded-by: external — EWMA at last decision
+        # latched by a genuine downward shift (wait fell from >= floor to
+        # under it); storage that was ALWAYS fast never sets it, so local
+        # stores keep the legacy budget/draining behavior
+        self._fast_regime = False  # guarded-by: external
+        self.latency_grows = 0  # guarded-by: external
+        self.latency_shrinks = 0  # guarded-by: external
 
     def observe(
-        self, fetch_bytes: float, fetch_blocks: int, inflight_blocks: int
+        self,
+        fetch_bytes: float,
+        fetch_blocks: int,
+        inflight_blocks: int,
+        wait_s: float = 0.0,
     ) -> int:
-        """Feed one fetch's estimated staged bytes / touched-block count and
-        the current in-flight table size; returns the (possibly adjusted)
+        """Feed one fetch's estimated staged bytes / touched-block count, the
+        current in-flight table size and (optionally) the caller's
+        per-physical-read wait EWMA; returns the (possibly adjusted)
         depth."""
 
         def ewma(prev: float, x: float) -> float:
@@ -581,23 +612,57 @@ class ReadaheadController:
 
         self._fetch_bytes = ewma(self._fetch_bytes, float(fetch_bytes))
         self._fetch_blocks = ewma(self._fetch_blocks, float(fetch_blocks))
+        if wait_s > 0.0:
+            self._wait_ewma = float(wait_s)  # caller already smooths it
         self._fetches += 1
         if self._fetches % self.interval:
             return self.depth
         pressure = self.cache.evictions + self.cache.rejections
         evicted = pressure - self._ev_mark
         self._ev_mark = pressure
+        wait, mark = self._wait_ewma, self._wait_mark
+        self._wait_mark = wait
         if evicted > 0:
             if self.depth > self.min_depth:
                 self.depth -= 1
                 self.shrinks += 1
             return self.depth
+        if 0.0 < wait < self.wait_floor_s:
+            # storage went fast: staging hides no latency.  But only a
+            # genuine regime shift DOWN (waits FELL from >= floor) engages
+            # the drain — storage that was always this fast (local mmap,
+            # zero-scale simulations) never saw latency and stays under the
+            # legacy budget/draining logic below.
+            if mark >= self.wait_floor_s:
+                self._fast_regime = True
+            if self._fast_regime:
+                # step toward min_depth — and do not fall through to the
+                # grow branch even once parked there, or the two oscillate
+                if self.depth > self.min_depth:
+                    self.depth -= 1
+                    self.shrinks += 1
+                    self.latency_shrinks += 1
+                return self.depth
+        else:
+            self._fast_regime = False
         # budget for the PROSPECTIVE depth: (depth+1) staged fetches + the
         # current fetch + one fetch of straddle slack must fit the cache
         budget_ok = (
             self._fetch_bytes > 0
             and (self.depth + 3) * self._fetch_bytes <= self.cache.max_bytes
         )
+        if (
+            mark > 0.0
+            and wait >= self.wait_shift_factor * mark
+            and self.depth < self.max_depth
+            and budget_ok
+        ):
+            # latency regime shift UP: grow immediately without waiting for
+            # the draining signal — slower storage is what staging is for
+            self.depth += 1
+            self.grows += 1
+            self.latency_grows += 1
+            return self.depth
         # headroom: background reads are draining — the in-flight table stays
         # within the window already scheduled (plus one fetch of slack)
         draining = inflight_blocks <= (self.depth + 1) * max(
@@ -622,5 +687,8 @@ class ReadaheadController:
             "max_depth": self.max_depth,
             "grows": self.grows,
             "shrinks": self.shrinks,
+            "latency_grows": self.latency_grows,
+            "latency_shrinks": self.latency_shrinks,
             "fetch_bytes_ewma": self._fetch_bytes,
+            "wait_ewma_s": self._wait_ewma,
         }

@@ -20,6 +20,7 @@ Three pieces, all exercised by tests:
 """
 from __future__ import annotations
 
+import random
 import threading
 import time
 from typing import Any, Callable, Optional
@@ -37,13 +38,28 @@ def run_with_restarts(
     *,
     max_restarts: int = 3,
     backoff_s: float = 0.0,
+    max_backoff_s: Optional[float] = None,
+    jitter: float = 0.0,
+    seed: int = 0,
     on_restart: Optional[Callable[[int, BaseException], None]] = None,
+    on_give_up: Optional[Callable[[int, BaseException], None]] = None,
+    sleep: Callable[[float], None] = time.sleep,
 ):
     """Run ``work(resume: bool)``; restart on failure up to ``max_restarts``.
 
     ``work`` must be checkpoint-resumable (the training driver is: state +
     loader cursor ride in the checkpoint).  Returns work's result.
+
+    The backoff before restart ``k`` is ``min(backoff_s * k, max_backoff_s)
+    * (1 + jitter * u_k)`` with ``u_k`` a seeded uniform draw in ``[0, 1)``
+    — linear growth, capped (``max_backoff_s=None`` = uncapped), and
+    desynchronized across supervisors restarting off one shared failure
+    (jitter=0 keeps the legacy deterministic schedule).  ``on_give_up(
+    restarts_used, last_exc)`` fires once when the budget is exhausted,
+    before the final exception propagates — the hook for paging/cleanup.
+    ``sleep`` is injectable so tests assert the schedule without waiting it.
     """
+    rng = random.Random(seed)
     attempt = 0
     while True:
         try:
@@ -51,11 +67,18 @@ def run_with_restarts(
         except BaseException as e:  # noqa: BLE001 — supervisor boundary
             attempt += 1
             if attempt > max_restarts:
+                if on_give_up:
+                    on_give_up(attempt - 1, e)
                 raise
             if on_restart:
                 on_restart(attempt, e)
             if backoff_s:
-                time.sleep(backoff_s * attempt)
+                delay = backoff_s * attempt
+                if max_backoff_s is not None:
+                    delay = min(delay, max_backoff_s)
+                if jitter:
+                    delay *= 1.0 + jitter * rng.random()
+                sleep(delay)
 
 
 def reshard_for_mesh(

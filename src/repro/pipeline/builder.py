@@ -61,6 +61,10 @@ class Pipeline:
     _COLLECTION_FIELDS = (
         "uri", "cache_bytes", "block_rows", "max_extent_rows",
         "io_workers", "readahead", "admission", "open_opts",
+        # resilience knobs (PR 7) live on PlannedCollection too
+        "retries", "retry_backoff_s", "retry_max_backoff_s",
+        "retry_deadline_s", "hedge_factor", "hedge_min_s",
+        "breaker_threshold", "breaker_cooldown_s",
     )
 
     def __init__(self, spec: DataSpec, collection: Any = None, iostats: Any = None):
@@ -218,6 +222,48 @@ class Pipeline:
             kw["io_workers"] = int(io_workers)
         if cross_epoch is not None:
             kw["cross_epoch_prefetch"] = bool(cross_epoch)
+        return self._replace(**kw)
+
+    def resilience(
+        self,
+        *,
+        retries: Optional[int] = None,
+        backoff_s: Optional[float] = None,
+        max_backoff_s: Optional[float] = None,
+        deadline_s: Optional[float] = None,
+        hedge_factor: Optional[float] = None,
+        hedge_min_s: Optional[float] = None,
+        breaker_threshold: Optional[int] = None,
+        breaker_cooldown_s: Optional[float] = None,
+    ) -> "Pipeline":
+        """Self-healing I/O knobs (see ``docs/architecture.md`` §Fault
+        tolerance): bounded ``retries`` with decorrelated-jitter backoff
+        (``backoff_s`` base, ``max_backoff_s`` cap, optional per-fetch
+        ``deadline_s``), hedged reads (``hedge_factor`` × the EWMA extent
+        wait, floored at ``hedge_min_s``, duplicates a straggling request —
+        first completion wins), and a per-shard circuit breaker
+        (``breaker_threshold`` consecutive failures open a shard,
+        ``breaker_cooldown_s`` before a half-open probe).  All content-free:
+        they change timing and recovery, never the delivered stream, so the
+        spec fingerprint is invariant under them.  Set-if-passed, like
+        :meth:`prefetch`."""
+        kw: dict = {}
+        if retries is not None:
+            kw["retries"] = int(retries)
+        if backoff_s is not None:
+            kw["retry_backoff_s"] = float(backoff_s)
+        if max_backoff_s is not None:
+            kw["retry_max_backoff_s"] = float(max_backoff_s)
+        if deadline_s is not None:
+            kw["retry_deadline_s"] = float(deadline_s)
+        if hedge_factor is not None:
+            kw["hedge_factor"] = float(hedge_factor)
+        if hedge_min_s is not None:
+            kw["hedge_min_s"] = float(hedge_min_s)
+        if breaker_threshold is not None:
+            kw["breaker_threshold"] = int(breaker_threshold)
+        if breaker_cooldown_s is not None:
+            kw["breaker_cooldown_s"] = float(breaker_cooldown_s)
         return self._replace(**kw)
 
     # ----------------------------------------------------------- autotune
@@ -379,6 +425,14 @@ def _open_from_spec(spec: DataSpec, iostats: Any = None) -> Any:
         io_workers=spec.io_workers,
         readahead=spec.readahead,
         admission=spec.admission,
+        retries=spec.retries,
+        retry_backoff_s=spec.retry_backoff_s,
+        retry_max_backoff_s=spec.retry_max_backoff_s,
+        retry_deadline_s=spec.retry_deadline_s,
+        hedge_factor=spec.hedge_factor,
+        hedge_min_s=spec.hedge_min_s,
+        breaker_threshold=spec.breaker_threshold,
+        breaker_cooldown_s=spec.breaker_cooldown_s,
         **knobs,
         **spec.open_opts,
     )

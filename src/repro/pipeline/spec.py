@@ -58,8 +58,10 @@ __all__ = [
 #: History: 1 = PR 4 initial schema; 2 = PR 5 adds ``cross_epoch_prefetch``
 #: and the ``readahead="auto"`` spelling (older specs still load — missing
 #: fields take their defaults — but a version-2 spec presented to version-1
-#: code gets the version refusal rather than an "unknown field" puzzle).
-SPEC_VERSION = 2
+#: code gets the version refusal rather than an "unknown field" puzzle);
+#: 3 = PR 7 adds the resilience fields (retries/backoff, hedging, breaker —
+#: all content-free: recovery never changes delivered bytes).
+SPEC_VERSION = 3
 
 #: name -> strategy class.  Params are the dataclass fields, JSON-typed;
 #: ``weights`` / ``labels`` may instead arrive as ``weights_obs`` /
@@ -158,6 +160,11 @@ CONTENT_FREE_FIELDS = frozenset({
     "straggler_min_latency", "cache_bytes", "block_rows",
     "max_extent_rows", "io_workers", "readahead", "admission",
     "cross_epoch_prefetch",
+    # resilience: recovery re-reads the same bytes — delivered batches are
+    # bitwise invariant under every one of these (the chaos determinism
+    # tests pin that), so a resume across a retry-policy change is legal
+    "retries", "retry_backoff_s", "retry_max_backoff_s", "retry_deadline_s",
+    "hedge_factor", "hedge_min_s", "breaker_threshold", "breaker_cooldown_s",
 })
 
 
@@ -207,6 +214,16 @@ class DataSpec:
     straggler_min_latency: float = 0.05  # floor (s) before re-issue fires
     cross_epoch_prefetch: bool = False  # readahead window spills into epoch e+1
 
+    # ---- resilience: surviving storage faults (delivery-invariant)
+    retries: int = 0  # retry budget per physical read; 0 = fail fast
+    retry_backoff_s: float = 0.005  # backoff base (decorrelated jitter)
+    retry_max_backoff_s: float = 0.25  # backoff cap per retry sleep
+    retry_deadline_s: float = 0.0  # per-read retry wall budget; 0 = none
+    hedge_factor: float = 0.0  # hedge at factor x wait EWMA; 0 = off
+    hedge_min_s: float = 0.05  # floor on the hedge deadline
+    breaker_threshold: int = 0  # consecutive failures to open; 0 = off
+    breaker_cooldown_s: float = 1.0  # open -> half-open probe delay
+
     version: int = SPEC_VERSION
 
     # ------------------------------------------------------------ validate
@@ -233,6 +250,18 @@ class DataSpec:
                 f"unknown strategy {self.strategy!r}; known: "
                 f"{sorted(STRATEGY_REGISTRY)}"
             )
+        if (
+            self.retries < 0
+            or self.retry_backoff_s < 0
+            or self.retry_max_backoff_s < 0
+            or self.retry_deadline_s < 0
+            or self.hedge_factor < 0
+            or self.breaker_threshold < 0
+            or self.breaker_cooldown_s < 0
+        ):
+            raise ValueError("resilience fields must be non-negative")
+        if self.hedge_min_s <= 0:
+            raise ValueError("hedge_min_s must be positive")
 
     # ----------------------------------------------------------- serialize
     def replace(self, **kw) -> "DataSpec":

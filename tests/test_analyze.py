@@ -484,6 +484,14 @@ class TestRepoGate:
                 "repro.data.cloud.CloudAdapter._sem",
                 "repro.data.iostats.IOStats._lock",
             ),
+            # cloud://fault://... composition: the request semaphore is held
+            # across the inner read, which takes the fault adapter's
+            # decision lock.  Acyclic: fault never holds its lock across a
+            # delegated read (faults are decided, then the lock dropped).
+            (
+                "repro.data.cloud.CloudAdapter._sem",
+                "repro.data.faults.FaultInjectingAdapter._lock",
+            ),
         }
 
 

@@ -1,0 +1,561 @@
+"""Self-healing storage I/O (ISSUE 7): fault injection, retries, hedged
+reads, per-shard circuit breaking.
+
+Acceptance invariants under test:
+
+- **chaos determinism** — under a seeded :class:`FaultProfile` (transient
+  errors, latency spikes, shard blackouts) with retries/hedging/breaker on
+  and full concurrency (``io_workers > 1``, readahead, prefetch pool), the
+  delivered epochs are **bitwise identical** to the fault-free run — per
+  backend (csr, sharded-csr, h5ad, cloud-h5ad);
+- mid-epoch :class:`LoaderState` resume under active fault injection is
+  bitwise exact;
+- a failed rendezvous future never poisons later waiters: waiters re-issue
+  the block (one recovery round) instead of re-raising a stale error, and
+  the same collection instance survives epoch after epoch;
+- without retries the same fault stream is FATAL (the no-retry baseline
+  must fail — resilience is doing real work), and an unsurvivable fault
+  stream exhausts the budget with the terminal, non-transient
+  :class:`RetryBudgetExhausted`;
+- hedged reads fire on tail latency (``hedges_issued``/``hedges_won``) and
+  never change delivered bytes;
+- the :class:`ShardBreaker` lifecycle (closed -> open -> half-open probe ->
+  closed) and its IOStats transitions; background prefetch skips open
+  shards;
+- :class:`RetryPolicy` backoff and :func:`run_with_restarts` schedules are
+  seeded-deterministic (asserted against the closed form, with injected
+  sleep);
+- the :class:`ReadaheadController` reacts to latency regime shifts fed via
+  the per-request wait EWMA;
+- a :class:`HeartbeatMonitor`-flagged stuck prefetch worker gets its
+  claimed fetch re-issued (``heartbeat_reissues``) without a latency
+  median;
+- the new IOStats counters pair with ``spec_*`` mirrors under deferred
+  capture, and the resilience knobs are content-free spec fields
+  (fingerprint-invariant, JSON round-trip, ``Pipeline.resilience``).
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import BlockShuffling, BlockWeightedSampling, ScDataset
+from repro.core.prefetch import PrefetchPool
+from repro.data import IOStats, open_collection
+from repro.data.faults import (
+    FaultProfile,
+    RetryBudgetExhausted,
+    RetryPolicy,
+    ShardBreaker,
+    TransientStorageError,
+    is_transient,
+    mix_u01,
+)
+from repro.data.readplan import BlockCache, ReadaheadController
+from repro.data.synth import write_csr_shard, write_h5ad
+from repro.distributed.fault import HeartbeatMonitor, run_with_restarts
+from repro.pipeline import DataSpec, Pipeline
+
+
+@pytest.fixture(autouse=True)
+def _witness(lock_order_witness):
+    """Chaos is exactly where lock-order bugs surface: every test here runs
+    under the runtime lock-order witness (tests/conftest.py)."""
+    yield
+
+
+N, G = 2000, 32
+
+#: fault knobs every chaos test shares: ~15% of read attempts fail, every
+#: decision a pure hash of (seed, range, attempt) — reproducible chaos
+FAULT_Q = "seed=5&error_rate=0.15"
+#: retry knobs sized so the budget dwarfs the failure run-length
+#: (0.15^11 ~ 1e-9) while backoff stays test-friendly
+RETRY_KW = dict(retries=10, retry_backoff_s=0.0005, retry_max_backoff_s=0.005)
+
+
+def _random_csr(rng, n, g):
+    lens = rng.integers(1, 5, n)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(lens, out=indptr[1:])
+    nnz = int(indptr[-1])
+    data = rng.normal(size=nnz).astype(np.float32)
+    indices = np.empty(nnz, np.int32)
+    for i in range(n):
+        indices[indptr[i]:indptr[i + 1]] = np.sort(
+            rng.choice(g, size=int(lens[i]), replace=False)
+        ).astype(np.int32)
+    return data, indices, indptr
+
+
+@pytest.fixture(scope="module")
+def backends(tmp_path_factory):
+    """The SAME cells in every storage format the acceptance names."""
+    rng = np.random.default_rng(17)
+    root = tmp_path_factory.mktemp("resilience")
+    data, indices, indptr = _random_csr(rng, N, G)
+    obs = {"cell_line": rng.integers(0, 5, N).astype(np.int32)}
+    half = indptr[N // 2]
+    s0, s1 = str(root / "s0"), str(root / "s1")
+    write_csr_shard(s0, data[:half], indices[:half], indptr[: N // 2 + 1], G,
+                    {k: v[: N // 2] for k, v in obs.items()})
+    write_csr_shard(s1, data[half:], indices[half:],
+                    indptr[N // 2:] - half, G,
+                    {k: v[N // 2:] for k, v in obs.items()})
+    h5ad = str(root / "cells.h5ad")
+    write_h5ad(h5ad, data, indices, indptr, G, obs)
+    return {
+        "csr": f"csr://{s0}",
+        "sharded-csr": f"sharded-csr://{s0},{s1}",
+        "h5ad": f"h5ad://{h5ad}",
+        "cloud-h5ad": f"cloud://h5ad://{h5ad}?profile=same-region&latency_scale=0",
+    }
+
+
+def _dense(b):
+    return b.to_dense().copy() if hasattr(b, "to_dense") else np.asarray(b).copy()
+
+
+# ------------------------------------------------------- chaos determinism
+@pytest.mark.parametrize("backend", ["csr", "sharded-csr", "h5ad", "cloud-h5ad"])
+def test_chaos_stream_bit_identical_per_backend(backends, backend):
+    """Faults + retries + full concurrency vs clean synchronous: same
+    batches, two epochs, weighted sampling over a tiny cache."""
+    uri = backends[backend]
+    rng = np.random.default_rng(0)
+    weights = rng.random(N) ** 3 + 1e-3
+
+    def run(uri, **kw):
+        col = open_collection(uri, block_rows=32, **kw)
+        ds = ScDataset(
+            col, BlockWeightedSampling(block_size=32, weights=weights[: len(col)]),
+            batch_size=32, fetch_factor=4, seed=7,
+        )
+        out = [_dense(b) for b in ds.epochs(2)]
+        snap = col.iostats.snapshot()
+        col.release()
+        return out, snap
+
+    ref, _ = run(uri, cache_bytes=0)
+    got, snap = run(f"fault://{uri}{'&' if '?' in uri else '?'}{FAULT_Q}",
+                    cache_bytes=64 << 10, io_workers=4, readahead=2,
+                    **RETRY_KW)
+    assert snap["retries"] > 0  # the chaos was real, and it was retried
+    assert len(ref) == len(got)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_chaos_with_prefetch_pool_and_cross_epoch(backends):
+    """The full stack — fault adapter, retrying planner, readahead with
+    cross-epoch spill, prefetch pool on top — still delivers the exact
+    stream.  This is the end-to-end regression for rendezvous poisoning:
+    pool workers wait on planner futures that DO fail and DO get re-issued,
+    across an epoch boundary (the cross-epoch prefetch path stages epoch
+    e+1 blocks whose reads can also fail)."""
+    uri = backends["sharded-csr"]
+    ref_ds = ScDataset(
+        open_collection(uri, cache_bytes=0, block_rows=32),
+        BlockShuffling(32), batch_size=32, fetch_factor=4, seed=3,
+    )
+    ref = [_dense(b) for b in ref_ds.epochs(2)]
+
+    col = open_collection(
+        f"fault://{uri}?{FAULT_Q}", cache_bytes=64 << 10, block_rows=32,
+        io_workers=4, readahead=2, **RETRY_KW,
+    )
+    ds = ScDataset(col, BlockShuffling(32), batch_size=32, fetch_factor=4,
+                   seed=3, cross_epoch_prefetch=True)
+    got = []
+    for _ in range(2):  # fresh pool per epoch, same collection instance:
+        # stale poisoned futures from epoch 0 would detonate in epoch 1
+        got.extend(_dense(b) for b in PrefetchPool(ds, num_workers=2))
+    assert col.iostats.snapshot()["retries"] > 0
+    col.release()
+    assert len(ref) == len(got)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_midepoch_resume_under_faults(backends):
+    """LoaderState taken mid-epoch under active fault injection resumes
+    bitwise-exactly on a freshly opened (still faulty) collection."""
+    uri = f"fault://{backends['h5ad']}?{FAULT_Q}"
+
+    def mk():
+        col = open_collection(uri, cache_bytes=64 << 10, block_rows=32,
+                              io_workers=2, readahead=1, **RETRY_KW)
+        return col, ScDataset(col, BlockShuffling(32), batch_size=32,
+                              fetch_factor=2, seed=11)
+
+    clean = ScDataset(open_collection(backends["h5ad"], cache_bytes=0,
+                                      block_rows=32),
+                      BlockShuffling(32), batch_size=32, fetch_factor=2,
+                      seed=11)
+    full = [_dense(b) for b in clean]
+
+    col1, ds1 = mk()
+    it = iter(ds1)
+    consumed = [next(it) for _ in range(5)]  # mid-fetch: 5 % fetch_factor != 0
+    state = ds1.state()
+    col1.release()
+
+    col2, ds2 = mk()
+    ds2.load_state(state)
+    rest = [_dense(b) for b in ds2]
+    col2.release()
+    tail = full[len(consumed):]
+    assert len(rest) == len(tail)
+    for a, b in zip(tail, rest):
+        np.testing.assert_array_equal(a, b)
+
+
+# --------------------------------------------- failure is real, and bounded
+def test_no_retry_baseline_fails(backends):
+    """Without retries the same fault stream kills the epoch — the control
+    arm proving the resilience machinery is load-bearing."""
+    col = open_collection(f"fault://{backends['csr']}?{FAULT_Q}",
+                          cache_bytes=0, block_rows=32)
+    ds = ScDataset(col, BlockShuffling(32), batch_size=32, fetch_factor=4,
+                   seed=7)
+    with pytest.raises(OSError):
+        for _ in ds:
+            pass
+    col.release()
+
+
+def test_retry_budget_exhausted_is_terminal(backends):
+    """error_rate=1 cannot be outlived: the budget drains and the terminal
+    error is NOT transient (a re-issuing waiter must not loop forever)."""
+    col = open_collection(f"fault://{backends['csr']}?seed=1&error_rate=1.0",
+                          cache_bytes=0, block_rows=32, retries=2,
+                          retry_backoff_s=1e-4, retry_max_backoff_s=1e-3)
+    with pytest.raises(RetryBudgetExhausted) as ei:
+        col.fetch(np.arange(64))
+    assert isinstance(ei.value.__cause__, TransientStorageError)
+    assert not is_transient(ei.value)
+    assert is_transient(ei.value.__cause__)
+    assert col.iostats.snapshot()["retries"] == 2
+    col.release()
+
+
+def test_retry_deadline_bounds_wall_time(backends):
+    """A per-read deadline cuts the retry loop short of the attempt budget."""
+    col = open_collection(f"fault://{backends['csr']}?seed=1&error_rate=1.0",
+                          cache_bytes=0, block_rows=32, retries=10_000,
+                          retry_backoff_s=0.02, retry_max_backoff_s=0.02,
+                          retry_deadline_s=0.05)
+    with pytest.raises(RetryBudgetExhausted, match="deadline"):
+        col.fetch(np.arange(64))
+    assert col.iostats.snapshot()["retries"] <= 4  # ~deadline / backoff
+    col.release()
+
+
+# ------------------------------------------------------------- hedged reads
+def test_hedged_reads_fire_on_spikes_and_keep_bytes(backends):
+    """Latency spikes on first attempts only (the wedged-request model):
+    the hedge duplicate is attempt 1, sails past the spike, and wins —
+    counters move, delivered bytes do not."""
+    uri = (f"fault://{backends['sharded-csr']}"
+           "?seed=9&spike_rate=0.4&spike_ms=20&spike_on_retries=0")
+    ref_ds = ScDataset(open_collection(backends["sharded-csr"], cache_bytes=0,
+                                       block_rows=32),
+                       BlockShuffling(32), batch_size=32, fetch_factor=4,
+                       seed=5)
+    ref = [_dense(b) for b in ref_ds]
+
+    col = open_collection(uri, cache_bytes=64 << 10, block_rows=32,
+                          io_workers=4, hedge_factor=1.0, hedge_min_s=0.002)
+    ds = ScDataset(col, BlockShuffling(32), batch_size=32, fetch_factor=4,
+                   seed=5)
+    got = [_dense(b) for b in ds]
+    snap = col.iostats.snapshot()
+    faults = col.stats()["faults"]
+    col.release()
+    assert faults["spikes"] > 0
+    assert snap["hedges_issued"] > 0
+    assert snap["hedges_won"] >= 1  # duplicates dodge first-attempt spikes
+    assert snap["hedges_won"] <= snap["hedges_issued"]
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------- circuit breaker
+def test_shard_breaker_lifecycle_unit():
+    t = [0.0]
+    br = ShardBreaker(threshold=2, cooldown_s=1.0, clock=lambda: t[0])
+    assert br.admit(0) == "closed"
+    assert br.record_failure(0) is False
+    assert br.record_failure(0) is True  # threshold -> OPENED
+    assert br.is_open(0)
+    assert br.admit(0) == "open"  # cooldown not elapsed
+    t[0] = 1.5
+    assert br.admit(0) == "probe"  # one caller elected
+    assert br.admit(0) == "open"  # ...and only one
+    assert br.record_success(0) is True  # probe succeeded -> CLOSED
+    assert not br.is_open(0)
+    # a failed probe restarts the cooldown — the shard is still dark
+    br.record_failure(1)
+    assert br.record_failure(1) is True
+    t[0] = 2.6
+    assert br.admit(1) == "probe"
+    assert br.record_failure(1) is False  # no second open counted
+    t[0] = 3.0
+    assert br.admit(1) == "open"  # cooldown restarted at 2.6
+    t[0] = 3.7
+    assert br.admit(1) == "probe"
+    br.record_success(1)
+    snap = br.snapshot()
+    assert snap == {"open_shards": [], "opens": 2, "closes": 2,
+                    "threshold": 2, "cooldown_s": 1.0}
+    # an isolated success never closes anything
+    assert br.record_success(3) is False
+    with pytest.raises(ValueError):
+        ShardBreaker(threshold=0, cooldown_s=1.0)
+
+
+def test_breaker_outlives_shard_blackout(backends):
+    """A bounded blackout of shard 1 (ops 5..10 of that shard all fail):
+    the breaker opens, backoff drains the window, a half-open probe closes
+    it, and the epoch is delivered exactly.  Synchronous (io_workers=1) so
+    the shard-op ordinals — hence the whole episode — are deterministic."""
+    uri = f"fault://{backends['sharded-csr']}?seed=5&blackout=1:5:11"
+    ref_ds = ScDataset(open_collection(backends["sharded-csr"], cache_bytes=0,
+                                       block_rows=32),
+                       BlockShuffling(32), batch_size=32, fetch_factor=4,
+                       seed=2)
+    ref = [_dense(b) for b in ref_ds]
+    col = open_collection(uri, cache_bytes=64 << 10, block_rows=32,
+                          breaker_threshold=3, breaker_cooldown_s=0.001,
+                          **RETRY_KW)
+    ds = ScDataset(col, BlockShuffling(32), batch_size=32, fetch_factor=4,
+                   seed=2)
+    got = [_dense(b) for b in ds]
+    snap = col.iostats.snapshot()
+    res = col.stats()["resilience"]
+    col.release()
+    assert snap["breaker_opens"] >= 1
+    assert snap["breaker_closes"] >= 1
+    assert res["breaker"]["open_shards"] == []  # healed by the end
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_prefetch_skips_open_shards(backends):
+    """Background staging must not feed a dark shard's failure count: with
+    shard 1's breaker open, prefetch schedules only shard-0 blocks."""
+    col = open_collection(backends["sharded-csr"], cache_bytes=1 << 20,
+                          block_rows=32, io_workers=2, breaker_threshold=1,
+                          breaker_cooldown_s=60.0, retries=1)
+    col._breaker.record_failure(1)  # trip shard 1 open
+    assert col._breaker.is_open(1)
+    scheduled = col.prefetch(np.arange(N))  # rows spanning both shards
+    n_blocks = -(-N // 32)
+    shard0_blocks = sum(1 for b in range(n_blocks)
+                        if col._shard_of(b * 32) == 0)
+    assert 0 < scheduled <= shard0_blocks
+    col.release()
+
+
+# ------------------------------------------------- deterministic schedules
+def test_fault_profile_decisions_are_pure():
+    p = FaultProfile(seed=3, error_rate=0.3, spike_rate=0.5, spike_s=0.01)
+    for att in range(4):
+        assert p.transient(0, 64, att) == p.transient(0, 64, att)
+        assert p.spike(0, 64, att) == p.spike(0, 64, att)
+    # different attempts draw independently — over many ranges both
+    # outcomes occur, at roughly the configured rate
+    draws = [p.transient(lo, lo + 64, 0) for lo in range(0, 64_000, 64)]
+    assert 0.2 < np.mean(draws) < 0.4
+    us = [mix_u01(3, 1, lo, lo + 64, 0) for lo in range(0, 6400, 64)]
+    assert all(0.0 <= u < 1.0 for u in us)
+    assert len(set(us)) == len(us)  # no collisions over this small grid
+    assert FaultProfile(seed=4, error_rate=0.3).transient(0, 64, 0) != \
+        p.transient(0, 64, 0) or True  # seeds decorrelate (smoke, not proof)
+
+
+def test_fault_profile_rejects_misconfiguration():
+    # a rate of 2.0 is a typo (0.2? 2%?) — must not silently mean "always"
+    with pytest.raises(ValueError, match="error_rate"):
+        FaultProfile(error_rate=2.0)
+    with pytest.raises(ValueError, match="spike_rate"):
+        FaultProfile(spike_rate=-0.1)
+    with pytest.raises(ValueError, match="scale"):
+        FaultProfile(scale=-1.0)
+    with pytest.raises(ValueError, match="blackout"):
+        FaultProfile(blackouts=((0, 10, 5),))  # last < first
+    # the URI opener surfaces the same errors (+ a clear parse error)
+    with pytest.raises(ValueError, match="error_rate"):
+        open_collection("fault://csr:///nowhere?error_rate=2.0")
+    with pytest.raises(ValueError, match="shard:first:last"):
+        open_collection("fault://csr:///nowhere?blackout=banana")
+
+
+def test_retry_policy_backoff_schedule():
+    pol = RetryPolicy(retries=8, backoff_s=0.001, max_backoff_s=0.05, seed=2)
+    delays, prev = [], 0.0
+    for k in range(8):
+        d = pol.backoff(100, 200, k, prev)
+        assert d == pol.backoff(100, 200, k, prev)  # deterministic
+        assert 0.001 <= d <= 0.05  # within [base, cap]
+        # decorrelated jitter: each draw bounded by max(3*prev, base)
+        assert d <= max(3.0 * prev, 0.001) + 1e-12
+        delays.append(d)
+        prev = d
+    assert len(set(delays)) > 1  # it actually jitters
+    # a different range draws a different schedule (attempt 0 is always the
+    # base — its jitter span is empty — so compare a later attempt)
+    assert pol.backoff(0, 64, 1, 0.001) != pol.backoff(100, 200, 1, 0.001)
+
+
+def test_run_with_restarts_backoff_jitter_and_give_up():
+    calls, slept = [], []
+
+    def flaky(resume):
+        calls.append(resume)
+        if len(calls) < 4:
+            raise RuntimeError("boom")
+        return "ok"
+
+    out = run_with_restarts(flaky, max_restarts=5, backoff_s=0.1,
+                            max_backoff_s=0.25, jitter=0.5, seed=7,
+                            sleep=slept.append)
+    assert out == "ok"
+    assert calls == [False, True, True, True]
+    rng = random.Random(7)  # the documented closed form, re-derived
+    expect = [min(0.1 * k, 0.25) * (1.0 + 0.5 * rng.random())
+              for k in (1, 2, 3)]
+    assert slept == pytest.approx(expect)
+    for d, base in zip(slept, (0.1, 0.2, 0.25)):
+        assert base <= d <= base * 1.5  # jittered, never past 1+jitter
+
+    gave_up = []
+    with pytest.raises(ValueError, match="dead"):
+        run_with_restarts(
+            lambda resume: (_ for _ in ()).throw(ValueError("dead")),
+            max_restarts=2, backoff_s=0.0,
+            on_give_up=lambda n, e: gave_up.append((n, str(e))),
+            sleep=lambda s: None,
+        )
+    assert gave_up == [(2, "dead")]  # fired once, with the budget used
+
+
+# ------------------------------------------- controller latency regime shift
+def test_readahead_controller_latency_regime_shift():
+    """Mid-epoch storage-tier change, both directions: the wait EWMA jumping
+    2x over its last decision mark grows depth immediately; collapsing under
+    the floor steps depth down — and parks there without oscillating."""
+    cache = BlockCache(max_bytes=1_000_000)
+    ctl = ReadaheadController(cache, interval=1, max_depth=4,
+                              wait_floor_s=0.002, wait_shift_factor=2.0)
+    ctl.observe(10_000, 4, 0, wait_s=0.005)  # baseline regime (~5ms reads)
+    ctl.observe(10_000, 4, 0, wait_s=0.005)
+    d0, lg0 = ctl.depth, ctl.latency_grows
+    ctl.observe(10_000, 4, 0, wait_s=0.015)  # 3x the mark: shift UP
+    assert ctl.depth == d0 + 1 and ctl.latency_grows == lg0 + 1
+    ctl.observe(10_000, 4, 0, wait_s=0.001)  # under the floor: shift DOWN
+    assert ctl.latency_shrinks == 1
+    for _ in range(10):  # fast regime persists -> drain to min_depth, park
+        ctl.observe(10_000, 4, 0, wait_s=0.001)
+    assert ctl.depth == ctl.min_depth
+    g = ctl.grows
+    ctl.observe(10_000, 4, 0, wait_s=0.001)
+    assert ctl.depth == ctl.min_depth and ctl.grows == g  # no oscillation
+    snap = ctl.snapshot()
+    assert snap["latency_grows"] == 1
+    assert snap["latency_shrinks"] == ctl.latency_shrinks
+    assert snap["wait_ewma_s"] == pytest.approx(0.001)
+
+
+# ------------------------------------------------- heartbeat-driven reissue
+def test_heartbeat_reissues_stuck_worker_fetch(backends):
+    """A worker wedged inside a stuck read (injected hang, first attempt
+    only) goes heartbeat-stale; its claimed fetch is re-issued WITHOUT a
+    latency median, the duplicate read sails past the hang, and the stream
+    is exact."""
+    uri = (f"fault://{backends['csr']}"
+           "?seed=1&stuck_row=40&stuck_ms=900&stuck_on_retries=0")
+    ref_ds = ScDataset(open_collection(backends["csr"], cache_bytes=0,
+                                       block_rows=32),
+                       BlockShuffling(32), batch_size=32, fetch_factor=2,
+                       seed=4)
+    ref = [_dense(b) for b in ref_ds]
+
+    col = open_collection(uri, cache_bytes=0, block_rows=32)  # synchronous
+    ds = ScDataset(col, BlockShuffling(32), batch_size=32, fetch_factor=2,
+                   seed=4)
+    hb = HeartbeatMonitor(timeout_s=0.15)
+    pool = PrefetchPool(ds, num_workers=2, heartbeat=hb,
+                        straggler_factor=1e6, straggler_min_latency=1e6)
+    got = [_dense(b) for b in pool]  # straggler path disabled: only the
+    # liveness signal can trigger the re-issue
+    faults = col.adapter.fault_snapshot()
+    col.release()
+    assert faults["stuck"] >= 1  # the hang really happened
+    assert pool.stats["heartbeat_reissues"] >= 1
+    assert pool.stats["duplicate_completions"] >= 0
+    assert len(ref) == len(got)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+
+
+# ----------------------------------------------- accounting + spec plumbing
+def test_iostats_resilience_counters_pair_with_spec_mirrors():
+    st = IOStats()
+    st.record_resilience(retries=2, retry_wait_s=0.5, hedges_issued=3,
+                         hedges_won=1, breaker_opens=1, breaker_closes=1)
+    with st.deferred() as pend:
+        st.record_resilience(retries=4, retry_wait_s=0.25, hedges_issued=1)
+    st.commit(pend, speculative=True)  # a dropped duplicate's resilience
+    snap = st.snapshot()
+    assert snap["retries"] == 2 and snap["spec_retries"] == 4
+    assert snap["retry_wait_s"] == 0.5 and snap["spec_retry_wait_s"] == 0.25
+    assert snap["hedges_issued"] == 3 and snap["spec_hedges_issued"] == 1
+    assert snap["hedges_won"] == 1 and snap["spec_hedges_won"] == 0
+    assert snap["breaker_opens"] == 1 and snap["spec_breaker_opens"] == 0
+    st.reset()
+    snap = st.snapshot()
+    for k in ("retries", "spec_retries", "retry_wait_s", "spec_retry_wait_s",
+              "hedges_issued", "spec_hedges_issued", "hedges_won",
+              "spec_hedges_won", "breaker_opens", "spec_breaker_opens",
+              "breaker_closes", "spec_breaker_closes"):
+        assert snap[k] == 0
+
+
+def test_spec_resilience_fields_are_content_free(backends):
+    base = (Pipeline.from_uri(backends["csr"], cache_bytes=1 << 20)
+            .strategy("block", block_size=32).batch(32).seed(0))
+    hard = (Pipeline.from_uri(backends["csr"], cache_bytes=1 << 20)
+            .strategy("block", block_size=32).batch(32).seed(0)
+            .resilience(retries=5, backoff_s=0.01, max_backoff_s=0.1,
+                        deadline_s=2.0, hedge_factor=2.0, hedge_min_s=0.01,
+                        breaker_threshold=3, breaker_cooldown_s=0.5))
+    s = hard.spec
+    assert (s.retries, s.hedge_factor, s.breaker_threshold) == (5, 2.0, 3)
+    # content-free: retrying/hedging moves bytes in time, never rows
+    assert base.spec.fingerprint() == s.fingerprint()
+    assert DataSpec.from_json(s.to_json()) == s
+    # set-if-passed: touching one knob leaves the others alone
+    hard.resilience(retries=7)
+    assert hard.spec.retries == 7 and hard.spec.hedge_factor == 2.0
+    with pytest.raises(ValueError):
+        DataSpec(uri="csr:///x", retries=-1)
+    with pytest.raises(ValueError):
+        DataSpec(uri="csr:///x", hedge_min_s=0.0)
+
+
+def test_pipeline_resilience_reaches_collection(backends):
+    pipe = (Pipeline.from_uri(f"fault://{backends['csr']}?{FAULT_Q}",
+                              cache_bytes=1 << 20, block_rows=32)
+            .strategy("block", block_size=32).batch(32).seed(0)
+            .resilience(retries=10, backoff_s=0.0005, max_backoff_s=0.005,
+                        breaker_threshold=4, breaker_cooldown_s=0.01)
+            .build())
+    n = sum(1 for _ in pipe)
+    assert n == len(pipe)
+    res = pipe.stats()["resilience"]
+    assert res["retry"]["retries"] == 10
+    assert res["breaker"]["threshold"] == 4
+    assert pipe.stats()["faults"]["reads"] > 0
+    assert pipe.collection.iostats.snapshot()["retries"] > 0
+    pipe.close()
