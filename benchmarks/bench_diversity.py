@@ -1,0 +1,204 @@
+"""PR 8 — the diversity observatory: entropy-vs-throughput frontier (Fig. 4).
+
+Claim under test (paper §3.4 / Fig. 4, the headline trade-off): block
+sampling with a large enough fetch factor matches TRUE-RANDOM minibatch
+diversity at a fraction of the I/O — quasi-random `(b, f)` reaches the
+random-sampling entropy plateau while reading blocks instead of rows.
+
+This bench makes the claim enforceable end to end through the PR 8 stack:
+
+- every frontier cell is built through the Pipeline surface with
+  ``.diversity(obs="plate")``, so the measured entropy IS the live
+  ``div_*`` IOStats telemetry (no offline label collection);
+- the quasi-random cell is not hand-picked: ``recommend(...,
+  entropy_floor=...)`` chooses it from the §3.4 bias expansion — the gate
+  therefore also covers the entropy-floor autotune path;
+- throughput is MODELED from the measured runs/bytes counters under the
+  SATA-SSD/HDF5 storage model (``t = seek_s * runs + bytes / bw``) —
+  deterministic, like every other smoke gate.
+
+``run_diversity`` writes machine-readable ``BENCH_PR8.json``; smoke gate #6
+(``benchmarks/run.py --smoke``) fails CI unless the floor-autotuned cell
+stays within ``EPSILON_BITS`` of true-random entropy at
+``THROUGHPUT_FLOOR``x its modeled throughput.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import BENCH_DATA_DIR, N_CELLS, N_GENES, emit
+
+from repro.core.autotune import IOCostModel, recommend
+from repro.core.theory import distribution_entropy
+from repro.data import SATA_SSD, IOStats
+from repro.data.synth import generate_tahoe_like
+from repro.pipeline import Pipeline
+
+PR8_JSON = os.environ.get("BENCH_PR8_JSON", "BENCH_PR8.json")
+EPSILON_BITS = 0.1  # quasi must land within this of true-random entropy
+THROUGHPUT_FLOOR = 3.0  # ... at >= this x true-random modeled throughput
+
+M = 64
+# frontier grid: b capped at m (beyond it whole batches collapse to one
+# plate and no f in the grid recovers — fig4 covers that regime)
+GRID_B = (1, 4, 16, 64)
+GRID_F = (1, 4, 16, 64, 256)
+N_BATCHES = int(os.environ.get("BENCH_DIVERSITY_BATCHES", "96"))
+
+
+def _measure_cell(b: int, f: int) -> dict:
+    """Drain cell (b, f) cold-cache and report live-telemetry entropy +
+    counter-modeled throughput.
+
+    ``cache_bytes=0`` so runs/bytes reflect raw planned I/O (the regime the
+    Fig. 4 trade-off is about), and the drain is a FULL-FETCH multiple of
+    ``N_BATCHES`` so the ``div_*`` counters cover exactly the delivered
+    batches (``fetch`` materializes — and the monitor observes — all f
+    minibatches at once).
+    """
+    stats = IOStats()
+    pipe = (
+        Pipeline.from_uri(
+            "sharded-csr://" + BENCH_DATA_DIR, cache_bytes=0, iostats=stats
+        )
+        .strategy("block", block_size=b)
+        .batch(M, fetch_factor=f)
+        .seed(0)
+        .diversity(obs="plate")
+        .build()
+    )
+    n_target = -(-N_BATCHES // f) * f  # ceil to a fetch boundary
+    n = 0
+    for _ in iter(pipe):
+        n += 1
+        if n >= n_target:
+            break
+    pipe.close()
+    snap = stats.snapshot()
+    assert snap["div_batches"] == n, (
+        f"diversity counters saw {snap['div_batches']} batches, delivered {n}"
+    )
+    samples = n * M
+    t = SATA_SSD.seek_s * snap["runs"] + snap["bytes_read"] / SATA_SSD.bw_Bps
+    return {
+        "b": b,
+        "f": f,
+        "batches": n,
+        "entropy_mean": snap["div_entropy_sum"] / snap["div_batches"],
+        "entropy_min": snap["div_entropy_min"],
+        "sps_modeled": samples / max(t, 1e-12),
+        "runs_per_sample": snap["runs"] / max(1, snap["rows"]),
+        "bytes_read": snap["bytes_read"],
+    }
+
+
+def run_diversity(write_json: bool = True) -> dict:
+    generate_tahoe_like(BENCH_DATA_DIR, n_cells=N_CELLS, n_genes=N_GENES,
+                        seed=0)
+    # the class distribution the floor is set against, via the same obs
+    # column the monitors observe
+    probe = Pipeline.from_uri("sharded-csr://" + BENCH_DATA_DIR)._open()
+    plate = np.asarray(probe.obs_column("plate"))
+    _, counts = np.unique(plate, return_counts=True)
+    p = counts / counts.sum()
+    row_bytes = float(probe.avg_row_bytes)
+    n_rows = float(len(probe))
+    probe.release()
+    Hp = distribution_entropy(p)
+    K = int(len(p))
+    iid_deficit = (K - 1) / (2.0 * M * np.log(2.0))
+
+    # ---- the frontier: live-telemetry entropy x counter-modeled throughput
+    frontier = []
+    for b in GRID_B:
+        for f in GRID_F:
+            cell = _measure_cell(b, f)
+            frontier.append(cell)
+            emit(
+                f"diversity_frontier_b{b}_f{f}",
+                1e6 / max(cell["sps_modeled"], 1e-9),
+                f"H={cell['entropy_mean']:.3f};Hmin={cell['entropy_min']:.2f};"
+                f"sps_modeled={cell['sps_modeled']:.1f};"
+                f"runs_per_sample={cell['runs_per_sample']:.4f}",
+            )
+
+    # ---- the entropy-floor autotune picks the quasi-random cell.  The
+    # analytic SATA model mirrors the throughput model above (c0=0: no
+    # per-call overhead in the counter-modeled time base), so "max modeled
+    # sps subject to predicted E[H] >= floor" selects on the same frontier
+    # the gate measures.  Floor: within a twentieth of a bit of the best
+    # E[H] ANY m=64 sampler can reach (Thm 3.1) — an absolute SLO, not a
+    # hand-picked (b, f).
+    floor = Hp - iid_deficit - 0.05
+    cost = IOCostModel(
+        c0=0.0, c_seek=SATA_SSD.seek_s, c_byte=1.0 / SATA_SSD.bw_Bps,
+        row_bytes=row_bytes, n_rows=n_rows,
+    )
+    rec = recommend(
+        cost, batch_size=M, class_probs=p, entropy_floor=floor,
+        b_grid=GRID_B, f_grid=GRID_F,
+    )
+    emit("diversity_autotune_pick", 0.0,
+         f"b={rec.block_size};f={rec.fetch_factor};"
+         f"predicted_H={rec.predicted_entropy:.3f};floor={floor:.3f}")
+
+    by_cell = {(c["b"], c["f"]): c for c in frontier}
+    quasi = by_cell[(rec.block_size, rec.fetch_factor)]
+    random_cell = by_cell[(1, 1)]  # true-random: every row drawn independently
+
+    gap = random_cell["entropy_mean"] - quasi["entropy_mean"]
+    speedup = quasi["sps_modeled"] / max(random_cell["sps_modeled"], 1e-9)
+    ok_entropy = gap <= EPSILON_BITS
+    ok_speed = speedup >= THROUGHPUT_FLOOR
+    ok = ok_entropy and ok_speed
+    emit(
+        "diversity_gate", 0.0,
+        f"gap_bits={gap:.3f};eps={EPSILON_BITS};speedup={speedup:.1f}x;"
+        f"floor={THROUGHPUT_FLOOR}x;pass={ok}",
+    )
+
+    out = {
+        "bench": "diversity_observatory",
+        "fixture": {
+            "n_cells": int(n_rows),
+            "batch_size": M,
+            "n_batches": N_BATCHES,
+            "plates": K,
+            "Hp": Hp,
+            "iid_deficit": iid_deficit,
+        },
+        "frontier": [
+            {**c, "cell": f"b{c['b']}_f{c['f']}"} for c in frontier
+        ],
+        "entropy_floor": floor,
+        "autotuned": {
+            "b": rec.block_size,
+            "f": rec.fetch_factor,
+            "predicted_entropy": rec.predicted_entropy,
+            "rationale": rec.rationale,
+        },
+        "quasi": quasi,
+        "random": random_cell,
+        "entropy_gap_bits": gap,
+        "epsilon_bits": EPSILON_BITS,
+        "speedup": speedup,
+        "throughput_floor": THROUGHPUT_FLOOR,
+        "pass": bool(ok),
+    }
+    if write_json:
+        with open(PR8_JSON, "w") as fh:
+            json.dump(out, fh, indent=2)
+        print(f"# wrote {PR8_JSON}")
+    return out
+
+
+def run() -> dict:
+    return run_diversity(write_json=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -4,7 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows (shared ``emit`` helper) and a
 summary.  Individual benches: ``python -m benchmarks.bench_fig2_throughput``.
 Environment knobs: BENCH_N_CELLS (default 150000), BENCH_MEASURE_S (1.5),
 BENCH_SKIP (comma-list: fig2,fig3,fig4,fig5,table2,roofline,kernels,
-autotune,adaptive,resilience).
+autotune,adaptive,resilience,diversity).
 
 ``--smoke`` runs ONLY the fast CI gates on a tiny fixture:
 
@@ -30,7 +30,12 @@ autotune,adaptive,resilience).
    transient GET failures + a heavy latency tail, real scaled sleeps):
    the no-retry control arm must FAIL the epoch, retries must hold
    >= 0.7x fault-free wall-clock throughput, and hedged reads must cut
-   p95 per-fetch time below 0.9x retry-only's.
+   p95 per-fetch time below 0.9x retry-only's;
+6. the diversity observatory -> ``BENCH_PR8.json`` (the Fig. 4
+   entropy-vs-throughput frontier measured from the LIVE ``div_*``
+   IOStats telemetry): the ``entropy_floor``-autotuned quasi-random
+   ``(b, f)`` must land within 0.1 bits of true-random entropy at >= 3x
+   its counter-modeled throughput.
 """
 from __future__ import annotations
 
@@ -54,6 +59,7 @@ def smoke() -> int:
     os.environ.setdefault("BENCH_ASYNC_BATCHES", "96")
     os.environ.setdefault("BENCH_CLOUD_BATCHES", "16")
     os.environ.setdefault("BENCH_PARITY_BATCHES", "64")
+    os.environ.setdefault("BENCH_DIVERSITY_BATCHES", "96")
     print("name,us_per_call,derived")
     from benchmarks import bench_fig2_throughput
 
@@ -98,7 +104,17 @@ def smoke() -> int:
         f"{g['hedge_p95_ratio']:.2f}x retry-only "
         f"(ceil {g['hedge_p95_fraction']}x) -> {'OK' if rok else 'FAIL'}"
     )
-    return 0 if (ok and cok and pok and aok and rok) else 1
+    from benchmarks import bench_diversity
+
+    div = bench_diversity.run_diversity(write_json=True)
+    dok = div["pass"]
+    print(
+        f"# smoke: diversity autotuned (b={div['autotuned']['b']},"
+        f"f={div['autotuned']['f']}) gap {div['entropy_gap_bits']:.3f} bits "
+        f"(eps {div['epsilon_bits']}) at {div['speedup']:.1f}x random "
+        f"(floor {div['throughput_floor']}x) -> {'OK' if dok else 'FAIL'}"
+    )
+    return 0 if (ok and cok and pok and aok and rok and dok) else 1
 
 
 def main() -> None:
@@ -148,6 +164,10 @@ def main() -> None:
         from benchmarks import bench_resilience
 
         bench_resilience.run()
+    if "diversity" not in skip:
+        from benchmarks import bench_diversity
+
+        bench_diversity.run()
 
     print(f"# total bench time: {time.time()-t_all:.0f}s")
 

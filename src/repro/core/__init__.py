@@ -11,7 +11,7 @@ Public API:
 - :mod:`repro.core.autotune` — (b, f) recommendation from probed I/O costs.
 """
 from .callbacks import Callbacks, MultiIndexable, sizeof_indexable
-from .dataset import LoaderState, ScDataset
+from .dataset import DiversityMonitor, LoaderState, ScDataset
 from .prefetch import PrefetchPool, prefetch_iterator
 from .sampling import (
     BlockShuffling,
@@ -26,6 +26,7 @@ from .sampling import (
 __all__ = [
     "ScDataset",
     "LoaderState",
+    "DiversityMonitor",
     "Callbacks",
     "MultiIndexable",
     "sizeof_indexable",

@@ -220,6 +220,7 @@ def model_drift(
     *,
     base: Optional[dict] = None,
     ra_shifts: int = 0,
+    expected_entropy: Optional[float] = None,
 ) -> float:
     """How far live :class:`~repro.data.iostats.IOStats` sit from ``model``.
 
@@ -242,6 +243,17 @@ def model_drift(
     forces a re-probe on its own (``ScDataset.autotune`` passes the delta
     against its probe-time mark).
 
+    ``expected_entropy`` — the E[H] prediction (bits) the current
+    ``(b, f)`` pick was made under (:attr:`Recommendation.predicted_entropy`).
+    When given and the stats carry live diversity observations
+    (``div_batches`` from a ``diversity_obs`` loader), the SHORTFALL of the
+    measured mean batch entropy below the prediction contributes directly
+    in bits — the §3.4 model over-promising diversity (a drifted label
+    distribution, a degenerate epoch order) is drift exactly like a
+    mis-fitted seek cost, and at the shared 0.5 default threshold half a
+    bit of lost diversity forces a re-probe on its own.  Delivering MORE
+    entropy than predicted is not drift (the bounds are one-sided).
+
     ``base`` — a ``stats.snapshot()`` taken when the model was fitted.
     When given, drift is measured on the counter DELTAS since then, so a
     regime change late in a long run is not diluted by hours of
@@ -258,6 +270,8 @@ def model_drift(
     runs, rows = snap["runs"], snap["rows"]
     hits, misses = snap["cache_hits"], snap["cache_misses"]
     adm_b, adm_r = snap["adm_bypassed"], snap["adm_rejected"]
+    div_b = snap.get("div_batches", 0)
+    div_s = snap.get("div_entropy_sum", 0.0)
     if base is not None:
         runs -= base.get("runs", 0)
         rows -= base.get("rows", 0)
@@ -265,7 +279,11 @@ def model_drift(
         misses -= base.get("cache_misses", 0)
         adm_b -= base.get("adm_bypassed", 0)
         adm_r -= base.get("adm_rejected", 0)
+        div_b -= base.get("div_batches", 0)
+        div_s -= base.get("div_entropy_sum", 0.0)
     drifts = [0.0]
+    if expected_entropy is not None and div_b > 0:
+        drifts.append(max(0.0, float(expected_entropy) - div_s / div_b))
     if rows > 0 and model.runs_per_sample is not None:
         ref = max(float(model.runs_per_sample), 1e-9)
         drifts.append(abs(runs / rows - ref) / ref)
@@ -296,6 +314,11 @@ class Recommendation:
     # when per-call overhead + streaming dominate (nothing to overlap).
     io_workers: int = 1
     readahead: Any = 0  # 0 | "auto"
+    # predicted E[H] (bits) of the chosen cell under the §3.4 model:
+    # H_ref - (K-1)/(2 s_eff ln2), where H_ref is the class distribution's
+    # entropy (log2 K uniform fallback).  The runtime diversity monitor
+    # cross-checks measured entropy against this through model_drift.
+    predicted_entropy: Optional[float] = None
     # the fitted model this pick came from (drift checks re-measure against
     # it); filled by the Pipeline/ScDataset autotune paths
     model: Optional[IOCostModel] = dataclasses.field(default=None, repr=False)
@@ -355,12 +378,25 @@ def recommend(
     class_probs: Optional[Sequence[float]] = None,
     mem_budget_bytes: float = 2e9,
     entropy_slack_bits: float = 0.1,
+    entropy_floor: Optional[float] = None,
     b_grid: Sequence[int] = (1, 4, 16, 64, 256, 1024),
     f_grid: Sequence[int] = (1, 4, 16, 64, 256, 1024),
     cache_hit_threshold: float = 0.05,
     throughput_slack: float = 0.0,
 ) -> Recommendation:
     """Pick (b, f) maximizing modeled throughput under memory + diversity limits.
+
+    Diversity-SLO aware: ``entropy_floor`` (bits) turns the paper's
+    quality/throughput trade-off into a one-knob target.  Each cell's
+    predicted E[H] under the §3.4 model is ``H_ref - (K-1)/(2 s_eff ln2)``
+    with ``s_eff = min(m, f*m/b)`` — ``H_ref`` is the entropy of
+    ``class_probs`` when given, else the uniform ``log2 K`` — and cells
+    whose prediction falls below the floor are infeasible.  Among the
+    survivors the usual selection applies (max modeled samples/sec, or the
+    leanest buffer within ``throughput_slack`` of it), so the pick is the
+    leanest/fastest geometry that still CLEARS the floor.  A floor no cell
+    can clear (it exceeds even the IID prediction for this m) raises with
+    the best achievable value in the message.
 
     Planner-aware: when ``cost`` came from :func:`probe_collection` and shows
     the block cache absorbing redraws (``hit_rate >= cache_hit_threshold``),
@@ -387,6 +423,9 @@ def recommend(
         from .theory import distribution_entropy
 
         K = int(np.count_nonzero(np.asarray(class_probs)))
+        h_ref = distribution_entropy(class_probs)
+    else:
+        h_ref = float(np.log2(max(1, K)))
     reserve = 0.0
     if cost.hit_rate >= cache_hit_threshold and cost.cache_bytes > 0:
         reserve = min(float(cost.cache_bytes), 0.5 * mem_budget_bytes)
@@ -405,8 +444,18 @@ def recommend(
             deficit = (K - 1) / (2.0 * s_eff * _LN2)
             if deficit - iid_deficit > entropy_slack_bits:
                 continue
+            if entropy_floor is not None and h_ref - deficit < entropy_floor:
+                continue  # predicted E[H] below the diversity SLO
             feasible.append((b, f, cost.samples_per_sec(m, f, b), buffer_bytes, deficit))
     if not feasible:
+        if entropy_floor is not None and h_ref - iid_deficit < entropy_floor:
+            raise ValueError(
+                f"entropy_floor {entropy_floor:.3f} bits is unreachable at "
+                f"m={m}: even IID sampling predicts only "
+                f"{h_ref - iid_deficit:.3f} bits (H_ref {h_ref:.3f} minus the "
+                f"Thm 3.1 deficit {iid_deficit:.3f}); lower the floor or "
+                "raise batch_size"
+            )
         raise ValueError("no (b, f) satisfies the memory/diversity constraints")
     best_sps = max(c[2] for c in feasible)
     if throughput_slack > 0:
@@ -430,6 +479,11 @@ def recommend(
     io_workers, readahead = recommend_concurrency(
         cost, batch_size=m, fetch_factor=f, block_size=b
     )
+    floor_note = (
+        f", predicted E[H] {h_ref - deficit:.3f} >= floor {entropy_floor:.3f}"
+        if entropy_floor is not None
+        else ""
+    )
     return Recommendation(
         block_size=b,
         fetch_factor=f,
@@ -439,12 +493,13 @@ def recommend(
         cache_reserved_bytes=reserve,
         io_workers=io_workers,
         readahead=readahead,
+        predicted_entropy=h_ref - deficit,
         rationale=(
             f"b={b},f={f}: buffer {buffer_bytes/1e6:.1f}MB <= "
             f"{buffer_budget/1e6:.0f}MB, entropy deficit "
             f"{deficit:.3f} bits (IID {iid_deficit:.3f}), modeled {sps:.0f} samp/s"
             f", io_workers={io_workers}, readahead={readahead!r}"
-            f"{planner}"
+            f"{floor_note}{planner}"
         ),
     )
 
@@ -455,7 +510,9 @@ def recommend_from(
     batch_size: int = 64,
     budget: float = 2e9,
     num_classes: int = 14,
+    class_probs: Optional[Sequence[float]] = None,
     entropy_slack_bits: float = 0.1,
+    entropy_floor: Optional[float] = None,
     throughput_slack: float = 0.0,
 ) -> Recommendation:
     """:func:`recommend` from an already-fitted model, with the fit attached
@@ -466,8 +523,10 @@ def recommend_from(
         model,
         batch_size=batch_size,
         num_classes=num_classes,
+        class_probs=class_probs,
         mem_budget_bytes=budget,
         entropy_slack_bits=entropy_slack_bits,
+        entropy_floor=entropy_floor,
         throughput_slack=throughput_slack,
     )
     rec.model = model
@@ -482,7 +541,9 @@ def fit_and_recommend(
     batch_size: int = 64,
     budget: float = 2e9,
     num_classes: int = 14,
+    class_probs: Optional[Sequence[float]] = None,
     entropy_slack_bits: float = 0.1,
+    entropy_floor: Optional[float] = None,
     throughput_slack: float = 0.0,
 ) -> Recommendation:
     """Probe ``col`` through the planner and recommend in one call."""
@@ -491,6 +552,8 @@ def fit_and_recommend(
         batch_size=batch_size,
         budget=budget,
         num_classes=num_classes,
+        class_probs=class_probs,
         entropy_slack_bits=entropy_slack_bits,
+        entropy_floor=entropy_floor,
         throughput_slack=throughput_slack,
     )

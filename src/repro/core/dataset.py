@@ -28,7 +28,75 @@ import numpy as np
 from .callbacks import Callbacks, MultiIndexable, default_batch_callback
 from .sampling import BlockShuffling, SamplingStrategy, epoch_rng
 
-__all__ = ["ScDataset", "LoaderState"]
+__all__ = ["ScDataset", "LoaderState", "DiversityMonitor"]
+
+
+class DiversityMonitor:
+    """Streaming per-batch label-entropy telemetry over one obs column.
+
+    The live half of the §3.4 theory: ``observe`` computes the plug-in
+    entropy (bits) of one minibatch's labels — a single ``bincount`` over
+    pre-resolved integer codes, no batch data retained — and records it
+    into the collection's :class:`~repro.data.iostats.IOStats` diversity
+    counters (``div_batches`` / ``div_entropy_sum`` / ``div_entropy_min``)
+    when the collection carries stats.  Pure observation: it never touches
+    the delivered stream, and an observation made inside a speculative
+    duplicate fetch lands in the ``spec_*`` mirrors via the stats'
+    deferred capture, exactly like the I/O counters.
+
+    Codes resolve lazily on first observation (``np.unique`` over the full
+    obs column — one pass, cached), so building a loader with
+    ``diversity_obs`` costs nothing until it iterates.
+    """
+
+    def __init__(self, collection: Any, obs: str):
+        if not hasattr(collection, "obs_column"):
+            raise ValueError(
+                f"diversity_obs={obs!r} needs a collection with obs columns "
+                f"(obs_column); got {type(collection).__name__}"
+            )
+        self.obs = str(obs)
+        self._collection = collection
+        self._codes: Optional[np.ndarray] = None  # guarded-by: _lock
+        self._num_classes = 0  # guarded-by: _lock — set with _codes
+        # concurrent PrefetchPool workers may race the lazy resolve; the
+        # column pass is idempotent but large, so do it exactly once
+        self._lock = threading.Lock()
+
+    def _resolve(self) -> np.ndarray:
+        codes = self._codes  # unlocked-ok: racy fast path on an immutable-once-cached value
+        if codes is not None:
+            return codes
+        with self._lock:
+            if self._codes is None:
+                values = np.asarray(self._collection.obs_column(self.obs))
+                uniq, inv = np.unique(values, return_inverse=True)
+                self._num_classes = int(len(uniq))
+                self._codes = inv.astype(np.int64, copy=False)
+            return self._codes
+
+    @property
+    def num_classes(self) -> int:
+        self._resolve()
+        return self._num_classes  # unlocked-ok: immutable once _resolve returned
+
+    def class_probs(self) -> np.ndarray:
+        """Empirical label distribution p over the whole collection — the
+        H(p) reference the entropy-floor autotune predicts against."""
+        codes = self._resolve()
+        counts = np.bincount(codes, minlength=self._num_classes)  # unlocked-ok: immutable once _resolve returned
+        return counts / max(1, len(codes))
+
+    def observe(self, global_rows: np.ndarray) -> float:
+        """Record (and return) the label entropy of one delivered batch."""
+        from .theory import batch_entropy
+
+        codes = self._resolve()
+        h = batch_entropy(codes[np.asarray(global_rows)], self._num_classes)  # unlocked-ok: immutable once _resolve returned
+        stats = getattr(self._collection, "iostats", None)
+        if stats is not None and hasattr(stats, "record_diversity"):
+            stats.record_diversity(h)
+        return h
 
 
 @dataclasses.dataclass
@@ -91,6 +159,7 @@ class ScDataset:
         prefetch_callback: Optional[Callable] = None,
         sort_fetch_indices: bool = True,
         cross_epoch_prefetch: bool = False,
+        diversity_obs: Optional[str] = None,
     ):
         if batch_size <= 0 or fetch_factor <= 0:
             raise ValueError("batch_size and fetch_factor must be positive")
@@ -106,6 +175,11 @@ class ScDataset:
         self.drop_last = bool(drop_last)
         self.sort_fetch_indices = bool(sort_fetch_indices)
         self.cross_epoch_prefetch = bool(cross_epoch_prefetch)
+        self.diversity_obs = diversity_obs
+        self._div = (
+            DiversityMonitor(collection, diversity_obs)
+            if diversity_obs is not None else None
+        )
         if callbacks is not None and any(
             cb is not None
             for cb in (fetch_callback, fetch_transform, batch_callback,
@@ -128,6 +202,7 @@ class ScDataset:
         self._tuned_model = None  # guarded-by: external — autotune caller's
         self._tuned_base = None  # guarded-by: external — IOStats probe base
         self._tuned_ra_mark = 0  # guarded-by: external — ra depth-shift mark
+        self._tuned_entropy = None  # guarded-by: external — predicted E[H] of the last rec
 
     # ------------------------------------------------------------------ sizes
     def __len__(self) -> int:
@@ -237,6 +312,7 @@ class ScDataset:
             "readahead_auto": bool(getattr(col, "readahead_auto", False)),
             "admission": getattr(col, "admission", None),
             "cross_epoch_prefetch": self.cross_epoch_prefetch,
+            "diversity_obs": self.diversity_obs,
             "fingerprint": self.spec_fingerprint,
         }
 
@@ -249,6 +325,7 @@ class ScDataset:
         num_classes: int = 14,
         entropy_slack_bits: float = 0.1,
         throughput_slack: float = 0.0,
+        entropy_floor: Optional[float] = None,
         probes: int = 3,
         probe_rows: int = 512,
         apply: bool = False,
@@ -269,6 +346,15 @@ class ScDataset:
         ``fetch_factor`` always, and the strategy's ``block_size`` when it
         has one.  Apply only at an epoch boundary — it changes the stream.
         Returns the :class:`~repro.core.autotune.Recommendation`.
+
+        With ``entropy_floor`` set (bits), the recommendation is the leanest
+        feasible cell whose PREDICTED E[H] clears the floor (§3.4 model);
+        when the loader has a :class:`DiversityMonitor`, its empirical class
+        distribution replaces the uniform ``num_classes`` prior, and the
+        predicted entropy of the adopted recommendation feeds back into the
+        drift check — measured batch entropy (``div_*`` counters) falling
+        short of the prediction counts as model drift and triggers a
+        re-probe on the next call.
         """
         from .autotune import model_drift, probe_collection, recommend_from
 
@@ -289,6 +375,7 @@ class ScDataset:
             col.iostats,
             base=self._tuned_base,
             ra_shifts=max(0, ra_now - self._tuned_ra_mark),
+            expected_entropy=self._tuned_entropy,
         ) > drift_threshold:
             model = probe_collection(col, probes=probes, probe_rows=probe_rows)
             self._tuned_model = model
@@ -305,8 +392,13 @@ class ScDataset:
             num_classes=num_classes,
             entropy_slack_bits=entropy_slack_bits,
             throughput_slack=throughput_slack,
+            class_probs=(
+                self._div.class_probs() if self._div is not None else None
+            ),
+            entropy_floor=entropy_floor,
         )
         if apply:
+            self._tuned_entropy = rec.predicted_entropy
             self.fetch_factor = int(rec.fetch_factor)
             if hasattr(self.strategy, "block_size"):
                 self.strategy = dataclasses.replace(
@@ -419,6 +511,10 @@ class ScDataset:
             rows = perm[j * m : (j + 1) * m]
             if len(rows) == 0:
                 continue
+            if self._div is not None:
+                # global row ids of this minibatch — telemetry only, the
+                # delivered stream is untouched (see DiversityMonitor)
+                self._div.observe(sorted_idx[rows])
             batch = cbs.batch_callback(fetched, rows)
             batches.append(cbs.batch_transform(batch))
         return batches

@@ -28,13 +28,21 @@ _LN2 = math.log(2.0)
 
 
 def plugin_entropy(counts: np.ndarray) -> float:
-    """H(C) = -sum (C_k/m) log2 (C_k/m)  — Eq. (1). Zero counts contribute 0."""
+    """H(C) = -sum (C_k/m) log2 (C_k/m)  — Eq. (1). Zero counts contribute 0.
+
+    An all-zero (or empty) histogram has entropy 0 by convention; negative
+    counts are rejected — they have no histogram meaning and would
+    otherwise poison the normalization silently.
+    """
     counts = np.asarray(counts, dtype=np.float64)
+    if counts.size and float(counts.min()) < 0:
+        raise ValueError("plugin_entropy: counts must be non-negative")
     m = counts.sum()
     if m <= 0:
         return 0.0
     p = counts[counts > 0] / m
-    return float(-(p * np.log2(p)).sum())
+    # max() also normalizes the single-class -0.0 (sum of -1*log2(1))
+    return max(0.0, float(-(p * np.log2(p)).sum()))
 
 
 def distribution_entropy(p: Sequence[float]) -> float:
@@ -46,6 +54,8 @@ def distribution_entropy(p: Sequence[float]) -> float:
 
 def expected_entropy_large_f(p: Sequence[float], m: int) -> float:
     """Theorem 3.1: E[H(C)] = H(p) - (K-1)/(2 m ln 2) + O(m^-2)."""
+    if m <= 0:
+        raise ValueError(f"batch size m must be positive, got {m}")
     p = np.asarray(p, dtype=np.float64)
     K = int((p > 0).sum())
     return distribution_entropy(p) - (K - 1) / (2.0 * m * _LN2)
@@ -53,6 +63,8 @@ def expected_entropy_large_f(p: Sequence[float], m: int) -> float:
 
 def expected_entropy_f1(p: Sequence[float], m: int, b: int) -> float:
     """Theorem 3.2: with f=1 the effective sample size is B = m/b."""
+    if m <= 0 or b <= 0:
+        raise ValueError(f"m and b must be positive, got m={m}, b={b}")
     p = np.asarray(p, dtype=np.float64)
     K = int((p > 0).sum())
     B = m / b
@@ -63,18 +75,35 @@ def entropy_bounds(p: Sequence[float], m: int, b: int) -> tuple[float, float]:
     """Corollary 3.3 sandwich bound, any f >= 1.
 
     H(p) - (K-1) b / (2 m ln2)  <=  E[H(C)]  <=  H(p) - (K-1)/(2 m ln2)
+
+    Both bounds are clamped at 0 (entropy cannot be negative): in the
+    m < K regime even the UPPER expansion term goes negative, and clamping
+    only the lower bound would invert the ordering.  Clamping both
+    preserves ``lo <= hi`` because the raw expressions already satisfy it
+    for every b >= 1.
     """
+    if m <= 0 or b <= 0:
+        raise ValueError(f"m and b must be positive, got m={m}, b={b}")
     p = np.asarray(p, dtype=np.float64)
     K = int((p > 0).sum())
     H = distribution_entropy(p)
     lo = H - (K - 1) * b / (2.0 * m * _LN2)
     hi = H - (K - 1) / (2.0 * m * _LN2)
-    return max(0.0, lo), hi
+    return max(0.0, lo), max(0.0, hi)
 
 
 def batch_entropy(labels: np.ndarray, num_classes: Optional[int] = None) -> float:
-    """Plug-in entropy of one minibatch's label histogram."""
+    """Plug-in entropy of one minibatch's label histogram.
+
+    ``labels`` are non-negative integer class codes (an integer-valued
+    float array is accepted and cast).  An empty batch has entropy 0 —
+    ``np.bincount`` would reject the default-float64 empty array outright.
+    """
     labels = np.asarray(labels)
+    if labels.size == 0:
+        return 0.0
+    if labels.dtype.kind not in "iu":
+        labels = labels.astype(np.int64)
     counts = np.bincount(labels, minlength=num_classes or 0)
     return plugin_entropy(counts)
 
@@ -96,15 +125,22 @@ def simulate_expected_entropy(
 ) -> tuple[float, float]:
     """Monte-Carlo E[H(C)] under the paper's sampling model (§3.4).
 
-    Model: the buffer holds f*B blocks (B = m/b) drawn IID from Cat(p), each
-    contributing b same-label cells; a minibatch is m cells drawn uniformly
-    without replacement from the f*m-cell buffer.
+    Model: the buffer holds f*B blocks (B = ceil(m/b)) drawn IID from
+    Cat(p), each contributing b same-label cells; a minibatch is m cells
+    drawn uniformly without replacement from the buffer.  B rounds UP so
+    the buffer always holds at least m cells — with floor division a
+    non-dividing (m, b) pair (e.g. m=10, b=3, f=1) left a buffer smaller
+    than the batch and the without-replacement draw raised.
     """
+    if m <= 0 or b <= 0 or f <= 0:
+        raise ValueError(f"m, b, f must be positive, got m={m}, b={b}, f={f}")
+    if trials <= 0:
+        raise ValueError(f"trials must be positive, got {trials}")
     rng = rng or np.random.default_rng(0)
     p = np.asarray(p, dtype=np.float64)
     p = p / p.sum()
     K = len(p)
-    B = max(1, m // b)
+    B = max(1, -(-m // b))
     ents = np.empty(trials)
     for t in range(trials):
         block_labels = rng.choice(K, size=f * B, p=p)

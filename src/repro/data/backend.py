@@ -1280,6 +1280,16 @@ class PlannedCollection:
 
     def stats(self) -> dict:
         out = {"io": self.iostats.snapshot(), "cache": self.cache.snapshot()}
+        snap = out["io"]
+        if snap.get("div_batches", 0) > 0:
+            # diversity observatory (§3.4): derived view over the div_*
+            # counters — mean/min batch entropy in bits, valid only while
+            # batches have been observed (a DiversityMonitor is attached)
+            out["diversity"] = {
+                "batches": snap["div_batches"],
+                "entropy_mean": snap["div_entropy_sum"] / snap["div_batches"],
+                "entropy_min": snap["div_entropy_min"],
+            }
         if self._ra_controller is not None:
             out["readahead"] = self._ra_controller.snapshot()
         if self._sketch is not None:

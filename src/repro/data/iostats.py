@@ -67,6 +67,9 @@ class PendingIO:
     hedges_won: int = 0  # guarded-by: _lock
     breaker_opens: int = 0  # guarded-by: _lock
     breaker_closes: int = 0  # guarded-by: _lock
+    div_batches: int = 0  # guarded-by: _lock
+    div_entropy_sum: float = 0.0  # guarded-by: _lock
+    div_entropy_min: float = 0.0  # guarded-by: _lock — valid only when div_batches > 0
     wall_s: float = 0.0  # guarded-by: _lock
     modeled_s: float = 0.0  # guarded-by: _lock
     request_wait_s: float = 0.0  # guarded-by: _lock
@@ -77,6 +80,12 @@ class PendingIO:
         # buffer concurrently (IOStats.borrowed_pending); not a field, so
         # asdict/eq are unaffected
         self._lock = threading.Lock()
+
+
+#: counters :meth:`IOStats.commit` merges by MIN instead of sum, mapped to
+#: the gate counter that marks them valid (min over zero observations is
+#: meaningless, so a buffer contributes its minimum only when its gate > 0)
+_MIN_MERGE = {"div_entropy_min": "div_batches"}
 
 
 @dataclasses.dataclass
@@ -120,6 +129,18 @@ class IOStats:
     data — under a seeded fault profile delivered epochs stay bitwise
     identical to the fault-free run; these counters are how that recovery
     work is made visible.
+
+    The diversity counters are the loader's live §3.4 observatory:
+    ``div_batches`` counts minibatches whose label entropy was observed
+    (a :class:`~repro.core.dataset.ScDataset` built with ``diversity_obs``
+    calls :meth:`record_diversity` once per materialized batch),
+    ``div_entropy_sum`` accumulates their per-batch plug-in entropies in
+    bits (mean = sum / batches), and ``div_entropy_min`` tracks the worst
+    batch seen — meaningful only while ``div_batches > 0``, and merged by
+    MIN (not sum) in :meth:`commit`.  Pure observation: recording entropy
+    never changes delivered bytes, and speculative duplicate fetches'
+    observations land in the ``spec_*`` mirrors via the same deferred
+    capture as every other counter.
     """
 
     calls: int = 0  # guarded-by: _lock
@@ -137,6 +158,9 @@ class IOStats:
     hedges_won: int = 0  # guarded-by: _lock — hedges that beat the primary
     breaker_opens: int = 0  # guarded-by: _lock — shard breakers tripped open
     breaker_closes: int = 0  # guarded-by: _lock — breakers closed by a probe
+    div_batches: int = 0  # guarded-by: _lock — batches with observed entropy
+    div_entropy_sum: float = 0.0  # guarded-by: _lock — summed batch bits
+    div_entropy_min: float = 0.0  # guarded-by: _lock — worst batch; valid iff div_batches > 0
     request_wait_s: float = 0.0  # guarded-by: _lock — summed, overlappable
     retry_wait_s: float = 0.0  # guarded-by: _lock — summed backoff sleeps
     wall_s: float = 0.0  # guarded-by: _lock
@@ -159,6 +183,9 @@ class IOStats:
     spec_hedges_won: int = 0  # guarded-by: _lock
     spec_breaker_opens: int = 0  # guarded-by: _lock
     spec_breaker_closes: int = 0  # guarded-by: _lock
+    spec_div_batches: int = 0  # guarded-by: _lock
+    spec_div_entropy_sum: float = 0.0  # guarded-by: _lock
+    spec_div_entropy_min: float = 0.0  # guarded-by: _lock
     spec_request_wait_s: float = 0.0  # guarded-by: _lock
     spec_retry_wait_s: float = 0.0  # guarded-by: _lock
     spec_wall_s: float = 0.0  # guarded-by: _lock
@@ -283,6 +310,34 @@ class IOStats:
                 self.breaker_opens += breaker_opens
                 self.breaker_closes += breaker_closes
 
+    def record_diversity(self, entropy_bits: float) -> None:
+        """Account one delivered minibatch's label entropy (bits).
+
+        Called by :class:`~repro.core.dataset.ScDataset` once per batch it
+        materializes when built with ``diversity_obs`` — a streaming
+        histogram, no batch data is retained.  ``div_entropy_min`` is the
+        running worst batch and only meaningful while ``div_batches > 0``
+        (an entropy of 0.0 is a legal observation — a single-class batch —
+        so "no observations yet" is gated on the count, not the value).
+        Honors :meth:`deferred` capture like :meth:`record`, so a dropped
+        speculative duplicate's observations land in the ``spec_*``
+        mirrors instead of double-counting delivered batches.
+        """
+        h = float(entropy_bits)
+        pend: Optional[PendingIO] = getattr(self._tl, "pending", None)
+        if pend is not None:
+            with pend._lock:
+                if pend.div_batches == 0 or h < pend.div_entropy_min:
+                    pend.div_entropy_min = h
+                pend.div_batches += 1
+                pend.div_entropy_sum += h
+        else:
+            with self._lock:
+                if self.div_batches == 0 or h < self.div_entropy_min:
+                    self.div_entropy_min = h
+                self.div_batches += 1
+                self.div_entropy_sum += h
+
     def sleep_for(self, runs: int, bytes_read: int) -> None:
         """Sleep the simulated latency of one physical read, in the reading
         thread — concurrent reads overlap their modeled latency exactly like
@@ -336,9 +391,21 @@ class IOStats:
         # new counters added there are committed automatically
         prefix = "spec_" if speculative else ""
         with self._lock:
+            # min-merged counters need the target's PRE-merge validity gate:
+            # div_batches may be summed into the target before the loop
+            # reaches div_entropy_min, so capture "had observations" first
+            had_div = getattr(self, prefix + "div_batches") > 0
             for f in dataclasses.fields(PendingIO):
                 name = prefix + f.name
-                setattr(self, name, getattr(self, name) + getattr(pend, f.name))
+                if f.name in _MIN_MERGE:
+                    # a minimum, not a sum: only meaningful when the buffer
+                    # actually observed batches (its gate counter is > 0)
+                    if getattr(pend, _MIN_MERGE[f.name]) > 0:
+                        v = getattr(pend, f.name)
+                        cur = getattr(self, name)
+                        setattr(self, name, min(cur, v) if had_div else v)
+                else:
+                    setattr(self, name, getattr(self, name) + getattr(pend, f.name))
 
     def reset(self) -> None:
         with self._lock:
@@ -348,6 +415,8 @@ class IOStats:
             self.adm_bypassed = self.adm_rejected = 0
             self.retries = self.hedges_issued = self.hedges_won = 0
             self.breaker_opens = self.breaker_closes = 0
+            self.div_batches = 0
+            self.div_entropy_sum = self.div_entropy_min = 0.0
             self.wall_s = self.modeled_s = self.request_wait_s = 0.0
             self.retry_wait_s = 0.0
             self.spec_calls = self.spec_runs = self.spec_rows = 0
@@ -358,6 +427,8 @@ class IOStats:
             self.spec_retries = self.spec_hedges_issued = 0
             self.spec_hedges_won = 0
             self.spec_breaker_opens = self.spec_breaker_closes = 0
+            self.spec_div_batches = 0
+            self.spec_div_entropy_sum = self.spec_div_entropy_min = 0.0
             self.spec_request_wait_s = self.spec_retry_wait_s = 0.0
             self.spec_wall_s = self.spec_modeled_s = 0.0
 
@@ -390,6 +461,9 @@ class IOStats:
                 "hedges_won": self.hedges_won,
                 "breaker_opens": self.breaker_opens,
                 "breaker_closes": self.breaker_closes,
+                "div_batches": self.div_batches,
+                "div_entropy_sum": self.div_entropy_sum,
+                "div_entropy_min": self.div_entropy_min,
                 "request_wait_s": self.request_wait_s,
                 "retry_wait_s": self.retry_wait_s,
                 "wall_s": self.wall_s,
@@ -409,6 +483,9 @@ class IOStats:
                 "spec_hedges_won": self.spec_hedges_won,
                 "spec_breaker_opens": self.spec_breaker_opens,
                 "spec_breaker_closes": self.spec_breaker_closes,
+                "spec_div_batches": self.spec_div_batches,
+                "spec_div_entropy_sum": self.spec_div_entropy_sum,
+                "spec_div_entropy_min": self.spec_div_entropy_min,
                 "spec_request_wait_s": self.spec_request_wait_s,
                 "spec_retry_wait_s": self.spec_retry_wait_s,
                 "spec_wall_s": self.spec_wall_s,

@@ -35,6 +35,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Iterator, Optional
 
+import numpy as np
+
 from repro.core.autotune import Recommendation, fit_and_recommend
 from repro.core.dataset import LoaderState, ScDataset
 from repro.core.prefetch import PrefetchPool
@@ -266,6 +268,28 @@ class Pipeline:
             kw["breaker_cooldown_s"] = float(breaker_cooldown_s)
         return self._replace(**kw)
 
+    def diversity(
+        self,
+        *,
+        obs: Optional[str] = None,
+        entropy_floor: Optional[float] = None,
+    ) -> "Pipeline":
+        """Diversity observatory (paper §3.4): ``obs`` names the obs column
+        whose per-batch label entropy the built loader streams into the
+        collection's IOStats ``div_*`` counters (a
+        :class:`~repro.core.dataset.DiversityMonitor`; pure telemetry, the
+        delivered stream is bitwise unchanged).  ``entropy_floor`` (bits)
+        records the autotune target: :meth:`autotune` will only consider
+        ``(block_size, fetch_factor)`` cells whose PREDICTED E[H] clears it.
+        Both content-free — the fingerprint is invariant.  Set-if-passed,
+        like :meth:`prefetch`."""
+        kw: dict = {}
+        if obs is not None:
+            kw["diversity_obs"] = str(obs)
+        if entropy_floor is not None:
+            kw["entropy_floor"] = float(entropy_floor)
+        return self._replace(**kw)
+
     # ----------------------------------------------------------- autotune
     def autotune(
         self,
@@ -276,6 +300,7 @@ class Pipeline:
         num_classes: int = 14,
         entropy_slack_bits: float = 0.1,
         throughput_slack: float = 0.0,
+        entropy_floor: Optional[float] = None,
         apply: bool = True,
     ) -> "Pipeline":
         """Probe the collection, recommend ``(block_size, fetch_factor)``,
@@ -291,7 +316,21 @@ class Pipeline:
         (``last_recommendation``) and handed to the built pipeline, which
         re-probes on demand when live IOStats drift from the fitted model
         (:meth:`DataPipeline.check_drift`).
+
+        ``entropy_floor`` (bits) turns the entropy *slack* into an absolute
+        SLO: only cells whose predicted E[H] (§3.4 bias expansion) clears
+        the floor are feasible, and the floor is recorded in the spec
+        (content-free) so a rebuilt pipeline re-tunes against the same
+        target.  With ``.diversity(obs=...)`` set, the probe derives the
+        empirical class distribution from that obs column — the prediction
+        then uses the data's real H(p) rather than a uniform
+        ``num_classes`` prior.  Raises when no cell on the grid can reach
+        the floor (the error names the best achievable).
         """
+        if entropy_floor is not None:
+            # record the target; content-free, so the fingerprint holds
+            self._replace(entropy_floor=float(entropy_floor))
+        floor = self._spec.entropy_floor or None  # 0.0 = no floor
         # Probe a FRESH collection instance when we can (uri set): the probe
         # must not warm the cache / pollute the stats of the collection the
         # built pipeline will iterate.  In-process collections are probed
@@ -308,6 +347,8 @@ class Pipeline:
                 num_classes=num_classes,
                 entropy_slack_bits=entropy_slack_bits,
                 throughput_slack=throughput_slack,
+                class_probs=_class_probs(col, self._spec.diversity_obs),
+                entropy_floor=floor,
             )
         finally:
             if own and hasattr(col, "release"):
@@ -385,6 +426,7 @@ class Pipeline:
             drop_last=s.drop_last,
             sort_fetch_indices=s.sort_fetch_indices,
             cross_epoch_prefetch=s.cross_epoch_prefetch,
+            diversity_obs=s.diversity_obs,
             **dataset_kw,
         )
         # no fingerprint for in-process collections (see DataPipeline.state)
@@ -394,6 +436,17 @@ class Pipeline:
             recommendation=getattr(self, "last_recommendation", None),
             owns_collection=self._owns_collection,
         )
+
+
+def _class_probs(collection: Any, obs: Optional[str]) -> Optional[np.ndarray]:
+    """Empirical label distribution of ``obs`` over the collection, or None
+    when no diversity column is configured — the H(p) the entropy-floor
+    autotune predicts against (same resolution a DiversityMonitor does)."""
+    if obs is None:
+        return None
+    values = np.asarray(collection.obs_column(obs))
+    _, counts = np.unique(values, return_counts=True)
+    return counts / counts.sum()
 
 
 def _open_from_spec(spec: DataSpec, iostats: Any = None) -> Any:
@@ -564,7 +617,8 @@ class DataPipeline:
         """Re-probe + re-recommend against the LIVE collection (cache warm,
         stats flowing).  Does not mutate the spec — returns (and stores as
         ``recommendation``) the new pick; apply it by rebuilding from an
-        updated spec."""
+        updated spec.  Honors the spec's recorded ``entropy_floor`` /
+        ``diversity_obs`` like :meth:`Pipeline.autotune` does."""
         rec = fit_and_recommend(
             self.collection,
             probes=probes,
@@ -574,6 +628,8 @@ class DataPipeline:
             num_classes=num_classes,
             entropy_slack_bits=entropy_slack_bits,
             throughput_slack=throughput_slack,
+            class_probs=_class_probs(self.collection, self.spec.diversity_obs),
+            entropy_floor=self.spec.entropy_floor or None,
         )
         self.recommendation = rec
         return rec

@@ -60,8 +60,11 @@ __all__ = [
 #: fields take their defaults — but a version-2 spec presented to version-1
 #: code gets the version refusal rather than an "unknown field" puzzle);
 #: 3 = PR 7 adds the resilience fields (retries/backoff, hedging, breaker —
-#: all content-free: recovery never changes delivered bytes).
-SPEC_VERSION = 3
+#: all content-free: recovery never changes delivered bytes);
+#: 4 = PR 8 adds the diversity-observatory fields (``diversity_obs``,
+#: ``entropy_floor`` — content-free: telemetry observes the stream and the
+#: floor only steers autotune's choice, which lands in fingerprinted fields).
+SPEC_VERSION = 4
 
 #: name -> strategy class.  Params are the dataclass fields, JSON-typed;
 #: ``weights`` / ``labels`` may instead arrive as ``weights_obs`` /
@@ -165,6 +168,11 @@ CONTENT_FREE_FIELDS = frozenset({
     # tests pin that), so a resume across a retry-policy change is legal
     "retries", "retry_backoff_s", "retry_max_backoff_s", "retry_deadline_s",
     "hedge_factor", "hedge_min_s", "breaker_threshold", "breaker_cooldown_s",
+    # diversity observatory: telemetry over an obs column never touches the
+    # delivered stream (pinned by tests/test_diversity.py), and the entropy
+    # floor is an autotune TARGET — the (b, f) it picks land in fingerprinted
+    # fields, so the floor itself carries no content
+    "diversity_obs", "entropy_floor",
 })
 
 
@@ -224,6 +232,10 @@ class DataSpec:
     breaker_threshold: int = 0  # consecutive failures to open; 0 = off
     breaker_cooldown_s: float = 1.0  # open -> half-open probe delay
 
+    # ---- diversity observatory: live §3.4 entropy telemetry + SLO
+    diversity_obs: Optional[str] = None  # obs column to track; None = off
+    entropy_floor: float = 0.0  # autotune E[H] target (bits); 0 = no floor
+
     version: int = SPEC_VERSION
 
     # ------------------------------------------------------------ validate
@@ -262,6 +274,8 @@ class DataSpec:
             raise ValueError("resilience fields must be non-negative")
         if self.hedge_min_s <= 0:
             raise ValueError("hedge_min_s must be positive")
+        if self.entropy_floor < 0:
+            raise ValueError("entropy_floor must be non-negative (bits)")
 
     # ----------------------------------------------------------- serialize
     def replace(self, **kw) -> "DataSpec":

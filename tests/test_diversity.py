@@ -1,0 +1,346 @@
+"""Diversity observatory (ISSUE 8): live §3.4 entropy telemetry, the
+entropy-floor autotune, and chaos composability.
+
+Acceptance invariants under test:
+
+- ``IOStats.record_diversity`` semantics: sum/min/count accounting, a
+  0.0-bit observation is legal (single-class batch) and gated on the
+  COUNT, deferred capture routes dropped speculative observations to the
+  ``spec_*`` mirrors, the min-merge in ``commit`` never lets an
+  observation-free PendingIO clobber the running minimum, and
+  reset/snapshot cover all six counters;
+- :class:`DiversityMonitor` + ``ScDataset(diversity_obs=...)``: the live
+  counters EQUAL an offline recomputation of per-batch plug-in entropy on
+  the delivered labels — telemetry is exact, not sampled;
+- ``stats()["diversity"]`` surfaces mean/min/batches only once
+  observations exist;
+- the control loop: ``recommend(entropy_floor=...)`` only returns cells
+  whose predicted E[H] clears the floor, raises (naming the best
+  achievable) when unreachable, and ``model_drift(expected_entropy=...)``
+  flags delivered-entropy SHORTFALL but never over-delivery;
+- the declarative surface: ``diversity_obs``/``entropy_floor`` are
+  content-free (fingerprint-invariant), JSON round-trip, validate, and
+  ``Pipeline.diversity``/``autotune(entropy_floor=...)`` record them;
+- **chaos composability** — diversity counters AND delivered batches are
+  bitwise identical with and without ``fault://`` retries + hedging under
+  ``io_workers`` + readahead (telemetry must not perturb, or be perturbed
+  by, the self-healing I/O stack).
+
+Every test runs under the runtime lock-order witness.
+"""
+import numpy as np
+import pytest
+
+from repro.core import BlockShuffling, DiversityMonitor, ScDataset
+from repro.core.autotune import IOCostModel, model_drift, recommend
+from repro.core.theory import batch_entropy, distribution_entropy
+from repro.data import IOStats, open_collection
+from repro.data.synth import write_csr_shard
+from repro.pipeline import DataSpec, Pipeline
+
+
+@pytest.fixture(autouse=True)
+def _witness(lock_order_witness):
+    """Telemetry rides inside fetch/commit paths that hold locks: every
+    test here runs under the lock-order witness (tests/conftest.py)."""
+    yield
+
+
+N, G, K = 2000, 32, 14
+
+#: same reproducible-chaos knobs as tests/test_resilience.py
+FAULT_Q = "seed=5&error_rate=0.15"
+RETRY_KW = dict(retries=10, retry_backoff_s=0.0005, retry_max_backoff_s=0.005)
+
+
+def _random_csr(rng, n, g):
+    lens = rng.integers(1, 5, n)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(lens, out=indptr[1:])
+    nnz = int(indptr[-1])
+    data = rng.normal(size=nnz).astype(np.float32)
+    indices = np.empty(nnz, np.int32)
+    for i in range(n):
+        indices[indptr[i]:indptr[i + 1]] = np.sort(
+            rng.choice(g, size=int(lens[i]), replace=False)
+        ).astype(np.int32)
+    return data, indices, indptr
+
+
+@pytest.fixture(scope="module")
+def sharded(tmp_path_factory):
+    """Two-shard CSR store with a skewed 14-class ``plate`` obs column."""
+    rng = np.random.default_rng(29)
+    root = tmp_path_factory.mktemp("diversity")
+    data, indices, indptr = _random_csr(rng, N, G)
+    p = np.arange(1, K + 1, dtype=np.float64)
+    plate = rng.choice(K, size=N, p=p / p.sum()).astype(np.int32)
+    obs = {"plate": plate}
+    half = indptr[N // 2]
+    s0, s1 = str(root / "s0"), str(root / "s1")
+    write_csr_shard(s0, data[:half], indices[:half], indptr[: N // 2 + 1], G,
+                    {k: v[: N // 2] for k, v in obs.items()})
+    write_csr_shard(s1, data[half:], indices[half:],
+                    indptr[N // 2:] - half, G,
+                    {k: v[N // 2:] for k, v in obs.items()})
+    return {"uri": f"sharded-csr://{s0},{s1}", "plate": plate}
+
+
+# --------------------------------------------------- IOStats counter layer
+def test_record_diversity_sum_min_count():
+    st = IOStats()
+    for h in (2.5, 1.25, 3.0):
+        st.record_diversity(h)
+    snap = st.snapshot()
+    assert snap["div_batches"] == 3
+    assert snap["div_entropy_sum"] == 2.5 + 1.25 + 3.0
+    assert snap["div_entropy_min"] == 1.25
+    st.reset()
+    snap = st.snapshot()
+    for key in ("div_batches", "div_entropy_sum", "div_entropy_min",
+                "spec_div_batches", "spec_div_entropy_sum",
+                "spec_div_entropy_min"):
+        assert snap[key] == 0, key
+
+
+def test_zero_entropy_is_a_legal_observation():
+    """A single-class batch has H=0.0 — it must count AND pin the min
+    (``div_entropy_min`` is gated on div_batches, not on the value)."""
+    st = IOStats()
+    st.record_diversity(2.0)
+    st.record_diversity(0.0)
+    snap = st.snapshot()
+    assert snap["div_batches"] == 2
+    assert snap["div_entropy_min"] == 0.0
+
+
+def test_deferred_diversity_routes_to_spec_mirrors():
+    """Observations inside a DROPPED speculative fetch must not count as
+    delivered batches — they land in the ``spec_*`` mirrors."""
+    st = IOStats()
+    with st.deferred() as pend:
+        st.record_diversity(1.5)
+        st.record_diversity(0.5)
+    st.commit(pend, speculative=True)
+    snap = st.snapshot()
+    assert snap["div_batches"] == 0 and snap["div_entropy_min"] == 0.0
+    assert snap["spec_div_batches"] == 2
+    assert snap["spec_div_entropy_sum"] == 2.0
+    assert snap["spec_div_entropy_min"] == 0.5
+
+    with st.deferred() as pend:
+        st.record_diversity(3.0)
+    st.commit(pend)  # delivered
+    snap = st.snapshot()
+    assert snap["div_batches"] == 1 and snap["div_entropy_sum"] == 3.0
+
+
+def test_min_merge_across_commits():
+    """commit() min-merges ``div_entropy_min`` — and a PendingIO with NO
+    observations must not clobber an established minimum with its 0.0."""
+    st = IOStats()
+    with st.deferred() as p1:
+        st.record_diversity(2.0)
+    st.commit(p1)
+    with st.deferred() as p2:
+        st.record_diversity(1.0)
+        st.record_diversity(4.0)
+    st.commit(p2)
+    with st.deferred() as p3:
+        pass  # e.g. a pure-I/O fetch: bytes but no diversity observations
+    st.commit(p3)
+    snap = st.snapshot()
+    assert snap["div_batches"] == 3
+    assert snap["div_entropy_min"] == 1.0  # not 0.0 from the empty commit
+
+
+# ------------------------------------------------- monitor + live dataset
+def test_monitor_requires_obs_capable_collection():
+    with pytest.raises(ValueError, match="diversity_obs"):
+        DiversityMonitor(object(), "plate")
+
+
+def test_monitor_resolves_classes_and_probs(sharded):
+    col = open_collection(sharded["uri"], block_rows=32)
+    try:
+        mon = DiversityMonitor(col, "plate")
+        assert mon.num_classes == K
+        p = mon.class_probs()
+        assert abs(p.sum() - 1.0) < 1e-12
+        counts = np.bincount(sharded["plate"], minlength=K)
+        np.testing.assert_allclose(p, counts / N)
+    finally:
+        col.release()
+
+
+def test_live_counters_equal_offline_entropy(sharded):
+    """The tentpole telemetry claim: div_* counters == an offline plug-in
+    entropy recomputation on exactly the delivered label batches."""
+    stats = IOStats()
+    pipe = (
+        Pipeline.from_uri(sharded["uri"], iostats=stats)
+        .strategy("block", block_size=32)
+        .batch(32, fetch_factor=4)
+        .seed(11)
+        .diversity(obs="plate")
+        .build(batch_transform=lambda b: np.asarray(b.obs["plate"]))
+    )
+    labels = [np.asarray(b).copy() for b in pipe]
+    pipe.close()
+    ents = [batch_entropy(lb, K) for lb in labels]
+    snap = stats.snapshot()
+    assert snap["div_batches"] == len(labels) == len(pipe.dataset)
+    assert snap["div_entropy_sum"] == sum(ents)  # same floats, same order
+    assert snap["div_entropy_min"] == min(ents)
+
+
+def test_stats_diversity_section(sharded):
+    pipe = (
+        Pipeline.from_uri(sharded["uri"])
+        .strategy("block", block_size=32)
+        .batch(32, fetch_factor=2)
+        .diversity(obs="plate")
+        .build()
+    )
+    assert "diversity" not in pipe.stats()  # no batches observed yet
+    n = 0
+    for _ in pipe:
+        n += 1
+        if n >= 8:
+            break
+    div = pipe.stats()["diversity"]
+    pipe.close()
+    assert div["batches"] >= 8  # fetch materializes whole f-groups
+    assert div["entropy_min"] <= div["entropy_mean"] <= np.log2(K)
+
+
+# ------------------------------------------------------------ control loop
+def _cost():
+    return IOCostModel(c0=0.0, c_seek=0.05, c_byte=1e-8, row_bytes=2048,
+                       n_rows=1e5)
+
+
+def test_recommend_respects_entropy_floor():
+    p = np.full(K, 1 / K)
+    hp = distribution_entropy(p)
+    free = recommend(_cost(), batch_size=64, class_probs=p)
+    # a floor just under IID-predicted E[H]: block-heavy cells are culled
+    floor = hp - (K - 1) / (2 * 64 * np.log(2)) - 0.02
+    tight = recommend(_cost(), batch_size=64, class_probs=p,
+                      entropy_floor=floor)
+    assert tight.predicted_entropy >= floor
+    assert tight.rationale and "floor" in tight.rationale
+    # the unfloored pick maximizes throughput; the floored pick cannot be
+    # MORE I/O-efficient than it
+    assert tight.modeled_samples_per_sec <= free.modeled_samples_per_sec
+
+
+def test_recommend_unreachable_floor_raises():
+    p = np.full(K, 1 / K)
+    with pytest.raises(ValueError, match="unreachable"):
+        recommend(_cost(), batch_size=64, class_probs=p,
+                  entropy_floor=distribution_entropy(p) + 1.0)
+
+
+def test_recommend_floor_none_is_unchanged():
+    p = np.full(K, 1 / K)
+    a = recommend(_cost(), batch_size=64, class_probs=p)
+    b = recommend(_cost(), batch_size=64, class_probs=p, entropy_floor=None)
+    assert (a.block_size, a.fetch_factor) == (b.block_size, b.fetch_factor)
+
+
+def test_model_drift_flags_entropy_shortfall_only():
+    st = IOStats()
+    st.record_diversity(2.0)
+    st.record_diversity(2.0)
+    cost = _cost()
+    # delivered mean 2.0 vs predicted 2.5: half a bit of drift
+    assert model_drift(cost, st, expected_entropy=2.5) == pytest.approx(0.5)
+    # over-delivery is NOT drift (the §3.4 bounds are one-sided)
+    assert model_drift(cost, st, expected_entropy=1.5) == 0.0
+    # base snapshot: only the post-fit delta counts
+    base = st.snapshot()
+    st.record_diversity(0.5)
+    assert model_drift(cost, st, base=base,
+                       expected_entropy=2.0) == pytest.approx(1.5)
+
+
+# ----------------------------------------------------- declarative surface
+def test_spec_diversity_fields_are_content_free(sharded):
+    plain = DataSpec(uri=sharded["uri"], batch_size=32)
+    tuned = DataSpec(uri=sharded["uri"], batch_size=32,
+                     diversity_obs="plate", entropy_floor=3.5)
+    assert plain.fingerprint() == tuned.fingerprint()
+    back = DataSpec.from_json(tuned.to_json())
+    assert back.diversity_obs == "plate"
+    assert back.entropy_floor == 3.5
+    with pytest.raises(ValueError, match="entropy_floor"):
+        DataSpec(uri=sharded["uri"], entropy_floor=-0.1)
+
+
+def test_builder_diversity_threads_into_dataset(sharded):
+    pipe = (
+        Pipeline.from_uri(sharded["uri"])
+        .strategy("block", block_size=32)
+        .batch(32, fetch_factor=2)
+        .diversity(obs="plate", entropy_floor=3.0)
+        .build()
+    )
+    try:
+        assert pipe.spec.diversity_obs == "plate"
+        assert pipe.spec.entropy_floor == 3.0
+        assert pipe.dataset.diversity_obs == "plate"
+        assert pipe.dataset.plan_epoch(0)["diversity_obs"] == "plate"
+    finally:
+        pipe.close()
+
+
+def test_pipeline_autotune_records_and_honors_floor(sharded):
+    plate = sharded["plate"]
+    p = np.bincount(plate, minlength=K) / len(plate)
+    floor = distribution_entropy(p) - (K - 1) / (2 * 64 * np.log(2)) - 0.05
+    builder = (
+        Pipeline.from_uri(sharded["uri"])
+        .strategy("block", block_size=32)
+        .batch(64, fetch_factor=1)
+        .diversity(obs="plate")
+    )
+    pipe = builder.autotune(entropy_floor=floor, probes=2,
+                            probe_rows=128).build()
+    try:
+        rec = builder.last_recommendation
+        assert pipe.spec.entropy_floor == pytest.approx(floor)
+        assert rec.predicted_entropy >= floor
+        assert pipe.spec.fetch_factor == rec.fetch_factor
+    finally:
+        pipe.close()
+
+
+# ------------------------------------------------------ chaos composability
+def test_chaos_diversity_counters_bit_identical(sharded):
+    """Telemetry under fire: faults + retries + hedging + io_workers +
+    readahead deliver the SAME batches and the SAME div_* counters as the
+    clean synchronous run — bitwise, including the float entropy sum."""
+    uri = sharded["uri"]
+
+    def run(uri, **kw):
+        col = open_collection(uri, block_rows=32, **kw)
+        ds = ScDataset(col, BlockShuffling(32), batch_size=32,
+                       fetch_factor=4, seed=7, diversity_obs="plate")
+        out = [np.asarray(b.to_dense()).copy() for b in ds.epochs(2)]
+        snap = col.iostats.snapshot()
+        col.release()
+        return out, snap
+
+    ref, clean = run(uri, cache_bytes=0)
+    got, snap = run(f"fault://{uri}?{FAULT_Q}", cache_bytes=64 << 10,
+                    io_workers=4, readahead=2, hedge_factor=1.0,
+                    hedge_min_s=0.001, **RETRY_KW)
+    assert snap["retries"] > 0  # the chaos was real
+    assert len(ref) == len(got)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+    for key in ("div_batches", "div_entropy_sum", "div_entropy_min"):
+        assert snap[key] == clean[key], key
+    # and none of the delivered observations leaked into the mirrors
+    assert snap["spec_div_batches"] == clean["spec_div_batches"] == 0

@@ -76,3 +76,64 @@ def test_plugin_entropy_edges():
     assert abs(plugin_entropy(np.array([32, 32])) - 1.0) < 1e-12
     assert plugin_entropy(np.zeros(4)) == 0.0
     assert batch_entropy(np.array([1, 1, 1, 1])) == 0.0
+
+
+# ---- PR 8: pinned regressions for the audited edge cases.  Each of these
+# crashed, returned a negative entropy, or inverted the sandwich before the
+# fixes — they stay pinned so a refactor can't quietly reintroduce them.
+
+
+def test_plugin_entropy_rejects_negative_counts():
+    with pytest.raises(ValueError, match="non-negative"):
+        plugin_entropy(np.array([3, -1, 2]))
+
+
+def test_batch_entropy_empty_batch_is_zero():
+    # np.bincount rejects the default-float64 empty array; the empty batch
+    # must short-circuit to 0.0 instead of raising.
+    assert batch_entropy(np.array([])) == 0.0
+    assert batch_entropy(np.array([]), num_classes=14) == 0.0
+
+
+def test_batch_entropy_accepts_integer_valued_floats():
+    # labels arriving as float64 (e.g. straight out of an obs column) are
+    # cast, not rejected
+    assert abs(batch_entropy(np.array([0.0, 1.0, 0.0, 1.0])) - 1.0) < 1e-12
+
+
+def test_single_class_batch_is_exactly_positive_zero():
+    # -(1 * log2(1)) is -0.0 in IEEE; counters and JSON must see +0.0
+    h = batch_entropy(np.array([7, 7, 7]))
+    assert h == 0.0 and not np.signbit(h)
+
+
+def test_entropy_bounds_clamps_both_sides_when_m_below_k():
+    # m < K: BOTH expansion terms go negative; clamping only the lower
+    # bound used to invert the sandwich (lo=0 > hi<0)
+    p = np.full(32, 1 / 32)
+    lo, hi = entropy_bounds(p, m=4, b=4)
+    assert 0.0 <= lo <= hi
+
+
+def test_simulate_handles_non_dividing_block_size():
+    # m=10, b=3: floor division left a 9-cell buffer and the m-cell
+    # without-replacement draw raised; B must round UP
+    mean, std = simulate_expected_entropy(
+        np.full(4, 0.25), m=10, b=3, f=1,
+        trials=20, rng=np.random.default_rng(0),
+    )
+    assert 0.0 <= mean <= 2.0
+
+
+def test_theory_validates_nonpositive_arguments():
+    p = np.array([0.5, 0.5])
+    with pytest.raises(ValueError):
+        expected_entropy_large_f(p, 0)
+    with pytest.raises(ValueError):
+        expected_entropy_f1(p, 64, 0)
+    with pytest.raises(ValueError):
+        entropy_bounds(p, -1, 4)
+    with pytest.raises(ValueError):
+        simulate_expected_entropy(p, 64, 16, 0)
+    with pytest.raises(ValueError):
+        simulate_expected_entropy(p, 64, 16, 1, trials=0)

@@ -1,0 +1,169 @@
+"""Property tests for EVERY exported `repro.core.theory` function (PR 8).
+
+Six hundred generated cases (via `_hypothesis_compat`: real hypothesis when
+installed, seeded deterministic sweeps when not) pin the §3.4 algebra:
+
+- `entropy_bounds` is a true sandwich: 0 <= lower <= upper <= H(p), and it
+  is exactly the clamp of `expected_entropy_f1` / `expected_entropy_large_f`;
+- `expected_entropy_large_f` is monotone non-decreasing in m (Thm 3.1's
+  bias term shrinks with batch size);
+- `plugin_entropy` converges to `distribution_entropy` as counts scale
+  (consistency of the plug-in estimator);
+- `simulate_expected_entropy` (the Monte-Carlo ground truth) lands inside
+  `entropy_bounds` for random (p, m, b, f);
+- `batch_entropy` is bounded by log2 K, permutation/relabel-invariant, and
+  `mean_batch_entropy` is exactly its per-batch mean/std.
+"""
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core.theory import (
+    batch_entropy,
+    distribution_entropy,
+    entropy_bounds,
+    expected_entropy_f1,
+    expected_entropy_large_f,
+    mean_batch_entropy,
+    plugin_entropy,
+    simulate_expected_entropy,
+    tahoe_plate_distribution,
+)
+
+_LN2 = np.log(2.0)
+
+
+def _dirichlet(k: int, seed: int) -> np.ndarray:
+    return np.random.default_rng(seed).dirichlet(np.full(k, 5.0))
+
+
+@given(
+    k=st.integers(2, 14),
+    m=st.integers(1, 2048),
+    b=st.sampled_from([1, 2, 4, 8, 16, 64, 256]),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=120, deadline=None)
+def test_bounds_ordered_and_below_hp(k, m, b, seed):
+    """0 <= lower <= upper <= H(p) for ANY (p, m, b) — including m < K,
+    where the unclamped expansion goes negative on BOTH sides."""
+    p = _dirichlet(k, seed)
+    lo, hi = entropy_bounds(p, m, b)
+    assert 0.0 <= lo <= hi + 1e-12, (lo, hi)
+    assert hi <= distribution_entropy(p) + 1e-12
+
+
+@given(
+    k=st.integers(2, 14),
+    m1=st.integers(1, 5000),
+    m2=st.integers(1, 5000),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=100, deadline=None)
+def test_large_f_monotone_in_m(k, m1, m2, seed):
+    """Thm 3.1's E[H] never decreases as the batch grows."""
+    p = _dirichlet(k, seed)
+    lo_m, hi_m = sorted((m1, m2))
+    assert (
+        expected_entropy_large_f(p, lo_m)
+        <= expected_entropy_large_f(p, hi_m) + 1e-12
+    )
+
+
+@given(k=st.integers(2, 14), seed=st.integers(0, 10_000))
+@settings(max_examples=80, deadline=None)
+def test_plugin_converges_to_distribution_entropy(k, seed):
+    """The plug-in estimator is consistent: scaling exact counts up drives
+    it to H(p), and a finer discretization never moves it further away
+    (beyond the rounding floor)."""
+    p = _dirichlet(k, seed)
+    H = distribution_entropy(p)
+    err_coarse = abs(plugin_entropy(np.round(p * 100)) - H)
+    err_fine = abs(plugin_entropy(np.round(p * 1_000_000)) - H)
+    assert err_fine < 0.02, (err_fine, H)
+    assert err_fine <= err_coarse + 1e-6
+
+
+@given(
+    k=st.integers(2, 12),
+    m=st.sampled_from([32, 64, 128]),
+    b=st.sampled_from([1, 2, 4, 8, 16]),
+    f=st.sampled_from([1, 4, 16]),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_simulation_lands_inside_bounds(k, m, b, f, seed):
+    """Monte-Carlo E[H] under the paper's sampling model respects the
+    Corollary 3.3 sandwich, up to MC error + the O(B^-2) truncation."""
+    p = _dirichlet(k, seed)
+    trials = 150
+    mean, std = simulate_expected_entropy(
+        p, m, b, f, trials=trials, rng=np.random.default_rng(seed + 1)
+    )
+    lo, hi = entropy_bounds(p, m, b)
+    slack = 3 * std / np.sqrt(trials) + 0.1
+    assert lo - slack <= mean <= hi + slack, (lo, mean, hi, slack)
+
+
+@given(
+    k=st.integers(1, 20),
+    n=st.integers(1, 512),
+    shift=st.integers(0, 7),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=100, deadline=None)
+def test_batch_entropy_bounded_and_invariant(k, n, shift, seed):
+    """0 <= H(batch) <= log2 K; exact under permutation and label shift
+    (zero-count classes contribute nothing); num_classes only pads."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, k, size=n)
+    h = batch_entropy(labels)
+    assert 0.0 <= h <= np.log2(max(1, k)) + 1e-9
+    assert batch_entropy(rng.permutation(labels)) == h
+    assert abs(batch_entropy(labels + shift) - h) < 1e-12
+    assert abs(batch_entropy(labels, num_classes=k + 5) - h) < 1e-12
+
+
+@given(
+    k=st.integers(2, 10),
+    n_batches=st.integers(1, 12),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=60, deadline=None)
+def test_mean_batch_entropy_is_per_batch_mean(k, n_batches, seed):
+    rng = np.random.default_rng(seed)
+    batches = [
+        rng.integers(0, k, size=int(rng.integers(1, 128)))
+        for _ in range(n_batches)
+    ]
+    mean, std = mean_batch_entropy(batches)
+    ents = np.array([batch_entropy(b) for b in batches])
+    assert abs(mean - ents.mean()) < 1e-12
+    assert abs(std - ents.std()) < 1e-12
+
+
+@given(
+    k=st.integers(2, 14),
+    m=st.integers(1, 2048),
+    b=st.sampled_from([1, 2, 4, 8, 16, 64]),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=100, deadline=None)
+def test_bounds_are_clamped_theorem_expansions(k, m, b, seed):
+    """`entropy_bounds` IS (max(0, Thm 3.2), max(0, Thm 3.1)), and the f=1
+    expansion never exceeds the large-f one (b >= 1)."""
+    p = _dirichlet(k, seed)
+    f1 = expected_entropy_f1(p, m, b)
+    large = expected_entropy_large_f(p, m)
+    assert f1 <= large + 1e-12
+    lo, hi = entropy_bounds(p, m, b)
+    assert abs(lo - max(0.0, f1)) < 1e-12
+    assert abs(hi - max(0.0, large)) < 1e-12
+
+
+def test_tahoe_plate_distribution_shape():
+    """The reconstructed Tahoe plate vector hits the paper's two facts."""
+    p = tahoe_plate_distribution()
+    assert len(p) == 14
+    assert abs(p.sum() - 1.0) < 1e-12
+    assert 0.045 <= p.min() and p.max() <= 0.105
+    assert abs(distribution_entropy(p) - 3.78) < 0.02
