@@ -1,0 +1,218 @@
+"""Multi-tenant serving vs isolated loaders — the shared-cache dividend.
+
+The serve/data claim (docs/serving.md): N tenants training on the same
+dataset through ONE :class:`~repro.serve.data.DataServeServer` — one block
+cache, one rendezvous table — beat N isolated loader processes, each with
+its own collection and a 1/N slice of the same total cache budget, on BOTH
+axes:
+
+- **storage work** — a block one tenant faults in is a cache hit (or an
+  in-flight rendezvous join) for every other tenant, so total backend GETs
+  and bytes read collapse toward the single-tenant cost instead of scaling
+  with N;
+- **modeled throughput** — samples / (wall + un-slept modeled storage
+  time).  Modeled time is the storage device's total work under the
+  SATA-SSD model; the device is one and the same in both arms, so summing
+  it across isolated loaders is the apples-to-apples comparison.
+
+The tenants run the cloud-profiled fixture (``cloud://`` over the shared
+Tahoe-like store, ``latency_scale=0`` — request accounting without real
+sleeps) with IDENTICAL specs: the hyperparameter-sweep shape (N replicas of
+one data recipe, different model seeds) where the dividend is largest and
+any dedup failure is unmissable in the request counters.
+
+``run_serve`` writes machine-readable ``BENCH_PR9.json``; smoke gate #7
+(``python -m benchmarks.run --smoke``) exits nonzero unless shared-arm
+modeled samples/sec beat the isolated arm by ``SERVE_FLOOR`` AND both
+storage-work counters (requests, bytes read) are strictly lower.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+from benchmarks.common import BENCH_DATA_DIR, N_CELLS, N_GENES, emit
+from repro.data import SATA_SSD, IOStats, generate_tahoe_like
+from repro.pipeline import Pipeline
+from repro.serve.data import DataClient, DataServeServer, ServeConfig
+
+PR9_JSON = os.environ.get("BENCH_PR9_JSON", "BENCH_PR9.json")
+
+N_TENANTS = int(os.environ.get("BENCH_SERVE_TENANTS", "3"))
+SERVE_BATCHES = int(os.environ.get("BENCH_SERVE_BATCHES", "48"))
+SERVE_FLOOR = 1.2
+BATCH_SIZE = 64
+#: total block-cache budget, split evenly in the isolated arm
+CACHE_TOTAL = 48 << 20
+
+
+def _spec():
+    uri = (
+        f"cloud://sharded-csr://{BENCH_DATA_DIR}"
+        "?profile=same-region&latency_scale=0"
+    )
+    # io_workers=2 puts BOTH arms on the async planned path (the server's
+    # own default): same executor, same rendezvous machinery — the only
+    # variable left is whether the cache/rendezvous plane is shared
+    return (
+        Pipeline.from_uri(uri, io_workers=2)
+        .strategy("block", block_size=16)
+        .batch(BATCH_SIZE, fetch_factor=16)
+        .seed(0)
+        ._spec
+    )
+
+
+def _drain_client(cli: DataClient, counts: list, idx: int) -> None:
+    n = 0
+    for _ in iter(cli):
+        n += 1
+        if n >= SERVE_BATCHES:
+            break
+    counts[idx] = n
+
+
+def _shared_arm(spec) -> dict:
+    stats = IOStats(simulate=SATA_SSD, simulate_scale=0.0)
+    srv = DataServeServer(
+        ServeConfig(max_tenants=N_TENANTS, cache_bytes=CACHE_TOTAL,
+                    queue_depth=2),
+        iostats=stats,
+    ).start()
+    counts = [0] * N_TENANTS
+    try:
+        clients = [DataClient(srv.address, spec) for _ in range(N_TENANTS)]
+        threads = [
+            threading.Thread(target=_drain_client, args=(c, counts, i))
+            for i, c in enumerate(clients)
+        ]
+        t0 = time.perf_counter()
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        wall = time.perf_counter() - t0
+        for c in clients:
+            c.close()
+        agg = srv.stats().aggregate
+    finally:
+        srv.stop()
+    samples = sum(counts) * BATCH_SIZE
+    modeled = wall + agg["modeled_s"]
+    return {
+        "samples": samples,
+        "wall_s": wall,
+        "modeled_total_s": modeled,
+        "sps_modeled": samples / max(modeled, 1e-9),
+        "requests": agg["requests"],
+        "bytes_read": agg["bytes_read"],
+        "cache_hits": agg["cache_hits"],
+    }
+
+
+def _drain_local(spec, cache_bytes: int, out: list, idx: int) -> None:
+    stats = IOStats(simulate=SATA_SSD, simulate_scale=0.0)
+    built = Pipeline(
+        spec.replace(cache_bytes=cache_bytes), iostats=stats
+    ).build()
+    n = 0
+    for _ in iter(built):
+        n += 1
+        if n >= SERVE_BATCHES:
+            break
+    built.close()
+    out[idx] = {
+        "batches": n,
+        "modeled_s": stats.modeled_s,
+        "requests": stats.requests,
+        "bytes_read": stats.bytes_read,
+        "cache_hits": stats.cache_hits,
+    }
+
+
+def _isolated_arm(spec) -> dict:
+    per_tenant_cache = CACHE_TOTAL // N_TENANTS
+    results: list = [None] * N_TENANTS
+    threads = [
+        threading.Thread(
+            target=_drain_local, args=(spec, per_tenant_cache, results, i)
+        )
+        for i in range(N_TENANTS)
+    ]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wall = time.perf_counter() - t0
+    samples = sum(r["batches"] for r in results) * BATCH_SIZE
+    modeled = wall + sum(r["modeled_s"] for r in results)
+    return {
+        "samples": samples,
+        "wall_s": wall,
+        "modeled_total_s": modeled,
+        "sps_modeled": samples / max(modeled, 1e-9),
+        "requests": sum(r["requests"] for r in results),
+        "bytes_read": sum(r["bytes_read"] for r in results),
+        "cache_hits": sum(r["cache_hits"] for r in results),
+    }
+
+
+def run_serve(write_json: bool = True) -> dict:
+    generate_tahoe_like(BENCH_DATA_DIR, n_cells=N_CELLS, n_genes=N_GENES,
+                        seed=0)
+    spec = _spec()
+    shared = _shared_arm(spec)
+    isolated = _isolated_arm(spec)
+
+    speedup = shared["sps_modeled"] / max(isolated["sps_modeled"], 1e-9)
+    gates = {
+        "serve_floor": SERVE_FLOOR,
+        "speedup": speedup,
+        "requests_shared": shared["requests"],
+        "requests_isolated": isolated["requests"],
+        "bytes_shared": shared["bytes_read"],
+        "bytes_isolated": isolated["bytes_read"],
+    }
+    passed = (
+        shared["samples"] == isolated["samples"]
+        and speedup >= SERVE_FLOOR
+        and shared["requests"] < isolated["requests"]
+        and shared["bytes_read"] < isolated["bytes_read"]
+    )
+    emit(
+        f"serve_shared_{N_TENANTS}tenants",
+        1e6 / max(shared["sps_modeled"], 1e-9),
+        f"sps_modeled={shared['sps_modeled']:.1f}",
+    )
+    emit(
+        f"serve_isolated_{N_TENANTS}procs",
+        1e6 / max(isolated["sps_modeled"], 1e-9),
+        f"sps_modeled={isolated['sps_modeled']:.1f}",
+    )
+    out = {
+        "n_tenants": N_TENANTS,
+        "batches_per_tenant": SERVE_BATCHES,
+        "batch_size": BATCH_SIZE,
+        "cache_total_bytes": CACHE_TOTAL,
+        "shared": shared,
+        "isolated": isolated,
+        "gates": gates,
+        "pass": bool(passed),
+    }
+    if write_json:
+        with open(PR9_JSON, "w") as fh:
+            json.dump(out, fh, indent=2)
+        print(f"# wrote {PR9_JSON}")
+    return out
+
+
+def run() -> dict:
+    return run_serve(write_json=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

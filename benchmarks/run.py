@@ -35,7 +35,13 @@ autotune,adaptive,resilience,diversity).
    entropy-vs-throughput frontier measured from the LIVE ``div_*``
    IOStats telemetry): the ``entropy_floor``-autotuned quasi-random
    ``(b, f)`` must land within 0.1 bits of true-random entropy at >= 3x
-   its counter-modeled throughput.
+   its counter-modeled throughput;
+7. multi-tenant serving -> ``BENCH_PR9.json`` (N identical tenants
+   through ONE shared-cache ``DataServeServer`` vs N isolated loaders
+   splitting the same cache budget): shared must beat isolated by
+   ``bench_serve.SERVE_FLOOR`` on modeled samples/sec AND issue strictly
+   fewer backend requests and bytes (the cross-tenant dedup claim,
+   measured from the cloud adapter's request counters).
 """
 from __future__ import annotations
 
@@ -114,7 +120,19 @@ def smoke() -> int:
         f"(eps {div['epsilon_bits']}) at {div['speedup']:.1f}x random "
         f"(floor {div['throughput_floor']}x) -> {'OK' if dok else 'FAIL'}"
     )
-    return 0 if (ok and cok and pok and aok and rok and dok) else 1
+    from benchmarks import bench_serve
+
+    srv = bench_serve.run_serve(write_json=True)
+    sok = srv["pass"]
+    sg = srv["gates"]
+    print(
+        f"# smoke: serve shared {sg['speedup']:.2f}x isolated "
+        f"(floor {sg['serve_floor']}x), requests "
+        f"{sg['requests_shared']} vs {sg['requests_isolated']}, bytes "
+        f"{sg['bytes_shared']} vs {sg['bytes_isolated']} "
+        f"-> {'OK' if sok else 'FAIL'}"
+    )
+    return 0 if (ok and cok and pok and aok and rok and dok and sok) else 1
 
 
 def main() -> None:

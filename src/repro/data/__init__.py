@@ -63,7 +63,13 @@ from .faults import (
 )
 from .h5ad import H5adAdapter, H5adStore, ShardedH5adAdapter
 from .iostats import CLOUD_OBJECT, NVME_SSD, SATA_SSD, IOStats, PendingIO, StorageModel
-from .readplan import BlockCache, StreamDetector, coalesce_rows, plan_reads
+from .readplan import (
+    BlockCache,
+    SegmentedBlockCache,
+    StreamDetector,
+    coalesce_rows,
+    plan_reads,
+)
 from .synth import (
     TAHOE_PLATE_FRACS,
     csr_shard_to_h5ad,
@@ -117,6 +123,7 @@ __all__ = [
     "register_backend",
     "registered_schemes",
     "BlockCache",
+    "SegmentedBlockCache",
     "StreamDetector",
     "coalesce_rows",
     "plan_reads",

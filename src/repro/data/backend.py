@@ -39,6 +39,7 @@ from .csr_store import CSRBatch, CSRStore, ShardedCSRStore, _concat_batches
 from .iostats import IOStats
 from .readplan import (
     BlockCache,
+    SegmentedBlockCache,
     FrequencySketch,
     ReadaheadController,
     StreamDetector,
@@ -461,6 +462,7 @@ class PlannedCollection:
         io_workers: int = 1,
         readahead=0,
         admission: str = "always",
+        cache_policy: str = "lru",
         retries: int = 0,
         retry_backoff_s: float = 0.005,
         retry_max_backoff_s: float = 0.25,
@@ -482,6 +484,10 @@ class PlannedCollection:
         ra_auto = readahead == "auto"
         if admission not in ("always", "auto", "never"):
             raise ValueError(f"admission must be always|auto|never, got {admission!r}")
+        if cache_policy not in ("lru", "wtinylfu"):
+            raise ValueError(
+                f"cache_policy must be lru|wtinylfu, got {cache_policy!r}"
+            )
         if (ra_auto or readahead > 0) and cache_bytes <= 0:
             # staged blocks hand over through the cache; without one every
             # prefetched block would silently be read twice
@@ -490,6 +496,11 @@ class PlannedCollection:
         self.iostats = iostats if iostats is not None else IOStats()
         adapter.bind_iostats(self.iostats)
         self.cache = BlockCache(cache_bytes)
+        if cache_policy == "wtinylfu":
+            # same interface, windowed segmented organization (scan-resistant
+            # protected segment — see SegmentedBlockCache)
+            self.cache = SegmentedBlockCache(cache_bytes)
+        self.cache_policy = cache_policy
         self.block_rows = int(block_rows)
         self.max_extent_rows = max_extent_rows
         self.io_workers = int(io_workers)
@@ -1445,6 +1456,7 @@ def open_collection(
     io_workers=_UNSET,
     readahead=_UNSET,
     admission=_UNSET,
+    cache_policy=_UNSET,
     retries=_UNSET,
     retry_backoff_s=_UNSET,
     retry_max_backoff_s=_UNSET,
@@ -1504,6 +1516,7 @@ def open_collection(
     # one shared grammar for the adaptive spelling: int >= 0 or "auto"
     readahead = knob(readahead, "readahead", 0, cast=normalize_readahead)
     admission = knob(admission, "admission", "always", cast=str)
+    cache_policy = knob(cache_policy, "cache_policy", "lru", cast=str)
     retries = knob(retries, "retries", 0)
     retry_backoff_s = knob(retry_backoff_s, "retry_backoff_s", 0.005, cast=float)
     retry_max_backoff_s = knob(
@@ -1526,6 +1539,7 @@ def open_collection(
         io_workers=int(io_workers),
         readahead=readahead,
         admission=str(admission),
+        cache_policy=str(cache_policy),
         retries=int(retries),
         retry_backoff_s=float(retry_backoff_s),
         retry_max_backoff_s=float(retry_max_backoff_s),

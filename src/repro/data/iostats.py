@@ -235,6 +235,14 @@ class IOStats:
                 pend.adm_rejected += adm_rejected
                 pend.wall_s += wall_s
                 pend.modeled_s += dt
+        elif getattr(self._tl, "scope", None) is not None:
+            self._tl.scope.record(
+                runs=runs, rows=rows, bytes_read=bytes_read, wall_s=wall_s,
+                cache_hits=cache_hits, cache_misses=cache_misses,
+                prefetched=prefetched, adm_bypassed=adm_bypassed,
+                adm_rejected=adm_rejected, calls=calls, slept=slept,
+            )
+            return  # the scoped child slept the simulated latency already
         else:
             with self._lock:
                 self.calls += calls
@@ -267,6 +275,8 @@ class IOStats:
             with pend._lock:
                 pend.requests += n
                 pend.request_wait_s += wait_s
+        elif getattr(self._tl, "scope", None) is not None:
+            self._tl.scope.record_request(n, wait_s=wait_s)
         else:
             with self._lock:
                 self.requests += n
@@ -301,6 +311,12 @@ class IOStats:
                 pend.hedges_won += hedges_won
                 pend.breaker_opens += breaker_opens
                 pend.breaker_closes += breaker_closes
+        elif getattr(self._tl, "scope", None) is not None:
+            self._tl.scope.record_resilience(
+                retries=retries, retry_wait_s=retry_wait_s,
+                hedges_issued=hedges_issued, hedges_won=hedges_won,
+                breaker_opens=breaker_opens, breaker_closes=breaker_closes,
+            )
         else:
             with self._lock:
                 self.retries += retries
@@ -331,6 +347,8 @@ class IOStats:
                     pend.div_entropy_min = h
                 pend.div_batches += 1
                 pend.div_entropy_sum += h
+        elif getattr(self._tl, "scope", None) is not None:
+            self._tl.scope.record_diversity(h)
         else:
             with self._lock:
                 if self.div_batches == 0 or h < self.div_entropy_min:
@@ -389,6 +407,12 @@ class IOStats:
     def commit(self, pend: PendingIO, *, speculative: bool = False) -> None:
         # every PendingIO field has both a main and a spec_ counterpart, so
         # new counters added there are committed automatically
+        scope: Optional["IOStats"] = getattr(self._tl, "scope", None)
+        if scope is not None:
+            # the committing thread is inside scoped(): the fetch belongs to
+            # that scope's owner (a serve tenant), so its counters do too
+            scope.commit(pend, speculative=speculative)
+            return
         prefix = "spec_" if speculative else ""
         with self._lock:
             # min-merged counters need the target's PRE-merge validity gate:
@@ -406,6 +430,74 @@ class IOStats:
                         setattr(self, name, min(cur, v) if had_div else v)
                 else:
                     setattr(self, name, getattr(self, name) + getattr(pend, f.name))
+
+    def merge(self, other: "IOStats") -> None:
+        """Fold another IOStats' totals into this one.
+
+        Sums every counter — main *and* ``spec_*`` mirrors — generically
+        over ``dataclasses.fields(PendingIO)``, with the same MIN semantics
+        for :data:`_MIN_MERGE` counters that :meth:`commit` applies (a
+        source's ``div_entropy_min`` only participates when its gate
+        counter says it actually observed batches).  The source is read via
+        one consistent :meth:`snapshot` *before* this object's lock is
+        taken, so two IOStats locks are never held at once (no lock-order
+        edge between sibling stats).  The source is left untouched:
+        aggregation never double counts as long as each event was recorded
+        into exactly one stats object — which is what :meth:`scoped`
+        guarantees for serve tenants.
+        """
+        snap = other.snapshot()
+        with self._lock:
+            for prefix in ("", "spec_"):
+                # capture the target's PRE-merge validity gate first, as in
+                # commit(): div_batches is summed before the min is merged
+                had_div = getattr(self, prefix + "div_batches") > 0
+                for f in dataclasses.fields(PendingIO):
+                    name = prefix + f.name
+                    if f.name in _MIN_MERGE:
+                        if snap[prefix + _MIN_MERGE[f.name]] > 0:
+                            v = snap[name]
+                            cur = getattr(self, name)
+                            setattr(self, name, min(cur, v) if had_div else v)
+                    else:
+                        setattr(self, name, getattr(self, name) + snap[name])
+
+    def child(self) -> "IOStats":
+        """A fresh scoped child sharing this object's storage model.
+
+        Children accumulate independently; route a thread's recordings into
+        one with :meth:`scoped`, then build an aggregate view by
+        :meth:`merge`-ing the children into a copy of the base.  The child
+        is *not* registered anywhere — the caller owns its lifetime (the
+        serve layer keeps one per tenant).
+        """
+        return IOStats(simulate=self.simulate, simulate_scale=self.simulate_scale)
+
+    @contextlib.contextmanager
+    def scoped(self, child: Optional["IOStats"]) -> Iterator[None]:
+        """Route this thread's recordings into ``child`` for the duration.
+
+        While active, :meth:`record` / :meth:`record_request` /
+        :meth:`record_resilience` / :meth:`record_diversity` and
+        :meth:`commit` calls made *by this thread* against this (shared)
+        stats object land in ``child`` instead of the shared totals — an
+        active :meth:`deferred` capture still wins, and its later
+        :meth:`commit` follows the scope, so per-fetch speculative
+        accounting is preserved per tenant.  Pool threads doing this
+        fetch's reads are unaffected (they record through
+        :meth:`borrowed_pending` into the capture buffer, which commits
+        here).  No-op when ``child`` is None.  Reentrant: an inner scope
+        shadows the outer one for its duration.
+        """
+        if child is None:
+            yield
+            return
+        prev = getattr(self._tl, "scope", None)
+        self._tl.scope = child
+        try:
+            yield
+        finally:
+            self._tl.scope = prev
 
     def reset(self) -> None:
         with self._lock:

@@ -48,6 +48,7 @@ __all__ = [
     "blocks_to_row_spans",
     "normalize_readahead",
     "BlockCache",
+    "SegmentedBlockCache",
     "StreamDetector",
     "FrequencySketch",
     "ReadaheadController",
@@ -348,6 +349,273 @@ class BlockCache:
                 "bypasses": self.bypasses,
                 "rejections": self.rejections,
                 "hit_rate": self.hits / total if total else 0.0,
+            }
+
+
+class SegmentedBlockCache(BlockCache):
+    """W-TinyLFU segmented cache: window LRU + main SLRU (probation/protected).
+
+    Drop-in for :class:`BlockCache` (every method and counter overridden —
+    the base ``__init__`` is deliberately not called, this class keeps its
+    own segment bookkeeping) behind the
+    ``cache_policy="wtinylfu"`` knob.  The budget is split into a small
+    *window* LRU (``window_frac`` of ``max_bytes``) where every new block
+    lands first, and a *main* segmented LRU whose *protected* sub-segment
+    (``protected_frac`` of main) holds blocks that were hit again after
+    admission.  A block evicted from the window duels the main segment's
+    coldest victim on sketch frequency (``estimate``) exactly like
+    :meth:`BlockCache.put_admit` — but crucially the victim is drawn from
+    *probation* first, so a scan-heavy tenant's one-touch blocks can only
+    churn the window and the probation tail; another tenant's hot redraw
+    set, promoted into protected by its re-hits, is insulated.  The plain
+    single-segment duel loses this case when overlapping scans touch blocks
+    often enough to out-estimate an *aged* hot set; see
+    ``tests/test_serve_data.py``.
+
+    Segment walk on lookup: window → protected → probation; a probation hit
+    promotes to protected, demoting protected's LRU back to probation MRU
+    when it overflows.  ``put`` (the duel-free API used by bypassing
+    admission policies and prefetch staging) admits window victims into
+    probation unconditionally.  ``max_bytes == 0`` disables caching, like
+    the plain cache.
+    """
+
+    def __init__(self, max_bytes: int, *, window_frac: float = 0.10,
+                 protected_frac: float = 0.80):
+        # no super().__init__(): the single-segment _entries dict would sit
+        # unused next to the three segment dicts and invite confusion
+        if not (0.0 < window_frac < 1.0) or not (0.0 < protected_frac < 1.0):
+            raise ValueError("window_frac and protected_frac must be in (0, 1)")
+        self.max_bytes = int(max_bytes)
+        self.window_bytes = int(self.max_bytes * window_frac)
+        main = self.max_bytes - self.window_bytes
+        self.protected_bytes = int(main * protected_frac)
+        # key -> (value, nbytes); three disjoint key spaces
+        self._window: collections.OrderedDict[Any, tuple[Any, int]] = (
+            collections.OrderedDict()
+        )  # guarded-by: _lock
+        self._probation: collections.OrderedDict[Any, tuple[Any, int]] = (
+            collections.OrderedDict()
+        )  # guarded-by: _lock
+        self._protected: collections.OrderedDict[Any, tuple[Any, int]] = (
+            collections.OrderedDict()
+        )  # guarded-by: _lock
+        # RLock: the private segment-maintenance helpers take it themselves,
+        # so they are safe from any entry point yet reentrant from the
+        # public methods that already hold it
+        self._lock = threading.RLock()
+        self.cur_bytes = 0  # guarded-by: _lock
+        self._window_cur = 0  # guarded-by: _lock
+        self._protected_cur = 0  # guarded-by: _lock
+        self.hits = 0  # guarded-by: _lock
+        self.misses = 0  # guarded-by: _lock
+        self.evictions = 0  # guarded-by: _lock
+        self.insertions = 0  # guarded-by: _lock
+        self.bypasses = 0  # guarded-by: _lock — admission-policy skips
+        self.rejections = 0  # guarded-by: _lock — window victims losing duels
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._window) + len(self._probation) + len(self._protected)
+
+    def _touch(self, key) -> Optional[Any]:
+        # Lookup + recency/segment maintenance, no counters.  Reentrant:
+        # public callers already hold _lock.
+        with self._lock:
+            ent = self._window.get(key)
+            if ent is not None:
+                self._window.move_to_end(key)
+                return ent[0]
+            ent = self._protected.get(key)
+            if ent is not None:
+                self._protected.move_to_end(key)
+                return ent[0]
+            ent = self._probation.get(key)
+            if ent is not None:
+                # reuse after admission: promote, demoting protected's LRU
+                # back to probation MRU while the protected budget overflows
+                # (byte totals are unchanged — entries move between segments)
+                del self._probation[key]
+                self._protected[key] = ent
+                self._protected_cur += ent[1]
+                while (self._protected_cur > self.protected_bytes
+                       and len(self._protected) > 1):
+                    dkey, dent = self._protected.popitem(last=False)
+                    self._protected_cur -= dent[1]
+                    self._probation[dkey] = dent
+                return ent[0]
+            return None
+
+    def get(self, key) -> Optional[Any]:
+        with self._lock:
+            val = self._touch(key)
+            if val is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return val
+
+    def peek(self, key) -> Optional[Any]:
+        """Like ``get`` but without touching the hit/miss counters — for
+        rendezvous re-checks that must not distort the accounting."""
+        with self._lock:
+            return self._touch(key)
+
+    def bypass(self, n: int = 1) -> None:
+        """Record that an admission policy skipped ``n`` insertions."""
+        with self._lock:
+            self.bypasses += n
+
+    def discard(self, key) -> None:
+        """Drop an entry if present (no counters) — consume-once semantics
+        for prefetch staging under a bypassing admission policy."""
+        with self._lock:
+            for seg, attr in ((self._window, "_window_cur"),
+                              (self._probation, None),
+                              (self._protected, "_protected_cur")):
+                ent = seg.pop(key, None)
+                if ent is not None:
+                    self.cur_bytes -= ent[1]
+                    if attr is not None:
+                        setattr(self, attr, getattr(self, attr) - ent[1])
+                    return
+
+    def _remove(self, key) -> None:
+        # Drop a resident key from whichever segment holds it.  Reentrant.
+        with self._lock:
+            for seg, attr in ((self._window, "_window_cur"),
+                              (self._probation, None),
+                              (self._protected, "_protected_cur")):
+                ent = seg.pop(key, None)
+                if ent is not None:
+                    self.cur_bytes -= ent[1]
+                    if attr is not None:
+                        setattr(self, attr, getattr(self, attr) - ent[1])
+                    return
+
+    def _main_victim(self) -> Optional[Any]:
+        # The main segment's coldest entry: probation LRU first — protected
+        # only becomes evictable once probation is empty.  Reentrant.
+        with self._lock:
+            if self._probation:
+                return next(iter(self._probation))
+            if self._protected:
+                return next(iter(self._protected))
+            return None
+
+    def _evict_main(self) -> None:
+        # Evict the main segment's coldest entry.  Reentrant.
+        with self._lock:
+            if self._probation:
+                _, (_, nb) = self._probation.popitem(last=False)
+            else:
+                _, (_, nb) = self._protected.popitem(last=False)
+                self._protected_cur -= nb
+            self.cur_bytes -= nb
+            self.evictions += 1
+
+    def _insert(self, key, value, nbytes: int, estimate) -> bool:
+        # Shared body of put/put_admit: land in the window, then drain
+        # window victims through main admission.  ``estimate`` None =
+        # duel-free (plain `put` semantics: always admit).  Returns whether
+        # ``key`` itself is resident afterwards.  Reentrant.
+        with self._lock:
+            self._remove(key)  # re-insert refreshes bytes wherever it lived
+            self._window[key] = (value, nbytes)
+            self._window_cur += nbytes
+            self.cur_bytes += nbytes
+            self.insertions += 1
+            main_budget = self.max_bytes - self.window_bytes
+            resident = True
+            while self._window_cur > self.window_bytes and self._window:
+                vkey, vent = self._window.popitem(last=False)
+                self._window_cur -= vent[1]
+                # main admission for the window victim (possibly `key`
+                # itself when it alone exceeds the window budget).  The
+                # victim's bytes stay counted in cur_bytes while it is in
+                # limbo; main usage including the limbo victim is
+                # cur_bytes - window_cur.
+                admitted = True
+                while self.cur_bytes - self._window_cur > main_budget:
+                    mvic = self._main_victim()
+                    if mvic is None:
+                        # victim alone exceeds the main budget: nothing
+                        # left to evict for it, drop it (pressure shows as
+                        # an eviction)
+                        admitted = False
+                        self.evictions += 1
+                        break
+                    if estimate is not None and int(estimate(vkey)) <= int(
+                        estimate(mvic)
+                    ):
+                        # not strictly hotter than main's coldest: the
+                        # window victim loses the duel and leaves the cache
+                        admitted = False
+                        self.rejections += 1
+                        break
+                    self._evict_main()
+                if admitted:
+                    self._probation[vkey] = vent
+                else:
+                    self.cur_bytes -= vent[1]
+                    if vkey == key:
+                        resident = False
+            return resident
+
+    def put(self, key, value, nbytes: int) -> None:
+        nbytes = int(nbytes)
+        if self.max_bytes <= 0 or nbytes > self.max_bytes:
+            return
+        with self._lock:
+            self._insert(key, value, nbytes, None)
+
+    def put_admit(self, key, value, nbytes: int, estimate) -> bool:
+        """Frequency-guarded insertion; see the class docstring.  Returns
+        whether ``key`` is resident after the operation (a window victim
+        losing its duel is the usual False path, counted in
+        ``rejections``)."""
+        nbytes = int(nbytes)
+        if self.max_bytes <= 0 or nbytes > self.max_bytes:
+            return False
+        with self._lock:
+            return self._insert(key, value, nbytes, estimate)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._window.clear()
+            self._probation.clear()
+            self._protected.clear()
+            self.cur_bytes = self._window_cur = self._protected_cur = 0
+
+    @property
+    def hit_rate(self) -> float:
+        # locked so the hits/misses pair comes from one consistent state
+        with self._lock:
+            total = self.hits + self.misses
+            return self.hits / total if total else 0.0
+
+    def snapshot(self) -> dict:
+        # one consistent cut, superset of BlockCache.snapshot (segment sizes
+        # added) so dashboards/tests can treat the two interchangeably
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "entries": len(self._window) + len(self._probation)
+                + len(self._protected),
+                "cur_bytes": self.cur_bytes,
+                "max_bytes": self.max_bytes,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "insertions": self.insertions,
+                "bypasses": self.bypasses,
+                "rejections": self.rejections,
+                "hit_rate": self.hits / total if total else 0.0,
+                "window_entries": len(self._window),
+                "probation_entries": len(self._probation),
+                "protected_entries": len(self._protected),
+                "window_bytes": self._window_cur,
+                "protected_bytes": self._protected_cur,
             }
 
 

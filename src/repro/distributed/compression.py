@@ -15,15 +15,30 @@ This is deliberately demo-grade: the quantizer is validated by property tests
 (tests/test_compression.py) for shape/dtype invariants and bounded error;
 it is exercised in the multi-pod dry-run via a rules variant, not in the
 default path.
+
+The ``*_np`` functions are bit-exact numpy mirrors usable OFF the JAX path
+(the serve/data wire compression encodes batch payloads with them — a
+client decoding a stream must not need a JAX install), so the JAX import is
+gated: on a machine without JAX the numpy entry points still work and only
+the JAX-typed functions raise.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["quantize_ef", "dequantize", "compress_tree", "decompress_tree"]
+try:  # gated: the numpy mirrors must import without a JAX install
+    import jax
+    import jax.numpy as jnp
+except ImportError:  # pragma: no cover - exercised only on jax-less installs
+    jax = None
+    jnp = None
+
+__all__ = [
+    "quantize_ef", "dequantize", "compress_tree", "decompress_tree",
+    "quantize_ef_np", "dequantize_np",
+]
 
 _BLOCK = 256
 
@@ -37,9 +52,17 @@ def _pad_to_block(x: jax.Array) -> tuple[jax.Array, int]:
 
 
 def quantize_ef(
-    g: jax.Array, residual: Optional[jax.Array] = None
-) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """-> (int8 codes (N/B, B), f32 scales (N/B,), new residual like g)."""
+    g: "jax.Array", residual: Optional["jax.Array"] = None
+) -> tuple["jax.Array", "jax.Array", "jax.Array"]:
+    """-> (int8 codes (N/B, B), f32 scales (N/B,), new residual).
+
+    The residual comes back in f32 regardless of ``g``'s dtype — error
+    feedback must accumulate in at least the quantizer's working precision
+    or a bf16 carry re-quantizes away exactly the error it is meant to
+    preserve.  ``quantize_ef(g, residual)`` accepts it back as-is.
+    """
+    if jnp is None:  # pragma: no cover - exercised only on jax-less installs
+        raise RuntimeError("quantize_ef needs JAX; use quantize_ef_np instead")
     gf = g.astype(jnp.float32)
     if residual is not None:
         gf = gf + residual.astype(jnp.float32)
@@ -49,12 +72,53 @@ def quantize_ef(
     scale = jnp.maximum(scale, 1e-12)
     q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
     deq = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[: gf.size]
-    new_residual = (gf - deq.reshape(gf.shape)).astype(gf.dtype)
+    new_residual = (gf - deq.reshape(gf.shape)).astype(jnp.float32)
     return q, scale, new_residual
 
 
-def dequantize(q: jax.Array, scale: jax.Array, shape: tuple, dtype) -> jax.Array:
+def dequantize(
+    q: "jax.Array", scale: "jax.Array", shape: tuple, dtype
+) -> "jax.Array":
+    if jnp is None:  # pragma: no cover - exercised only on jax-less installs
+        raise RuntimeError("dequantize needs JAX; use dequantize_np instead")
     flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def quantize_ef_np(
+    g: np.ndarray, residual: Optional[np.ndarray] = None
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Numpy mirror of :func:`quantize_ef` — same codes, same scales, same
+    residual, no JAX required.  The op sequence matches the JAX version
+    exactly (f32 throughout, round-half-to-even, clip to ±127) so a payload
+    quantized on either side dequantizes identically on the other; pinned
+    by the parity tests in tests/test_compression.py."""
+    gf = np.asarray(g, dtype=np.float32)
+    if residual is not None:
+        gf = gf + np.asarray(residual, dtype=np.float32)
+    flat = gf.reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    if pad:
+        flat = np.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = np.abs(blocks).max(axis=1, initial=0.0) / 127.0
+    scale = np.maximum(scale, 1e-12).astype(np.float32)
+    q = np.clip(np.round(blocks / scale[:, None]), -127, 127).astype(np.int8)
+    deq = (q.astype(np.float32) * scale[:, None]).reshape(-1)[: gf.size]
+    new_residual = (gf - deq.reshape(gf.shape)).astype(np.float32)
+    return q, scale, new_residual
+
+
+def dequantize_np(
+    q: np.ndarray, scale: np.ndarray, shape: tuple, dtype
+) -> np.ndarray:
+    """Numpy mirror of :func:`dequantize` — no JAX required."""
+    q = np.asarray(q)
+    scale = np.asarray(scale, dtype=np.float32)
+    flat = (q.astype(np.float32) * scale[:, None]).reshape(-1)
     n = 1
     for d in shape:
         n *= d
@@ -63,6 +127,8 @@ def dequantize(q: jax.Array, scale: jax.Array, shape: tuple, dtype) -> jax.Array
 
 def compress_tree(grads, residuals=None):
     """Quantize every leaf; returns (codes, scales, residuals) trees."""
+    if jax is None:  # pragma: no cover - exercised only on jax-less installs
+        raise RuntimeError("compress_tree needs JAX")
     leaves, tdef = jax.tree.flatten(grads)
     res_leaves = tdef.flatten_up_to(residuals) if residuals is not None else [None] * len(leaves)
     qs, ss, rs = [], [], []
@@ -76,6 +142,8 @@ def compress_tree(grads, residuals=None):
 
 
 def decompress_tree(codes, scales, template):
+    if jax is None:  # pragma: no cover - exercised only on jax-less installs
+        raise RuntimeError("decompress_tree needs JAX")
     leaves_t, tdef = jax.tree.flatten(template)
     leaves_q = tdef.flatten_up_to(codes)
     leaves_s = tdef.flatten_up_to(scales)

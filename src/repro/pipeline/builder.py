@@ -62,7 +62,7 @@ class Pipeline:
     #: (from_collection), never be silently recorded-but-inert.
     _COLLECTION_FIELDS = (
         "uri", "cache_bytes", "block_rows", "max_extent_rows",
-        "io_workers", "readahead", "admission", "open_opts",
+        "io_workers", "readahead", "admission", "cache_policy", "open_opts",
         # resilience knobs (PR 7) live on PlannedCollection too
         "retries", "retry_backoff_s", "retry_max_backoff_s",
         "retry_deadline_s", "hedge_factor", "hedge_min_s",
@@ -93,6 +93,7 @@ class Pipeline:
         io_workers: int = 1,
         readahead=0,
         admission: str = "always",
+        cache_policy: str = "lru",
         iostats: Any = None,
         **open_opts,
     ) -> "Pipeline":
@@ -113,6 +114,7 @@ class Pipeline:
             io_workers=io_workers,
             readahead=readahead,
             admission=admission,
+            cache_policy=cache_policy,
             open_opts=dict(open_opts),
         ), iostats=iostats)
 
@@ -224,6 +226,33 @@ class Pipeline:
             kw["io_workers"] = int(io_workers)
         if cross_epoch is not None:
             kw["cross_epoch_prefetch"] = bool(cross_epoch)
+        return self._replace(**kw)
+
+    def cache(
+        self,
+        *,
+        bytes: Optional[int] = None,
+        block_rows: Optional[int] = None,
+        admission: Optional[str] = None,
+        policy: Optional[str] = None,
+    ) -> "Pipeline":
+        """Block-cache knobs in one chain call: byte ``bytes`` budget,
+        ``block_rows`` granularity, the ``admission`` policy
+        (``always`` | ``auto`` | ``never``) and the cache ``policy``
+        organization (``lru`` — single segment, the default — or
+        ``wtinylfu``, the windowed segmented cache whose protected segment
+        insulates one consumer's hot redraw set from another's scans; see
+        ``docs/architecture.md``).  All content-free: they move hit rates,
+        never delivered bytes.  Set-if-passed, like :meth:`prefetch`."""
+        kw: dict = {}
+        if bytes is not None:
+            kw["cache_bytes"] = int(bytes)
+        if block_rows is not None:
+            kw["block_rows"] = int(block_rows)
+        if admission is not None:
+            kw["admission"] = str(admission)
+        if policy is not None:
+            kw["cache_policy"] = str(policy)
         return self._replace(**kw)
 
     def resilience(
@@ -478,6 +507,7 @@ def _open_from_spec(spec: DataSpec, iostats: Any = None) -> Any:
         io_workers=spec.io_workers,
         readahead=spec.readahead,
         admission=spec.admission,
+        cache_policy=spec.cache_policy,
         retries=spec.retries,
         retry_backoff_s=spec.retry_backoff_s,
         retry_max_backoff_s=spec.retry_max_backoff_s,

@@ -63,8 +63,10 @@ __all__ = [
 #: all content-free: recovery never changes delivered bytes);
 #: 4 = PR 8 adds the diversity-observatory fields (``diversity_obs``,
 #: ``entropy_floor`` — content-free: telemetry observes the stream and the
-#: floor only steers autotune's choice, which lands in fingerprinted fields).
-SPEC_VERSION = 4
+#: floor only steers autotune's choice, which lands in fingerprinted fields);
+#: 5 = PR 9 adds ``cache_policy`` (content-free: cache organization changes
+#: hit rates, never delivered bytes).
+SPEC_VERSION = 5
 
 #: name -> strategy class.  Params are the dataclass fields, JSON-typed;
 #: ``weights`` / ``labels`` may instead arrive as ``weights_obs`` /
@@ -162,7 +164,7 @@ CONTENT_FREE_FIELDS = frozenset({
     "rank", "prefetch_workers", "max_outstanding", "straggler_factor",
     "straggler_min_latency", "cache_bytes", "block_rows",
     "max_extent_rows", "io_workers", "readahead", "admission",
-    "cross_epoch_prefetch",
+    "cache_policy", "cross_epoch_prefetch",
     # resilience: recovery re-reads the same bytes — delivered batches are
     # bitwise invariant under every one of these (the chaos determinism
     # tests pin that), so a resume across a retry-policy change is legal
@@ -196,6 +198,7 @@ class DataSpec:
     io_workers: int = 1  # >1: concurrent miss-extent reads
     readahead: Any = 0  # >0: fetches double-buffered ahead; "auto" = adaptive
     admission: str = "always"  # always | auto (stream + TinyLFU) | never
+    cache_policy: str = "lru"  # lru | wtinylfu (windowed segmented cache)
     open_opts: dict = dataclasses.field(default_factory=dict)  # opener kwargs
 
     # ---- sampling: WHICH rows, in WHAT order
@@ -249,6 +252,10 @@ class DataSpec:
         if self.admission not in ("always", "auto", "never"):
             raise ValueError(
                 f"admission must be always|auto|never, got {self.admission!r}"
+            )
+        if self.cache_policy not in ("lru", "wtinylfu"):
+            raise ValueError(
+                f"cache_policy must be lru|wtinylfu, got {self.cache_policy!r}"
             )
         from repro.data.readplan import normalize_readahead
 

@@ -1,0 +1,34 @@
+"""repro.serve.data — multi-tenant DataSpec batch serving (docs/serving.md).
+
+A local batch-serving service: tenants submit a
+:class:`~repro.pipeline.DataSpec` over a length-prefixed socket protocol
+(:mod:`.protocol`, wire version 1) and stream their minibatches back
+through ONE shared I/O plane — one block cache, one rendezvous table, one
+IOStats base per dataset — with per-tenant admission, backpressure,
+quotas and attribution (:mod:`.server`), consumed by a
+:class:`~.client.DataClient` that behaves like a local ``DataPipeline``
+(:mod:`.client`).
+"""
+from .client import DataClient
+from .protocol import (
+    COMPRESSIONS,
+    WIRE_VERSION,
+    ProtocolError,
+    ServeError,
+    decode_batch,
+    encode_batch,
+)
+from .server import DataServeServer, ServeConfig, ServeStats
+
+__all__ = [
+    "DataClient",
+    "DataServeServer",
+    "ServeConfig",
+    "ServeStats",
+    "ProtocolError",
+    "ServeError",
+    "encode_batch",
+    "decode_batch",
+    "WIRE_VERSION",
+    "COMPRESSIONS",
+]

@@ -480,6 +480,13 @@ class TestRepoGate:
                 "repro.data.backend.PlannedCollection._fl",
                 "repro.data.readplan.BlockCache._lock",
             ),
+            # cache_policy="wtinylfu": the segmented cache is a drop-in for
+            # BlockCache behind the same rendezvous lock, so it inherits the
+            # same (acyclic) edge.
+            (
+                "repro.data.backend.PlannedCollection._fl",
+                "repro.data.readplan.SegmentedBlockCache._lock",
+            ),
             (
                 "repro.data.cloud.CloudAdapter._sem",
                 "repro.data.iostats.IOStats._lock",

@@ -8,7 +8,9 @@ from repro.distributed.compression import (
     compress_tree,
     decompress_tree,
     dequantize,
+    dequantize_np,
     quantize_ef,
+    quantize_ef_np,
 )
 
 
@@ -56,3 +58,79 @@ def test_tree_roundtrip():
     np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(tree["a"]), atol=0.05)
     assert out["b"]["c"].dtype == jnp.bfloat16
     assert codes["a"].dtype == jnp.int8
+
+
+@pytest.mark.parametrize(
+    "shape", [(1,), (255,), (256,), (257,), (3, 5), (4, 7, 9), (1000,)]
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_roundtrip_odd_shapes_dtypes(shape, dtype):
+    """quantize->dequantize restores shape/dtype with bounded per-block error
+    at every padding alignment, not just multiples of the 256 block."""
+    rng = np.random.default_rng(int(np.prod(shape)))
+    g = jnp.asarray(rng.normal(0, 2.0, shape), dtype)
+    q, s, resid = quantize_ef(g)
+    n_blocks = -(-int(np.prod(shape)) // 256)
+    assert q.shape == (n_blocks, 256) and q.dtype == jnp.int8
+    assert s.shape == (n_blocks,)
+    assert resid.shape == g.shape and resid.dtype == jnp.float32
+    deq = dequantize(q, s, g.shape, dtype)
+    assert deq.shape == shape and deq.dtype == dtype
+    # error bounded by half a quantization step per element (plus the
+    # target dtype's own rounding for bf16/f16)
+    gf = np.asarray(g, np.float32)
+    err = np.abs(np.asarray(deq, np.float32) - gf)
+    step = np.repeat(np.asarray(s), 256)[: gf.size].reshape(shape)
+    tol = step * 0.51 + np.abs(gf) * 0.01 + 1e-6
+    assert np.all(err <= tol)
+
+
+def test_residual_carry_across_steps():
+    """The residual returned at step t, fed back at t+1, is consumed: two
+    steps of EF on the same gradient leave |applied/2 - g| below one step's
+    quantization error (the bias cancels instead of accumulating)."""
+    rng = np.random.default_rng(7)
+    g = jnp.asarray(rng.normal(0, 1, 777), jnp.float32)  # odd, forces padding
+    q1, s1, r1 = quantize_ef(g)
+    d1 = dequantize(q1, s1, g.shape, g.dtype)
+    # residual is exactly what the first step failed to deliver
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(g - d1), atol=1e-6)
+    q2, s2, r2 = quantize_ef(g, r1)
+    d2 = dequantize(q2, s2, g.shape, g.dtype)
+    # delivered-so-far + outstanding residual == 2x the true gradient
+    np.testing.assert_allclose(
+        np.asarray(d1 + d2 + r2), np.asarray(2.0 * g), atol=1e-5
+    )
+    two_step_err = np.abs(np.asarray((d1 + d2) / 2 - g))
+    one_step_err = np.abs(np.asarray(d1 - g))
+    assert two_step_err.mean() <= one_step_err.mean() + 1e-7
+
+
+@pytest.mark.parametrize("n", [1, 17, 256, 300, 5000])
+def test_numpy_mirror_parity(n):
+    """quantize_ef_np produces byte-identical codes/scales to the JAX path
+    and dequantize_np inverts either side's output — the wire contract."""
+    rng = np.random.default_rng(n)
+    g = rng.normal(0, 3.0, n).astype(np.float32)
+    qj, sj, rj = quantize_ef(jnp.asarray(g))
+    qn, sn, rn = quantize_ef_np(g)
+    np.testing.assert_array_equal(np.asarray(qj), qn)
+    np.testing.assert_array_equal(np.asarray(sj), sn)
+    np.testing.assert_allclose(np.asarray(rj), rn, atol=1e-7)
+    # cross-decode: numpy decodes the JAX codes and vice versa
+    np.testing.assert_array_equal(
+        dequantize_np(np.asarray(qj), np.asarray(sj), g.shape, np.float32),
+        np.asarray(dequantize(jnp.asarray(qn), jnp.asarray(sn), g.shape,
+                              jnp.float32)),
+    )
+
+
+def test_numpy_mirror_residual_carry():
+    rng = np.random.default_rng(3)
+    g = rng.normal(0, 1, 513).astype(np.float32)
+    resid = None
+    applied = np.zeros_like(g)
+    for _ in range(20):
+        q, s, resid = quantize_ef_np(g, resid)
+        applied += dequantize_np(q, s, g.shape, np.float32)
+    np.testing.assert_allclose(applied / 20, g, atol=2e-2)

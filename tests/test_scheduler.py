@@ -76,3 +76,82 @@ def test_slots_are_reused():
     done = batcher.run()
     assert len(done) == 3
     assert all(len(r.out) == 3 for r in done)
+
+
+# ------------------------------------------------ admission-control contract
+# The serve/data server's tenant admission reuses this scheduler's
+# slot-level pattern (decide under the lock, expensive work outside), so the
+# pattern's own contract is pinned here: exhausted slots queue instead of
+# overcommitting, the queue drains FIFO, and rids are stable under
+# concurrent submission.
+
+def _batcher(batch_slots):
+    cfg = smoke_config("smollm-360m")
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, ContinuousBatcher(
+        model, params, batch_slots=batch_slots, max_len=64
+    )
+
+
+def test_admission_stops_at_slot_exhaustion():
+    cfg, batcher = _batcher(2)
+    rng = np.random.default_rng(7)
+    for _ in range(5):
+        batcher.submit(rng.integers(0, cfg.vocab_size, 6).astype(np.int32), 4)
+    batcher.step()
+    # exactly B requests admitted; the rest wait in the queue, unstarted
+    assert sum(r is not None for r in batcher.slots) == 2
+    assert len(batcher.queue) == 3
+    assert all(len(r.out) == 0 for r in batcher.queue)
+    done = batcher.run()
+    assert len(done) == 5  # queued requests were admitted later, not lost
+    assert all(len(r.out) == 4 for r in done)
+
+
+def test_admission_is_fifo():
+    cfg, batcher = _batcher(1)
+    rng = np.random.default_rng(9)
+    # unequal max_new: only FIFO admission makes completion order == rid
+    # order on a single slot (a LIFO/priority queue would reorder)
+    for m in (5, 2, 4, 3):
+        batcher.submit(rng.integers(0, cfg.vocab_size, 6).astype(np.int32), m)
+    done = batcher.run()
+    assert [r.rid for r in done] == [0, 1, 2, 3]
+    assert [r.rid for r in batcher.completed] == [0, 1, 2, 3]
+    assert [len(r.out) for r in done] == [5, 2, 4, 3]
+
+
+def test_rids_stable_under_concurrent_submission():
+    import threading
+
+    cfg, batcher = _batcher(2)
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(40)]
+
+    def submit(k):
+        for p in prompts[k * 5:(k + 1) * 5]:
+            batcher.submit(p, 2)
+
+    threads = [threading.Thread(target=submit, args=(k,)) for k in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    rids = [r.rid for r in batcher.queue]
+    assert sorted(rids) == list(range(40))  # no collisions, no gaps
+
+
+def test_rids_account_for_completed_requests():
+    cfg, batcher = _batcher(1)
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    batcher.submit(prompt, 2)
+    batcher.submit(prompt, 2)
+    assert len(batcher.run()) == 2
+    # auto-rids keep counting after completions drain the queue
+    batcher.submit(prompt, 2)
+    batcher.submit(prompt, 2, rid=99)  # explicit rid is preserved verbatim
+    done = batcher.run()
+    assert [r.rid for r in done] == [0, 1, 2, 99]

@@ -1,0 +1,491 @@
+"""Multi-tenant batch serving: wire parity, resume refusal, shared-cache
+fairness, admission/quota/backpressure — plus the IOStats merge/scoping and
+segmented-cache satellites this subsystem is built on.
+
+Every test runs under the runtime lock-order witness: the server adds a new
+lock (and leans on IOStats/BlockCache locks from many threads), so any
+acquisition order the static graph did not predict fails here.
+"""
+import json
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.dataset import LoaderState
+from repro.data import BlockCache, IOStats, SegmentedBlockCache
+from repro.data.csr_store import CSRBatch
+from repro.data.iostats import PendingIO
+from repro.data.synth import generate_tahoe_like
+from repro.pipeline import DataSpec, Pipeline
+from repro.serve.data import (
+    DataClient,
+    DataServeServer,
+    ProtocolError,
+    ServeConfig,
+    ServeError,
+    decode_batch,
+    encode_batch,
+)
+
+
+@pytest.fixture(autouse=True)
+def _witness(lock_order_witness):
+    yield
+
+
+@pytest.fixture(scope="module")
+def data_dir(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("serve_fixture"))
+    generate_tahoe_like(d, n_cells=2000, n_genes=64, n_plates=3, seed=0)
+    return d
+
+
+def _spec(data_dir, *, seed=7, scheme="sharded-csr", **kw) -> DataSpec:
+    pipe = (
+        Pipeline.from_uri(f"{scheme}://{data_dir}")
+        .strategy("block", block_size=16)
+        .batch(32, fetch_factor=4)
+        .seed(seed)
+    )
+    spec = pipe._spec
+    return spec.replace(**kw) if kw else spec
+
+
+@pytest.fixture()
+def server():
+    srv = DataServeServer(ServeConfig(max_tenants=3)).start()
+    yield srv
+    srv.stop()
+
+
+def _batches_equal(a, b) -> bool:
+    if isinstance(a, CSRBatch):
+        return (
+            isinstance(b, CSRBatch)
+            and np.array_equal(a.data, b.data)
+            and np.array_equal(a.indices, b.indices)
+            and np.array_equal(a.indptr, b.indptr)
+            and a.n_var == b.n_var
+            and list(a.obs) == list(b.obs)
+            and all(np.array_equal(a.obs[k], b.obs[k]) for k in a.obs)
+        )
+    return np.array_equal(a, b)
+
+
+# ===================================================================== codec
+def test_codec_csr_roundtrip_bitwise():
+    rng = np.random.default_rng(0)
+    batch = CSRBatch(
+        data=rng.normal(size=300).astype(np.float32),
+        indices=rng.integers(0, 64, 300).astype(np.int32),
+        indptr=np.sort(rng.integers(0, 300, 31)).astype(np.int64),
+        n_var=64,
+        obs={"plate": np.array(["p1", "p2"] * 15), "y": np.arange(30)},
+    )
+    state = {"seed": 7, "epoch": 0, "fetch_cursor": 3, "batch_cursor": 1,
+             "fingerprint": "abc"}
+    out, st = decode_batch(encode_batch(batch, state))
+    assert st == state
+    assert _batches_equal(batch, out)
+
+
+def test_codec_dense_and_map_roundtrip():
+    x = np.random.default_rng(1).normal(size=(8, 5)).astype(np.float32)
+    out, _ = decode_batch(encode_batch(x, {}))
+    assert np.array_equal(x, out) and out.dtype == x.dtype
+    m = {"tokens": np.arange(12, dtype=np.int32), "w": x}
+    out2, _ = decode_batch(encode_batch(m, {}))
+    assert list(out2) == ["tokens", "w"]
+    assert all(np.array_equal(m[k], out2[k]) for k in m)
+
+
+def test_codec_qint8_bounded_error_ints_exact():
+    rng = np.random.default_rng(2)
+    m = {"f": rng.normal(0, 3, 1000).astype(np.float32),
+         "i": rng.integers(0, 9, 500).astype(np.int64)}
+    payload = encode_batch(m, {}, compression="qint8")
+    out, _ = decode_batch(payload)
+    assert np.array_equal(m["i"], out["i"])  # ints never quantized
+    step = np.abs(m["f"]).max() / 127.0
+    assert np.abs(out["f"] - m["f"]).max() <= step  # per-block bound <= global
+    # the fp32 array alone shrinks ~4x (4000 B -> 1024 codes + 16 scales);
+    # the int array ships raw, so compare the saving, not a global ratio
+    raw = len(encode_batch(m, {}))
+    assert raw - len(payload) > 2500
+
+
+def test_codec_rejects_unknown_batch_type():
+    with pytest.raises(ProtocolError):
+        encode_batch(object(), {})
+
+
+# ==================================================================== config
+def test_serve_config_validation_and_roundtrip():
+    cfg = ServeConfig(max_tenants=2, quota_bytes=123, cache_policy="wtinylfu")
+    assert ServeConfig.from_dict(cfg.to_dict()) == cfg
+    with pytest.raises(ValueError):
+        ServeConfig(max_tenants=0)
+    with pytest.raises(ValueError):
+        ServeConfig(compression="zstd")
+    with pytest.raises(ValueError):
+        ServeConfig(cache_policy="clock")
+    with pytest.raises(ValueError):
+        ServeConfig.from_dict({"max_tenant": 3})  # typo'd knob refused
+
+
+# ==================================================== wire parity and resume
+def test_wire_parity_bitwise_two_epochs(data_dir, server):
+    spec = _spec(data_dir)
+    local = Pipeline.from_spec(spec).build()
+    with DataClient(server.address, spec) as cli:
+        assert cli.fingerprint == spec.fingerprint()
+        assert len(cli) == len(local)
+        for _epoch in range(2):
+            lit, rit = iter(local), iter(cli)
+            for lb in lit:
+                rb = next(rit)
+                assert _batches_equal(lb, rb)
+                # the post-batch resume state matches the local pipeline's
+                assert cli.state() == local.state()
+            with pytest.raises(StopIteration):
+                next(rit)
+            assert cli.state() == local.state()  # epoch advanced identically
+    local.close()
+
+
+def test_mid_epoch_resume_over_wire(data_dir, server):
+    spec = _spec(data_dir)
+    with DataClient(server.address, spec) as cli:
+        it = iter(cli)
+        for _ in range(5):
+            next(it)
+        ckpt = cli.state()
+        assert ckpt.fingerprint == spec.fingerprint()
+
+    local = Pipeline.from_spec(spec).build()
+    local.load_state(ckpt)
+    want = list(iter(local))
+    local.close()
+
+    with DataClient(server.address, spec) as cli2:
+        cli2.load_state(ckpt)
+        got = list(iter(cli2))
+    assert len(got) == len(want) > 0
+    assert all(_batches_equal(a, b) for a, b in zip(want, got))
+
+
+def test_fingerprint_refusal_is_server_side(data_dir, server):
+    spec = _spec(data_dir)
+    with DataClient(server.address, spec) as cli:
+        bad = cli.state().to_dict()
+        bad["fingerprint"] = "deadbeefdeadbeef"
+        # the CLIENT accepts the state unconditionally — the refusal must
+        # come back over the wire, from the server's pipeline
+        cli.load_state(bad)
+        with pytest.raises(ValueError, match="fingerprint"):
+            next(iter(cli))
+        # the connection survives a refusal: a good state still streams
+        cli.set_epoch(0)
+        assert _batches_equal(
+            next(iter(cli)),
+            next(iter(Pipeline.from_spec(spec).build())),
+        )
+
+
+def test_abandoned_epoch_resyncs(data_dir, server):
+    spec = _spec(data_dir)
+    local = Pipeline.from_spec(spec).build()
+    with DataClient(server.address, spec) as cli:
+        for i, _b in enumerate(iter(cli)):
+            if i == 2:
+                break  # abandon mid-epoch: frames still in flight
+        st = cli.state()
+        local.load_state(st)
+        want = list(iter(local))
+        got = list(iter(cli))  # must resync, not misparse stale frames
+    local.close()
+    assert len(got) == len(want)
+    assert all(_batches_equal(a, b) for a, b in zip(want, got))
+
+
+def test_qint8_end_to_end_approximate(data_dir, server):
+    spec = _spec(data_dir)
+    local = Pipeline.from_spec(spec).build()
+    with DataClient(server.address, spec, compression="qint8") as cli:
+        assert cli.compression == "qint8"
+        lb = next(iter(local))
+        rb = next(iter(cli))
+    local.close()
+    # integer structure exact, float values within the quantizer bound
+    assert np.array_equal(lb.indices, rb.indices)
+    assert np.array_equal(lb.indptr, rb.indptr)
+    assert lb.data.shape == rb.data.shape
+    step = np.abs(lb.data).max() / 127.0
+    assert np.abs(lb.data - rb.data).max() <= step + 1e-6
+
+
+def test_bad_spec_refused(server):
+    with pytest.raises(ServeError) as ei:
+        DataClient(server.address, DataSpec(uri=None))  # in-process specs
+    assert ei.value.code == "bad_spec"
+    with pytest.raises(ServeError) as ei:
+        DataClient(server.address, DataSpec(uri="sharded-csr:///nope"))
+    assert ei.value.code == "bad_spec"
+
+
+# ======================================================= shared-cache dedup
+def test_two_tenants_share_one_cache(data_dir):
+    """The whole point of the subsystem: tenant 2's reads are (mostly)
+    tenant 1's cache hits — requests and bytes grow far less than 2x."""
+    spec = _spec(data_dir).replace(
+        uri=f"cloud://sharded-csr://{data_dir}?latency_scale=0"
+    )
+    srv = DataServeServer(ServeConfig(max_tenants=2)).start()
+    try:
+        with DataClient(srv.address, spec) as c1:
+            n1 = sum(1 for _ in iter(c1))
+        after_one = srv.stats().aggregate
+        with DataClient(srv.address, spec) as c2:
+            n2 = sum(1 for _ in iter(c2))
+        after_two = srv.stats()
+    finally:
+        srv.stop()
+    assert n1 == n2 > 0
+    agg = after_two.aggregate
+    assert after_one["requests"] > 0
+    # tenant 2 re-read almost nothing: well under 2x on both axes
+    assert agg["requests"] < 1.5 * after_one["requests"]
+    assert agg["bytes_read"] < 1.5 * after_one["bytes_read"]
+    assert agg["cache_hits"] > after_one["cache_hits"]
+    # one pooled collection, and per-tenant attribution sums into the
+    # aggregate (scoped children + shared base, no double counting)
+    assert len(after_two.collections) == 1
+    # rows are counted at fetch granularity, cache hit or not — each tenant's
+    # epoch fetched exactly its delivered rows, and nothing double counts
+    assert agg["rows"] == (n1 + n2) * 32
+
+
+def test_per_tenant_attribution_scoped(data_dir):
+    srv = DataServeServer(ServeConfig(max_tenants=2)).start()
+    try:
+        spec = _spec(data_dir)
+        with DataClient(srv.address, spec) as cli:
+            n = sum(1 for _ in iter(cli))
+            st = cli.stats()
+        tenants = st["tenants"]
+        assert len(tenants) == 1
+        t = tenants[0]
+        assert n > 0
+        assert t["iostats"]["rows"] == n * 32  # producer records -> child
+        assert t["batches_sent"] == n and t["bytes_sent"] > 0
+        assert st["shared"]["rows"] == 0  # nothing leaked onto the base
+        assert st["aggregate"]["rows"] == n * 32  # merge() reassembles
+    finally:
+        srv.stop()
+
+
+# ================================================ admission, quota, slots
+def test_admission_fifo_under_slot_exhaustion(data_dir):
+    """One slot, three tenants: B and C queue while A streams; the slot
+    hands off in FIFO order when A leaves."""
+    srv = DataServeServer(
+        ServeConfig(max_tenants=1, admit_timeout_s=30.0)
+    ).start()
+    spec = _spec(data_dir)
+    order: list = []
+    olock = threading.Lock()
+
+    def tenant(name, delay):
+        time.sleep(delay)
+        with DataClient(srv.address, spec) as c:
+            with olock:
+                order.append(name)
+            next(iter(c))
+    try:
+        a = DataClient(srv.address, spec)  # holds the only slot
+        next(iter(a))
+        tb = threading.Thread(target=tenant, args=("B", 0.0))
+        tc = threading.Thread(target=tenant, args=("C", 0.4))
+        tb.start()
+        tc.start()
+        time.sleep(0.9)  # both queued behind A now
+        adm = srv.stats().admission
+        assert adm["active"] == 1 and adm["waiting"] == 2
+        a.close()  # releases the slot -> FIFO handoff
+        tb.join(timeout=20)
+        tc.join(timeout=20)
+    finally:
+        srv.stop()
+    assert order == ["B", "C"]
+
+
+def test_admission_timeout_errors(data_dir):
+    srv = DataServeServer(
+        ServeConfig(max_tenants=1, admit_timeout_s=0.3)
+    ).start()
+    spec = _spec(data_dir)
+    try:
+        a = DataClient(srv.address, spec)
+        next(iter(a))
+        with pytest.raises(ServeError) as ei:
+            DataClient(srv.address, spec)
+        assert ei.value.code == "admission_timeout"
+        a.close()
+        adm = srv.stats().admission
+        assert adm["admit_timeouts"] == 1
+    finally:
+        srv.stop()
+
+
+def test_quota_exhausted(data_dir):
+    srv = DataServeServer(ServeConfig(quota_bytes=20_000)).start()
+    spec = _spec(data_dir)
+    try:
+        with DataClient(srv.address, spec) as cli:
+            with pytest.raises(ServeError) as ei:
+                for _ in iter(cli):
+                    pass
+        assert ei.value.code == "quota_exhausted"
+    finally:
+        srv.stop()
+
+
+def test_http_stats_endpoint(data_dir, server):
+    spec = _spec(data_dir)
+    with DataClient(server.address, spec) as cli:
+        next(iter(cli))
+    s = socket.create_connection(server.address)
+    s.sendall(b"GET /stats HTTP/1.0\r\n\r\n")
+    resp = b""
+    while True:
+        chunk = s.recv(1 << 16)
+        if not chunk:
+            break
+        resp += chunk
+    s.close()
+    head, body = resp.split(b"\r\n\r\n", 1)
+    assert b"200 OK" in head
+    st = json.loads(body)
+    assert set(st) >= {"tenants", "aggregate", "shared", "admission",
+                       "collections", "config"}
+    assert st["admission"]["admitted_total"] >= 1
+
+
+# ===================================================== IOStats merge/scoping
+def test_iostats_merge_adds_counters():
+    a, b = IOStats(), IOStats()
+    a.record(runs=1, rows=10, bytes_read=100, wall_s=0.5)
+    b.record(runs=2, rows=20, bytes_read=200, wall_s=0.1, cache_hits=3)
+    a.merge(b)
+    assert a.runs == 3 and a.rows == 30 and a.bytes_read == 300
+    assert a.cache_hits == 3 and b.runs == 2  # source untouched
+
+
+def test_iostats_merge_min_semantics_for_entropy_floor():
+    a, b, c = IOStats(), IOStats(), IOStats()
+    a.record_diversity(3.0)
+    b.record_diversity(1.5)
+    a.merge(b)
+    assert a.div_entropy_min == 1.5 and a.div_batches == 2
+    a.merge(c)  # merging a diversity-free child must not clobber the min
+    assert a.div_entropy_min == 1.5
+
+
+def test_iostats_scoped_redirects_and_restores():
+    base = IOStats()
+    child = base.child()
+    with base.scoped(child):
+        base.record(runs=1, rows=5, bytes_read=50, wall_s=0.0)
+        inner = base.child()
+        with base.scoped(inner):  # reentrant: inner shadows outer
+            base.record(runs=1, rows=1, bytes_read=1, wall_s=0.0)
+    base.record(runs=1, rows=2, bytes_read=2, wall_s=0.0)
+    assert (child.rows, inner.rows, base.rows) == (5, 1, 2)
+    agg = base.child()
+    for s in (base, child, inner):
+        agg.merge(s)
+    assert (agg.runs, agg.rows, agg.bytes_read) == (3, 8, 53)
+
+
+def test_iostats_commit_follows_scope():
+    base = IOStats()
+    child = base.child()
+    pend = PendingIO(runs=2, rows=7, bytes_read=70)
+    with base.scoped(child):
+        base.commit(pend)
+    assert child.rows == 7 and base.rows == 0
+    base.commit(PendingIO(runs=1, rows=3, bytes_read=30))
+    assert base.rows == 3
+
+
+def test_iostats_scoped_none_is_noop():
+    base = IOStats()
+    with base.scoped(None):
+        base.record(runs=1, rows=4, bytes_read=4, wall_s=0.0)
+    assert base.rows == 4
+
+
+# ============================================= segmented cache (W-TinyLFU)
+def _mixed_tenant_workload(cache):
+    """Tenant A's hot redraw set vs tenant B's one-touch scan — the
+    shared-cache fairness pathology.  Returns A's surviving hot blocks."""
+    for k in range(10):
+        cache.put(("A", k), b"x", 90)
+    for _ in range(5):  # A redraws blocks 0..7: its hot set
+        for k in range(8):
+            cache.get(("A", k))
+    # B scans 20 cold blocks exactly once; the sketch (aged) says the
+    # scan candidates look marginally warmer than A's aged hot set
+    est = lambda key: 2 if key[0] == "B" else 1  # noqa: E731
+    for j in range(20):
+        cache.put_admit(("B", j), b"y", 90, est)
+    return [k for k in range(8) if cache.peek(("A", k)) is not None]
+
+
+def test_segmented_cache_protects_hot_set_from_scan():
+    plain = BlockCache(1000)
+    seg = SegmentedBlockCache(1000)
+    assert _mixed_tenant_workload(plain) == []  # LRU+TinyLFU: hot set gone
+    assert _mixed_tenant_workload(seg) == list(range(8))  # protected survives
+    snap = seg.snapshot()
+    assert snap["rejections"] > 0  # scan victims lost their duels
+    assert snap["protected_entries"] == 8
+    assert set(snap) >= {"window_entries", "probation_entries",
+                         "protected_bytes", "window_bytes"}
+
+
+def test_segmented_cache_basic_lru_contract():
+    seg = SegmentedBlockCache(1000)
+    seg.put("a", 1, 400)
+    seg.put("b", 2, 400)
+    assert seg.get("a") == 1 and seg.get("b") == 2
+    assert seg.get("missing") is None
+    assert seg.hits == 2 and seg.misses == 1
+    seg.discard("a")
+    assert seg.peek("a") is None and len(seg) == 1
+    seg.clear()
+    assert len(seg) == 0 and seg.cur_bytes == 0
+
+
+def test_wtinylfu_policy_through_pipeline_is_bit_identical(data_dir):
+    batches = {}
+    fps = {}
+    for policy in ("lru", "wtinylfu"):
+        pipe = (
+            Pipeline.from_uri(f"sharded-csr://{data_dir}",
+                              cache_bytes=1 << 20, cache_policy=policy)
+            .strategy("block", block_size=16)
+            .batch(32, fetch_factor=4)
+            .seed(1)
+            .build()
+        )
+        batches[policy] = [b.to_dense() for b in iter(pipe)]
+        fps[policy] = pipe.spec.fingerprint()
+        pipe.close()
+    assert fps["lru"] == fps["wtinylfu"]  # the policy is content-free
+    assert len(batches["lru"]) == len(batches["wtinylfu"]) > 0
+    for x, y in zip(batches["lru"], batches["wtinylfu"]):
+        assert np.array_equal(x, y)

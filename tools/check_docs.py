@@ -19,6 +19,10 @@ Three checks keep the docs honest against the code:
    ``PendingIO`` dataclass fields — the same list the iostats-pairing
    contract check enforces) must appear as a ``| `counter` |`` row in
    ``docs/architecture.md``.
+5. **Serving knob table** — every field of
+   ``repro.serve.data.ServeConfig`` must appear as a ``| `knob` |`` row in
+   ``docs/serving.md`` (a new server knob without a documented row fails
+   the build).
 
 Exit code 0 = docs fresh; nonzero with a pointed message otherwise.
 """
@@ -35,6 +39,7 @@ sys.path.insert(0, REPO)  # for tools.analyze (the counter registry)
 README = os.path.join(REPO, "README.md")
 PIPELINE_DOC = os.path.join(REPO, "docs", "pipeline.md")
 ARCH_DOC = os.path.join(REPO, "docs", "architecture.md")
+SERVING_DOC = os.path.join(REPO, "docs", "serving.md")
 IOSTATS_SRC = os.path.join(REPO, "src", "repro", "data", "iostats.py")
 
 
@@ -93,6 +98,21 @@ def check_iostats_counters(arch_doc_text: str) -> list[str]:
     if not counters:
         return ["<no PendingIO counters found in src/repro/data/iostats.py>"]
     return [c for c in counters if f"| `{c}`" not in arch_doc_text]
+
+
+def check_serve_knobs(serving_doc_text: str) -> list[str]:
+    """Every ServeConfig field needs a ``| `knob` |`` row in
+    docs/serving.md — the server's whole surface is declarative, so its
+    documentation is checkable the same way DataSpec's is."""
+    import dataclasses
+
+    from repro.serve.data import ServeConfig
+
+    return [
+        f.name
+        for f in dataclasses.fields(ServeConfig)
+        if f"| `{f.name}`" not in serving_doc_text
+    ]
 
 
 def extract_quickstart(readme_text: str) -> str:
@@ -163,6 +183,20 @@ def main() -> int:
         )
         return 1
     print("OK: every IOStats counter documented in docs/architecture.md")
+
+    if not os.path.exists(SERVING_DOC):
+        print("FAIL: docs/serving.md (ServeConfig knob table) is missing")
+        return 1
+    with open(SERVING_DOC) as f:
+        missing_knobs = check_serve_knobs(f.read())
+    if missing_knobs:
+        print(
+            f"FAIL: ServeConfig knob(s) missing from docs/serving.md: "
+            f"{missing_knobs}\n"
+            "      add a | `knob` | row per ServeConfig field"
+        )
+        return 1
+    print("OK: every ServeConfig knob documented in docs/serving.md")
     return 0
 
 
