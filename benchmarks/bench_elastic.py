@@ -1,0 +1,232 @@
+"""Elastic data fabric vs isolated rank loaders — kill/resize continuation
+and the cross-rank read-dedup dividend.
+
+Two claims from the elastic fabric (docs/architecture.md, "Elastic fabric"):
+
+- **bitwise continuation** — a world that loses a rank mid-epoch and is
+  resized N→M→N delivers, across all ranks and phases, EXACTLY the
+  never-resized global stream (fetches are pure in ``(seed, epoch, gid)``,
+  so merged ``remaining`` lists re-home the stream losslessly);
+- **cross-rank dedup (RINAS)** — co-located rank loaders sharing ONE
+  collection (one block cache + rendezvous table, each rank tagged through
+  a :class:`RankView`) issue strictly fewer backend requests and bytes per
+  sample than the same ranks on isolated collections splitting the same
+  cache budget, with the dividend attributed in ``shared_rank_hits``.
+
+Both arms run the cloud-profiled fixture (``cloud://`` over the shared
+Tahoe-like store, ``latency_scale=0`` — request accounting without real
+sleeps).  Streams are compared by per-batch digest keyed on
+``(global_fetch_id, batch_index)`` so the three runs (reference, elastic,
+isolated) are checked bitwise without holding three dense epochs in memory.
+
+``run_elastic`` writes machine-readable ``BENCH_PR10.json``; smoke gate #8
+(``python -m benchmarks.run --smoke``) exits nonzero unless the kill/resize
+stream is bitwise identical to the reference AND the shared-collection arm
+issues strictly fewer requests and bytes.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_DATA_DIR, N_CELLS, N_GENES, emit
+from repro.core import BlockShuffling, ScDataset
+from repro.data import SATA_SSD, IOStats, generate_tahoe_like, open_collection
+from repro.distributed.elastic import ElasticFabric, tagged_batches
+
+PR10_JSON = os.environ.get("BENCH_PR10_JSON", "BENCH_PR10.json")
+
+WORLD = 3
+BATCH_SIZE = 64
+FETCH_FACTOR = 8
+BLOCK_SIZE = 16
+#: batches each rank delivers between kill/resize events
+PHASE_BATCHES = int(os.environ.get("BENCH_ELASTIC_PHASE", "8"))
+#: total block-cache budget, split evenly in the isolated arm
+CACHE_TOTAL = 48 << 20
+
+DS_KW = dict(batch_size=BATCH_SIZE, fetch_factor=FETCH_FACTOR, seed=0)
+
+
+def _uri() -> str:
+    return (
+        f"cloud://sharded-csr://{BENCH_DATA_DIR}"
+        "?profile=same-region&latency_scale=0"
+    )
+
+
+def _digest(batch) -> str:
+    h = hashlib.blake2b(digest_size=16)
+    if hasattr(batch, "indptr"):  # CSRBatch
+        for a in (batch.data, batch.indices, batch.indptr):
+            h.update(np.ascontiguousarray(a).tobytes())
+    else:
+        h.update(np.ascontiguousarray(batch).tobytes())
+    return h.hexdigest()
+
+
+def _drain_tagged(ds, got: dict, limit=None) -> int:
+    n = 0
+    for gid, j, b in tagged_batches(ds, limit=limit):
+        key = (gid, j)
+        assert key not in got, f"duplicate delivery of {key}"
+        got[key] = _digest(b)
+        n += 1
+    return n
+
+
+def _interleave(fab: ElasticFabric, got: dict, limit=None) -> int:
+    """Round-robin the ranks batch-by-batch — the co-located schedule."""
+    its = {r: tagged_batches(ds, limit=limit)
+           for r, ds in sorted(fab.loaders.items())}
+    n = 0
+    while its:
+        for r in list(its):
+            try:
+                gid, j, b = next(its[r])
+            except StopIteration:
+                del its[r]
+                continue
+            key = (gid, j)
+            assert key not in got, f"duplicate delivery of {key}"
+            got[key] = _digest(b)
+            n += 1
+    return n
+
+
+def _reference() -> dict:
+    col = open_collection(_uri(), iostats=IOStats(), cache_bytes=CACHE_TOTAL)
+    ds = ScDataset(col, BlockShuffling(BLOCK_SIZE), rank=0, world_size=1,
+                   **DS_KW)
+    ref: dict = {}
+    _drain_tagged(ds, ref)
+    return ref
+
+
+def _elastic_arm() -> tuple:
+    """world 3 → kill(1) → resize(2) → resize(3) → drain, ONE collection."""
+    stats = IOStats(simulate=SATA_SSD, simulate_scale=0.0)
+    col = open_collection(_uri(), iostats=stats, cache_bytes=CACHE_TOTAL,
+                          io_workers=2)
+    fab = ElasticFabric(col, world_size=WORLD,
+                        strategy=BlockShuffling(BLOCK_SIZE), **DS_KW)
+    got: dict = {}
+    t0 = time.perf_counter()
+    _interleave(fab, got, limit=PHASE_BATCHES)
+    fab.kill(1)
+    fab.resize(WORLD - 1)
+    _interleave(fab, got, limit=PHASE_BATCHES)
+    fab.resize(WORLD)
+    _interleave(fab, got)
+    wall = time.perf_counter() - t0
+    samples = len(got) * BATCH_SIZE
+    modeled = wall + stats.modeled_s
+    return got, {
+        "schedule": f"{WORLD} -> kill(1) -> {WORLD - 1} -> {WORLD}",
+        "samples": samples,
+        "wall_s": wall,
+        "modeled_total_s": modeled,
+        "sps_modeled": samples / max(modeled, 1e-9),
+        "requests": stats.requests,
+        "bytes_read": stats.bytes_read,
+        "cache_hits": stats.cache_hits,
+        "shared_rank_hits": stats.shared_rank_hits,
+        "requests_per_sample": stats.requests / max(samples, 1),
+    }
+
+
+def _isolated_arm() -> tuple:
+    """The same three ranks, each on its OWN collection and cache slice."""
+    got: dict = {}
+    wall = 0.0
+    per = [None] * WORLD
+    for r in range(WORLD):
+        stats = IOStats(simulate=SATA_SSD, simulate_scale=0.0)
+        col = open_collection(_uri(), iostats=stats,
+                              cache_bytes=CACHE_TOTAL // WORLD, io_workers=2)
+        ds = ScDataset(col, BlockShuffling(BLOCK_SIZE), rank=r,
+                       world_size=WORLD, **DS_KW)
+        t0 = time.perf_counter()
+        _drain_tagged(ds, got)
+        wall += time.perf_counter() - t0
+        per[r] = stats
+    samples = len(got) * BATCH_SIZE
+    modeled = wall + sum(s.modeled_s for s in per)
+    requests = sum(s.requests for s in per)
+    return got, {
+        "samples": samples,
+        "wall_s": wall,
+        "modeled_total_s": modeled,
+        "sps_modeled": samples / max(modeled, 1e-9),
+        "requests": requests,
+        "bytes_read": sum(s.bytes_read for s in per),
+        "cache_hits": sum(s.cache_hits for s in per),
+        "requests_per_sample": requests / max(samples, 1),
+    }
+
+
+def run_elastic(write_json: bool = True) -> dict:
+    generate_tahoe_like(BENCH_DATA_DIR, n_cells=N_CELLS, n_genes=N_GENES,
+                        seed=0)
+    ref = _reference()
+    elastic_got, elastic = _elastic_arm()
+    iso_got, isolated = _isolated_arm()
+
+    bitwise = elastic_got == ref and iso_got == ref
+    gates = {
+        "bitwise_n_m_n": bitwise,
+        "shared_rank_hits": elastic["shared_rank_hits"],
+        "requests_shared": elastic["requests"],
+        "requests_isolated": isolated["requests"],
+        "req_per_sample_shared": elastic["requests_per_sample"],
+        "req_per_sample_isolated": isolated["requests_per_sample"],
+        "bytes_shared": elastic["bytes_read"],
+        "bytes_isolated": isolated["bytes_read"],
+    }
+    passed = (
+        bitwise
+        and elastic["samples"] == isolated["samples"]
+        and elastic["shared_rank_hits"] > 0
+        and elastic["requests"] < isolated["requests"]
+        and elastic["bytes_read"] < isolated["bytes_read"]
+    )
+    emit(
+        f"elastic_fabric_{WORLD}ranks_shared",
+        1e6 / max(elastic["sps_modeled"], 1e-9),
+        f"req/sample={elastic['requests_per_sample']:.4f}",
+    )
+    emit(
+        f"elastic_isolated_{WORLD}ranks",
+        1e6 / max(isolated["sps_modeled"], 1e-9),
+        f"req/sample={isolated['requests_per_sample']:.4f}",
+    )
+    out = {
+        "world_size": WORLD,
+        "phase_batches": PHASE_BATCHES,
+        "batch_size": BATCH_SIZE,
+        "fetch_factor": FETCH_FACTOR,
+        "cache_total_bytes": CACHE_TOTAL,
+        "epoch_batches": len(ref),
+        "elastic": elastic,
+        "isolated": isolated,
+        "gates": gates,
+        "pass": bool(passed),
+    }
+    if write_json:
+        with open(PR10_JSON, "w") as fh:
+            json.dump(out, fh, indent=2)
+        print(f"# wrote {PR10_JSON}")
+    return out
+
+
+def run() -> dict:
+    return run_elastic(write_json=True)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

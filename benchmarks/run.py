@@ -41,7 +41,13 @@ autotune,adaptive,resilience,diversity).
    splitting the same cache budget): shared must beat isolated by
    ``bench_serve.SERVE_FLOOR`` on modeled samples/sec AND issue strictly
    fewer backend requests and bytes (the cross-tenant dedup claim,
-   measured from the cloud adapter's request counters).
+   measured from the cloud adapter's request counters);
+8. the elastic data fabric -> ``BENCH_PR10.json`` (world 3 → kill a rank
+   mid-epoch → resize 2 → resize 3 over ONE shared collection vs the
+   same ranks isolated): the kill/resize stream must be BITWISE the
+   never-resized epoch, and the shared-collection arm must issue
+   strictly fewer cloud requests and bytes per sample (cross-rank read
+   dedup, attributed in ``shared_rank_hits``).
 """
 from __future__ import annotations
 
@@ -132,7 +138,21 @@ def smoke() -> int:
         f"{sg['bytes_shared']} vs {sg['bytes_isolated']} "
         f"-> {'OK' if sok else 'FAIL'}"
     )
-    return 0 if (ok and cok and pok and aok and rok and dok and sok) else 1
+    from benchmarks import bench_elastic
+
+    ela = bench_elastic.run_elastic(write_json=True)
+    eok = ela["pass"]
+    eg = ela["gates"]
+    print(
+        f"# smoke: elastic {ela['elastic']['schedule']} bitwise="
+        f"{eg['bitwise_n_m_n']}, req/sample "
+        f"{eg['req_per_sample_shared']:.4f} vs "
+        f"{eg['req_per_sample_isolated']:.4f} isolated, "
+        f"shared_rank_hits={eg['shared_rank_hits']} "
+        f"-> {'OK' if eok else 'FAIL'}"
+    )
+    return 0 if (ok and cok and pok and aok and rok and dok and sok and eok) \
+        else 1
 
 
 def main() -> None:

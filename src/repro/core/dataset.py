@@ -108,6 +108,18 @@ class LoaderState:
     taken mid-fetch resumes on the exact next minibatch (no replay, no skip —
     the bitwise-restart test depends on this).
 
+    The v2 fields make the state GLOBAL — sufficient to re-home the stream
+    on a different rank/world (the elastic fabric, :mod:`repro.distributed.
+    elastic`): ``world_size`` is the world the cursor was minted under,
+    ``global_cursor`` is the global fetch id of the NEXT fetch this rank
+    would execute (None once its epoch share is exhausted), and
+    ``remaining`` is the explicit list of ``(global_fetch_id, skip_batches)``
+    entries still owed — every epoch position is a pure function of
+    ``(seed, epoch, global_fetch_id)``, so the union of ``remaining`` across
+    ranks IS the not-yet-delivered stream, independent of who delivers it.
+    All three are None on states minted by older checkpoints (the round-
+    robin derivation from ``fetch_cursor`` still applies there).
+
     ``fingerprint`` — when the loader was built through the Pipeline API
     (:mod:`repro.pipeline`), the spec's content hash rides here so
     ``DataPipeline.load_state`` can REFUSE to resume against a drifted spec.
@@ -119,15 +131,26 @@ class LoaderState:
     fetch_cursor: int
     batch_cursor: int = 0
     fingerprint: Optional[str] = None
+    world_size: Optional[int] = None
+    global_cursor: Optional[int] = None
+    remaining: Optional[tuple] = None  # ((global_fetch_id, skip_batches), ...)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
 
     @staticmethod
     def from_dict(d: dict) -> "LoaderState":
+        rem = d.get("remaining")
+        if rem is not None:  # JSON round-trips tuples as lists
+            rem = tuple((int(g), int(s)) for g, s in rem)
+        ws = d.get("world_size")
+        gc = d.get("global_cursor")
         return LoaderState(int(d["seed"]), int(d["epoch"]),
                            int(d["fetch_cursor"]), int(d.get("batch_cursor", 0)),
-                           d.get("fingerprint"))
+                           d.get("fingerprint"),
+                           None if ws is None else int(ws),
+                           None if gc is None else int(gc),
+                           rem)
 
 
 class ScDataset:
@@ -191,6 +214,12 @@ class ScDataset:
             prefetch_callback,
         )
         self._state = LoaderState(seed=self.seed, epoch=0, fetch_cursor=0)  # guarded-by: external
+        # explicit fetch plan for the CURRENT epoch only — (gid, skip) entries
+        # installed by repartition()/load_state() after an elastic resize;
+        # None means the default round-robin derivation.  Cleared at the
+        # epoch boundary: from the next epoch on, plain round-robin over the
+        # (possibly new) world is again exactly-once globally.
+        self._fetch_plan: Optional[list] = None  # guarded-by: external
         # epoch -> materialized order; holds at most TWO epochs (current +
         # next) so cross-epoch prefetch at the tail does not evict the order
         # the remaining fetches of this epoch still slice from
@@ -220,8 +249,8 @@ class ScDataset:
         """
         order_len = len(self._epoch_order(self._state.epoch))
         return sum(
-            self._fetch_num_batches(g, order_len)
-            for g in self._rank_fetch_slices()
+            max(0, self._fetch_num_batches(g, order_len) - skip)
+            for g, skip in self._fetch_entries()
         )
 
     def _fetch_num_batches(self, global_fetch_id: int, order_len: int) -> int:
@@ -278,6 +307,13 @@ class ScDataset:
         g = self._global_fetch_count()
         return list(range(self.rank, g, self.world_size))
 
+    def _fetch_entries(self) -> list:
+        """This rank's epoch fetch list as ``(gid, skip_batches)`` entries —
+        the explicit plan when one is installed, round-robin otherwise."""
+        if self._fetch_plan is not None:
+            return list(self._fetch_plan)
+        return [(g, 0) for g in self._rank_fetch_slices()]
+
     def plan_epoch(self, epoch: Optional[int] = None) -> dict:
         """Introspection: the epoch's fetch plan without touching data.
 
@@ -289,16 +325,18 @@ class ScDataset:
         epoch = self._state.epoch if epoch is None else epoch
         order = self._epoch_order(epoch)
         g = self._global_fetch_count()
-        rank_fetches = self._rank_fetch_slices()
+        entries = self._fetch_entries()
         col = self.collection
         return {
             "epoch": epoch,
             "order_len": len(order),
             "global_fetches": g,
-            "rank_fetches": rank_fetches,
+            "rank_fetches": [gid for gid, _ in entries],
+            "explicit_plan": self._fetch_plan is not None,
             "fetch_size": self.fetch_size,
             "rank_batches": sum(
-                self._fetch_num_batches(gid, len(order)) for gid in rank_fetches
+                max(0, self._fetch_num_batches(gid, len(order)) - skip)
+                for gid, skip in entries
             ),
             "batch_size": self.batch_size,
             "fetch_factor": self.fetch_factor,
@@ -409,8 +447,33 @@ class ScDataset:
         return rec
 
     # -------------------------------------------------------------- state
+    def remaining_fetches(self) -> list:
+        """The ``(global_fetch_id, skip_batches)`` entries this rank still
+        owes the CURRENT epoch — the first entry carries the in-progress
+        fetch's ``batch_cursor`` so a mid-fetch handover neither replays nor
+        skips a minibatch.  The union of this list across ranks is exactly
+        the not-yet-delivered remainder of the epoch's global stream; the
+        elastic fabric merges and re-partitions it on a resize."""
+        s = self._state
+        entries = self._fetch_entries()
+        out = []
+        for i, (gid, skip) in enumerate(entries[s.fetch_cursor:]):
+            if i == 0:
+                skip = max(skip, s.batch_cursor)
+            out.append((int(gid), int(skip)))
+        return out
+
     def state(self) -> LoaderState:
-        return dataclasses.replace(self._state)
+        """Snapshot, v2: the rank-local cursor plus the global view
+        (``world_size`` / ``global_cursor`` / ``remaining``) that lets a
+        DIFFERENT loader — any rank of any world — continue this stream."""
+        rem = self.remaining_fetches()
+        return dataclasses.replace(
+            self._state,
+            world_size=self.world_size,
+            global_cursor=rem[0][0] if rem else None,
+            remaining=tuple(rem),
+        )
 
     def load_state(self, state: LoaderState) -> None:
         if state.seed != self.seed:
@@ -418,9 +481,51 @@ class ScDataset:
                 f"checkpointed loader seed {state.seed} != configured seed {self.seed}; "
                 "resuming with a different seed would silently change the data order"
             )
-        self._state = dataclasses.replace(state)
+        if state.remaining is not None:
+            # v2 state: the remaining list is authoritative — install it as
+            # an explicit plan so resumption is bitwise regardless of this
+            # loader's own rank/world_size (per-entry skips carry the
+            # mid-fetch position; cursors restart at zero over the plan)
+            self._fetch_plan = [(int(g), int(s)) for g, s in state.remaining]
+            self._state = LoaderState(self.seed, state.epoch, 0, 0,
+                                      state.fingerprint)
+        else:
+            self._fetch_plan = None
+            self._state = dataclasses.replace(state)
+
+    def repartition(
+        self, rank: int, world_size: int, plan: Optional[list] = None
+    ) -> None:
+        """Re-home this loader as ``rank`` of ``world_size`` mid-epoch.
+
+        With ``plan`` (a list of ``(global_fetch_id, skip_batches)``
+        entries, e.g. one share of :func:`repro.distributed.elastic.
+        partition`), the loader delivers exactly those fetches for the rest
+        of the CURRENT epoch; from the next epoch on it reverts to plain
+        round-robin under the new world.  Without ``plan`` the round-robin
+        derivation applies immediately (a fresh-epoch join).  Cursors reset;
+        the entries' skips carry any mid-fetch position.
+        """
+        if not (0 <= rank < world_size):
+            raise ValueError(f"rank {rank} out of range for world_size {world_size}")
+        self.rank = int(rank)
+        self.world_size = int(world_size)
+        if plan is None:
+            self._fetch_plan = None
+        else:
+            g = self._global_fetch_count()
+            norm = [(int(gid), int(skip)) for gid, skip in plan]
+            bad = [gid for gid, _ in norm if not (0 <= gid < g)]
+            if bad:
+                raise ValueError(
+                    f"plan contains global fetch ids {bad} outside [0, {g}) "
+                    f"for this epoch's geometry"
+                )
+            self._fetch_plan = norm
+        self._state = LoaderState(self.seed, self._state.epoch, 0, 0)
 
     def set_epoch(self, epoch: int) -> None:
+        self._fetch_plan = None
         self._state = LoaderState(self.seed, int(epoch), 0)
         self._notify_epoch_boundary()
 
@@ -478,9 +583,23 @@ class ScDataset:
         ra = int(getattr(self.collection, "readahead", 0) or 0)
         if ra > 0:
             g = self._global_fetch_count()
+            if self._fetch_plan is not None:
+                # explicit plan (post-resize): the upcoming gids are the plan
+                # entries after THIS one, not a round-robin stride — guessing
+                # the stride would stage blocks this rank will never fetch
+                gids = [gid for gid, _ in self._fetch_plan]
+                try:
+                    pos = gids.index(global_fetch_id)
+                    upcoming = gids[pos + 1 : pos + 1 + ra]
+                except ValueError:
+                    upcoming = []
+            else:
+                upcoming = [
+                    global_fetch_id + k * self.world_size
+                    for k in range(1, ra + 1)
+                ]
             issued = 0
-            for k in range(1, ra + 1):
-                nxt = global_fetch_id + k * self.world_size
+            for nxt in upcoming:
                 if nxt >= g or not self._issue_prefetch(order, nxt):
                     break
                 issued += 1
@@ -528,11 +647,15 @@ class ScDataset:
         resumes at batch j+1 even though this generator is suspended.
         """
         epoch = self._state.epoch
-        my_fetches = self._rank_fetch_slices()
+        entries = self._fetch_entries()
         cursor = self._state.fetch_cursor
-        skip = self._state.batch_cursor
-        while cursor < len(my_fetches):
-            gid = my_fetches[cursor]
+        resume_skip = self._state.batch_cursor
+        while cursor < len(entries):
+            gid, base_skip = entries[cursor]
+            # a plan entry's own skip marks batches another rank already
+            # delivered before the handover; the resume cursor (>= it once
+            # anything was delivered here) marks our own progress
+            skip = max(base_skip, resume_skip)
             batches = self.fetch(epoch, gid)
             for j, batch in enumerate(batches):
                 if j < skip:
@@ -542,9 +665,11 @@ class ScDataset:
                 else:
                     self._state = LoaderState(self.seed, epoch, cursor + 1, 0)
                 yield batch
-            skip = 0
+            resume_skip = 0
             cursor += 1
-        # epoch finished -> advance
+        # epoch finished -> advance (an explicit resize plan covered the
+        # CURRENT epoch only; round-robin under the current world resumes)
+        self._fetch_plan = None
         self._state = LoaderState(self.seed, epoch + 1, 0, 0)
         self._notify_epoch_boundary()
 

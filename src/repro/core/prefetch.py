@@ -94,9 +94,13 @@ class PrefetchPool:
     # -------------------------------------------------------------- iterate
     def __iter__(self) -> Iterator:
         ds = self.dataset
-        epoch = ds.state().epoch
-        my = ds._rank_fetch_slices()
-        start_cursor = ds.state().fetch_cursor
+        epoch = ds._state.epoch
+        # (gid, skip) entries: honours an explicit post-resize plan exactly
+        # like ScDataset.__iter__ — entry skips mark batches another rank
+        # already delivered before an elastic handover
+        entries = ds._fetch_entries()
+        my = [gid for gid, _ in entries]
+        start_cursor = ds._state.fetch_cursor
         pending = collections.deque(range(start_cursor, len(my)))  # cursor positions
         lock = threading.Lock()
         cond = threading.Condition(lock)
@@ -223,7 +227,7 @@ class PrefetchPool:
             t.start()
 
         try:
-            skip = ds.state().batch_cursor
+            resume_skip = ds._state.batch_cursor
             while next_to_yield < len(my):
                 with cond:
                     while next_to_yield not in results and not errors:
@@ -233,6 +237,7 @@ class PrefetchPool:
                     res = results.pop(next_to_yield)
                     cond.notify_all()
                 nb = len(res.batches)
+                skip = max(entries[next_to_yield][1], resume_skip)
                 for j, batch in enumerate(res.batches):
                     if j < skip:
                         continue
@@ -242,8 +247,9 @@ class PrefetchPool:
                     else:
                         ds._state = LoaderState(ds.seed, epoch, next_to_yield + 1, 0)
                     yield batch
-                skip = 0
+                resume_skip = 0
                 next_to_yield += 1
+            ds._fetch_plan = None
             ds._state = LoaderState(ds.seed, epoch + 1, 0, 0)
             ds._notify_epoch_boundary()
         finally:

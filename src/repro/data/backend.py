@@ -29,6 +29,7 @@ import os
 import threading
 import time
 import urllib.parse
+from contextlib import contextmanager
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Optional, Protocol, Sequence, runtime_checkable
 
@@ -531,6 +532,13 @@ class PlannedCollection:
         # under a bypassing admission policy they are dropped after use
         self._pf_marks: set[int] = set()  # guarded-by: _fl
         self._fl = threading.Lock()
+        # cross-rank attribution for the elastic fabric: consumers identify
+        # themselves via tagged(); block id -> tag of the rank whose read
+        # produced the resident value.  A tagged fetch that obtains a block
+        # another tag produced counts one `shared_rank_hits` — the read the
+        # shared cache saved it.  Untagged traffic neither claims nor counts.
+        self._tag = threading.local()
+        self._block_owner: dict[int, Any] = {}  # guarded-by: _fl
         # resilience: policy objects are frozen/internally-locked, set once
         self._retry = None  # guarded-by: external — frozen RetryPolicy
         if retries > 0:
@@ -587,6 +595,21 @@ class PlannedCollection:
             self._stream.reset()
             if self._ra_controller is not None:
                 self._ra_controller.epoch_boundary()
+
+    @contextmanager
+    def tagged(self, tag: Any):
+        """Attribute this thread's fetch/prefetch traffic to ``tag`` (a rank
+        id in the elastic fabric).  Blocks read while tagged are owned by the
+        tag; a later tagged consumer of a block owned by a DIFFERENT tag
+        records one ``shared_rank_hits`` — the physical read that co-located
+        rank loaders sharing one collection did not have to repeat.  Tags are
+        thread-local and restore on exit, so nesting and pooling are safe."""
+        prev = getattr(self._tag, "value", None)
+        self._tag.value = tag
+        try:
+            yield
+        finally:
+            self._tag.value = prev
 
     def _pool(self) -> Optional[ThreadPoolExecutor]:
         if not self.async_enabled:
@@ -824,6 +847,11 @@ class PlannedCollection:
             if other is None:
                 f: Future = Future()
                 self._inflight[b] = f
+                my_tag = getattr(self._tag, "value", None)
+                if my_tag is not None:
+                    self._block_owner[b] = my_tag
+                else:
+                    self._block_owner.pop(b, None)
         if other is not None:
             # someone else is already recovering it; their terminal failure
             # (RetryBudgetExhausted is not transient) is terminal for us too
@@ -977,6 +1005,7 @@ class PlannedCollection:
         waits: dict[int, Future] = {}
         claimed: dict[int, Future] = {}
         pf_blocks: list[int] = []
+        my_tag = getattr(self._tag, "value", None)
         if self.async_enabled:
             with self._fl:
                 if self._pf_marks:
@@ -1005,6 +1034,13 @@ class PlannedCollection:
                         self._inflight[b] = f
                         claimed[b] = f
                         self._pf_marks.discard(b)  # stale staging: we re-read
+                        # ownership claims at CLAIM time, not publish time —
+                        # a waiter may consume the future before this fetch
+                        # reaches its own accounting pass
+                        if my_tag is not None:
+                            self._block_owner[b] = my_tag
+                        else:
+                            self._block_owner.pop(b, None)
                         still.append(b)
                     missing = still
 
@@ -1142,6 +1178,27 @@ class PlannedCollection:
         if not np.array_equal(inv, np.arange(len(rows))):
             merged = self.adapter.take(merged, inv)
 
+        # ---- cross-rank attribution (elastic fabric) ---------------------
+        # Blocks this fetch obtained WITHOUT reading (cache hits + staged +
+        # rendezvous waits) that a different tag produced are reads the
+        # shared cache saved this rank.  Sync mode has no claim section, so
+        # ownership of self-read blocks lands here instead.
+        shared = 0
+        if my_tag is not None or self._block_owner:  # unlocked-ok: emptiness fast path — untagged traffic skips the lock; a stale non-empty read only adds one locked no-op pass
+            obtained = set(served) | set(pf_blocks)
+            with self._fl:
+                if not self.async_enabled:
+                    for b in missing:
+                        if my_tag is not None:
+                            self._block_owner[b] = my_tag
+                        else:
+                            self._block_owner.pop(b, None)
+                if my_tag is not None:
+                    for b in obtained:
+                        owner = self._block_owner.get(b)
+                        if owner is not None and owner != my_tag:
+                            shared += 1
+
         self.iostats.record(
             runs=len(spans) + reissue_runs,
             rows=len(rows),
@@ -1152,6 +1209,7 @@ class PlannedCollection:
             prefetched=len(pf_blocks),
             adm_bypassed=adm_bypassed,
             adm_rejected=adm_rejected,
+            shared_rank_hits=shared,
             slept=True,
         )
         return merged
@@ -1189,6 +1247,7 @@ class PlannedCollection:
             ]
         todo: list[int] = []
         futs: dict[int, Future] = {}
+        my_tag = getattr(self._tag, "value", None)
         with self._fl:
             for b in block_list:
                 if b in self._inflight or self.cache.peek(b) is not None:
@@ -1196,6 +1255,10 @@ class PlannedCollection:
                 f: Future = Future()
                 self._inflight[b] = f
                 futs[b] = f
+                if my_tag is not None:
+                    self._block_owner[b] = my_tag
+                else:
+                    self._block_owner.pop(b, None)
                 todo.append(b)
         if not todo:
             return 0

@@ -25,8 +25,9 @@ Layout assumptions (checked at open): CSR orientation (``indptr`` length is
 ``var/_index`` length fallback.  ``indptr`` and obs columns are loaded into
 RAM at open (small: O(n_obs)); ``data``/``indices`` are read on demand in
 contiguous row ranges — exactly one byte-range per planner extent.  Obs
-columns the driver cannot decode (e.g. variable-length strings under the
-shim) are skipped, not fatal.
+columns decode under BOTH drivers: plain datasets, variable-length strings
+(global-heap reads in the shim), and anndata categorical subgroups
+(``codes`` + ``categories``); anything else is skipped, not fatal.
 """
 from __future__ import annotations
 
@@ -47,6 +48,39 @@ try:  # optional — the shim below is the no-dependency fallback
 except Exception:  # pragma: no cover - import guard
     h5py = None
     _HAVE_H5PY = False
+
+
+def _as_str_array(col: np.ndarray) -> np.ndarray:
+    """h5py returns vlen strings as object arrays of ``bytes``; normalize to
+    a unicode array so both drivers hand consumers the same dtype."""
+    if col.dtype.kind == "O":
+        return np.array(
+            [c.decode("utf-8") if isinstance(c, bytes) else str(c) for c in col],
+            dtype=str,
+        )
+    return col
+
+
+def _decode_categorical(codes: np.ndarray, categories: np.ndarray) -> np.ndarray:
+    """anndata categorical -> label array: ``categories[codes]`` with the
+    pandas missing sentinel (``codes == -1``) mapped to the empty string."""
+    cats = np.asarray(categories)
+    if cats.dtype.kind == "S":  # normalize: one label dtype per column
+        cats = np.array([c.decode("utf-8") for c in cats], dtype=str)
+    elif cats.dtype.kind == "O":
+        cats = np.array(
+            [c.decode("utf-8") if isinstance(c, bytes) else str(c) for c in cats],
+            dtype=str,
+        )
+    codes = np.asarray(codes, dtype=np.int64)
+    out = np.empty(len(codes), dtype=cats.dtype if cats.dtype.kind == "U" else object)
+    valid = codes >= 0
+    out[valid] = cats[codes[valid]]
+    if cats.dtype.kind == "U":
+        out[~valid] = ""
+        return out
+    out[~valid] = None
+    return out
 
 
 class H5adStore:
@@ -119,19 +153,42 @@ class H5adStore:
         for name in names:
             if name.startswith("_") or name == "index":
                 continue  # axis index, not a label column
-            try:
-                if self.driver == "h5py":
-                    node = self._f[f"obs/{name}"]
-                    if not hasattr(node, "shape"):  # categorical subgroup etc.
-                        continue
-                    col = np.asarray(node[:])
-                else:
-                    col = np.asarray(self._f.dataset(f"obs/{name}")[:])
-            except (KeyError, NotImplementedError, TypeError):
-                continue  # undecodable column (vlen strings under the shim)
-            if col.ndim == 1 and len(col) == self.n_obs:
+            col = self._load_obs_column(name)
+            if col is not None and col.ndim == 1 and len(col) == self.n_obs:
                 out[name] = col
         return out
+
+    def _load_obs_column(self, name: str) -> Optional[np.ndarray]:
+        """Decode ``obs/<name>`` under either driver, or None if unreadable.
+
+        Plain datasets (numeric, fixed- or variable-length strings) load
+        directly; anndata *categorical* columns are a subgroup holding
+        ``codes`` (int, -1 = missing) + ``categories`` and decode to the
+        label array a ``weights_obs``/``labels_obs``/``diversity_obs``
+        consumer expects.  Anything else is skipped, not fatal."""
+        path = f"obs/{name}"
+        try:
+            if self.driver == "h5py":
+                node = self._f[path]
+                if not hasattr(node, "shape"):  # subgroup
+                    if "codes" in node and "categories" in node:
+                        return _decode_categorical(
+                            np.asarray(node["codes"][:]),
+                            np.asarray(node["categories"][:]),
+                        )
+                    return None
+                return _as_str_array(np.asarray(node[:]))
+            if self._f.is_group(path):
+                kids = set(self._f.keys(path))
+                if {"codes", "categories"} <= kids:
+                    return _decode_categorical(
+                        np.asarray(self._f.dataset(f"{path}/codes")[:]),
+                        np.asarray(self._f.dataset(f"{path}/categories")[:]),
+                    )
+                return None
+            return np.asarray(self._f.dataset(path)[:])
+        except (KeyError, NotImplementedError, TypeError):
+            return None  # undecodable column: skip like before
 
     def __len__(self) -> int:
         return self.n_obs

@@ -11,17 +11,22 @@ small, stable corner of the HDF5 1.x file format that h5ad actually uses:
   messages.  Datasets may be *contiguous* (partial reads seek directly into
   the file — exactly what ``read_range`` needs) or *1-D chunked* with the
   deflate and shuffle filters (chunk B-tree walked once, only overlapping
-  chunks are read and decompressed).  This covers files written by h5py with
-  default settings and by ``anndata.write_h5ad`` for the CSR ``X`` layout.
+  chunks are read and decompressed).  Variable-length strings (the datatype
+  anndata uses for string obs columns and categorical ``categories``)
+  resolve through the global heap: each element is a 16-byte descriptor
+  into a ``GCOL`` collection, read and cached per collection address.
+  This covers files written by h5py with default settings and by
+  ``anndata.write_h5ad`` for the CSR ``X`` layout + obs metadata.
 - **Writer** (:func:`write_shim_file`): superblock v0 + old-style groups +
-  contiguous datasets + compact attributes.  Output is a valid HDF5 file
-  that h5py/anndata open natively (cross-validated in the test suite when
-  h5py is installed).
+  contiguous datasets (including 1-D vlen-string datasets backed by a
+  global heap collection) + compact attributes.  Output is a valid HDF5
+  file that h5py/anndata open natively (cross-validated in the test suite
+  when h5py is installed).
 
 Out of scope (raise informative errors): superblock v2/v3 (``libver=
-'latest'``), new-style groups, variable-length strings (global heap),
-N-D chunked data.  The h5ad adapter only needs 1-D ``X/data`` /
-``X/indices`` / ``X/indptr`` plus small obs/var columns, all covered.
+'latest'``), new-style groups, compound/enum datatypes, N-D chunked data.
+The h5ad adapter only needs 1-D ``X/data`` / ``X/indices`` / ``X/indptr``
+plus small obs/var columns, all covered.
 
 Byte layouts follow the HDF5 File Format Specification v1 (old-style
 objects); all integers little-endian, offsets and lengths 8 bytes.
@@ -62,6 +67,19 @@ def _pad8(n: int) -> int:
     return (n + 7) & ~7
 
 
+class _VlenStrType:
+    """Sentinel returned by ``_parse_datatype`` for variable-length string
+    datatypes (class 9, string flavor) — not an ``np.dtype``, callers branch
+    to the global-heap read path."""
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return "<vlen-str>"
+
+
+_VLEN_STR = _VlenStrType()
+_VLEN_DESC = 16  # file descriptor: uint32 length + 8-byte heap addr + uint32 index
+
+
 # =========================================================== reader side
 @dataclasses.dataclass
 class _Layout:
@@ -83,10 +101,11 @@ class ShimDataset:
     """
 
     def __init__(self, file: "ShimFile", shape: tuple, dtype: np.dtype,
-                 layout: _Layout):
+                 layout: _Layout, vlen: bool = False):
         self._file = file
         self.shape = tuple(int(s) for s in shape)
         self.dtype = np.dtype(dtype)
+        self.vlen = vlen  # variable-length strings via the global heap
         self._layout = layout
         # lazy chunk index: [(start_elem, nbytes, addr, mask)] ascending in
         # start_elem (B-tree key order) + the start_elem array for bisection
@@ -98,6 +117,8 @@ class ShimDataset:
 
     @property
     def nbytes(self) -> int:
+        if self.vlen:  # descriptor bytes (payloads live in the global heap)
+            return int(np.prod(self.shape, dtype=np.int64)) * _VLEN_DESC
         return int(np.prod(self.shape, dtype=np.int64)) * self.dtype.itemsize
 
     def __getitem__(self, key) -> np.ndarray:
@@ -124,6 +145,8 @@ class ShimDataset:
         start, stop = max(0, int(start)), min(n, int(stop))
         if stop <= start:
             return np.empty((0,) + self.shape[1:], dtype=self.dtype)
+        if self.vlen:
+            return self._read_vlen(start, stop)
         row_elems = int(np.prod(self.shape[1:], dtype=np.int64)) if len(self.shape) > 1 else 1
         if self._layout.kind == "compact":
             arr = np.frombuffer(self._layout.compact, dtype=self.dtype)
@@ -136,6 +159,27 @@ class ShimDataset:
             arr = np.frombuffer(raw, dtype=self.dtype)
             return arr.reshape((stop - start,) + self.shape[1:]).copy()
         return self._read_chunked(start, stop)
+
+    def _read_vlen(self, start: int, stop: int) -> np.ndarray:
+        """Vlen-string rows ``[start, stop)``: read the 16-byte descriptors,
+        resolve each through the (cached) global heap collection."""
+        if len(self.shape) != 1:
+            raise NotImplementedError(
+                "pure-Python shim reads vlen-string datasets in 1-D only "
+                f"(got shape {self.shape}); install h5py for this file"
+            )
+        if self._layout.kind == "compact":
+            raw = self._layout.compact[start * _VLEN_DESC:stop * _VLEN_DESC]
+        elif self._layout.kind == "contiguous":
+            raw = self._file._pread(self._layout.addr + start * _VLEN_DESC,
+                                    (stop - start) * _VLEN_DESC)
+        else:
+            raise NotImplementedError(
+                "chunked vlen-string datasets unsupported by the pure-Python "
+                "shim; install h5py for this file"
+            )
+        return np.array([self._file._vlen_str(raw, i * _VLEN_DESC)
+                         for i in range(stop - start)], dtype=str)
 
     def _read_chunked(self, start: int, stop: int) -> np.ndarray:
         if len(self.shape) != 1:
@@ -195,6 +239,7 @@ class ShimFile:
         self.path = path
         self._fd = os.open(path, os.O_RDONLY)
         self._groups: dict[str, dict[str, int]] = {}  # path -> name -> header addr
+        self._gheaps: dict[int, dict[int, bytes]] = {}  # GCOL addr -> idx -> bytes
         try:
             self._root_addr = self._read_superblock()
         except Exception:
@@ -348,6 +393,39 @@ class ShimFile:
             name_off, obj_addr = struct.unpack_from("<QQ", raw, i * 40)
             out[self._heap_string(heap, name_off)] = obj_addr
 
+    # -- global heap (vlen strings) --------------------------------------
+    def _gheap_objects(self, addr: int) -> dict[int, bytes]:
+        """Objects of one global-heap collection (``GCOL``), cached by
+        collection address — a column's strings share a few collections, so
+        one pread serves every element pointing into it."""
+        cached = self._gheaps.get(addr)
+        if cached is not None:
+            return cached
+        head = self._pread(addr, 16)
+        if head[:4] != b"GCOL":
+            raise ValueError(f"bad global heap signature at {addr}: {self.path}")
+        (size,) = struct.unpack_from("<Q", head, 8)
+        blob = self._pread(addr, size)
+        out: dict[int, bytes] = {}
+        pos = 16
+        while pos + 16 <= size:
+            idx, _refs = struct.unpack_from("<HH", blob, pos)
+            (osize,) = struct.unpack_from("<Q", blob, pos + 8)
+            if idx == 0:  # free-space object terminates the collection
+                break
+            out[idx] = bytes(blob[pos + 16:pos + 16 + osize])
+            pos += 16 + _pad8(osize)
+        self._gheaps[addr] = out
+        return out
+
+    def _vlen_str(self, raw: bytes, off: int) -> str:
+        """One 16-byte vlen descriptor at ``raw[off:]`` -> python string."""
+        length, gaddr, gidx = struct.unpack_from("<IQI", raw, off)
+        if length == 0 or gaddr in (0, _UNDEF) or gidx == 0:
+            return ""  # null / empty element
+        data = self._gheap_objects(gaddr)[gidx]
+        return data[:length].decode("utf-8")
+
     def _walk_chunk_btree(self, addr: int, ndims: int) -> list:
         """Chunk index (B-tree node type 1) -> [(start_elem, nbytes, addr, mask)]."""
         out: list = []
@@ -388,7 +466,7 @@ class ShimFile:
         return tuple(dims)
 
     @staticmethod
-    def _parse_datatype(body: bytes) -> Optional[np.dtype]:
+    def _parse_datatype(body: bytes) -> Any:  # np.dtype | _VLEN_STR | None
         cls_ver = body[0]
         cls = cls_ver & 0x0F
         bits0 = body[1]
@@ -401,7 +479,9 @@ class ShimFile:
             return np.dtype(f"{order}f{size}")
         if cls == 3:  # fixed-length string
             return np.dtype(f"S{size}")
-        return None  # vlen / compound / enum: caller decides how to fail
+        if cls == 9 and (bits0 & 0x0F) == 1:  # variable-length STRING
+            return _VLEN_STR  # sentinel: resolved through the global heap
+        return None  # vlen sequence / compound / enum: caller decides how to fail
 
     @staticmethod
     def _parse_layout(body: bytes) -> Optional[_Layout]:
@@ -452,8 +532,17 @@ class ShimFile:
         shape = self._parse_dataspace(body[pos:pos + ds_size])
         pos += _pad8(ds_size)
         if dtype is None or shape is None:
-            return None  # vlen-string attrs etc.: omit, don't fail the file
+            return None  # compound attrs etc.: omit, don't fail the file
         count = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        if dtype is _VLEN_STR:
+            raw = body[pos:pos + count * _VLEN_DESC]
+            if len(raw) < count * _VLEN_DESC:
+                return None
+            try:
+                vals = [self._vlen_str(raw, i * _VLEN_DESC) for i in range(count)]
+            except (ValueError, KeyError, OSError):
+                return None  # dangling heap reference: omit like before
+            return name, (vals if shape else vals[0])
         raw = body[pos:pos + count * dtype.itemsize]
         if len(raw) < count * dtype.itemsize:
             return None
@@ -509,7 +598,7 @@ class ShimFile:
                 if dtype is None:
                     raise NotImplementedError(
                         f"dataset {path!r} has a datatype the pure-Python shim "
-                        "cannot read (vlen/compound); install h5py"
+                        "cannot read (compound/enum/vlen-sequence); install h5py"
                     )
             elif mtype == _MSG_LAYOUT:
                 layout = self._parse_layout(body)
@@ -518,6 +607,8 @@ class ShimFile:
         if shape is None or dtype is None or layout is None:
             raise KeyError(f"{path!r} is not a readable dataset in {self.path}")
         layout.filters = filters
+        if dtype is _VLEN_STR:
+            return ShimDataset(self, shape, np.dtype(str), layout, vlen=True)
         return ShimDataset(self, shape, dtype, layout)
 
 
@@ -626,6 +717,40 @@ class _Writer:
         ]
         return self._object_header(msgs)
 
+    def write_vlen_dataset(self, strs: Sequence[str]) -> int:
+        """1-D variable-length UTF-8 string dataset (what anndata uses for
+        string obs columns / categorical ``categories``): payloads go into
+        one global heap collection, the dataset's raw data is the 16-byte
+        descriptors pointing at it."""
+        payloads = [str(s).encode("utf-8") for s in strs]
+        gcol = bytearray(b"GCOL" + struct.pack("<B3xQ", 1, 0))  # size patched
+        descs: list[tuple[int, int]] = []
+        for i, p in enumerate(payloads, start=1):
+            gcol += struct.pack("<HH4xQ", i, 1, len(p))
+            gcol += p.ljust(_pad8(len(p)), b"\x00")
+            descs.append((len(p), i))
+        # free-space object (index 0) covers the tail; libhdf5 requires
+        # collections of >= 4096 bytes (H5HG_MINSIZE), so pad up to that
+        total = max(4096, _pad8(len(gcol) + 16))
+        free = total - len(gcol)
+        gcol += struct.pack("<HH4xQ", 0, 0, free)
+        gcol += b"\x00" * (total - len(gcol))
+        struct.pack_into("<Q", gcol, 8, total)
+        gaddr = self.alloc(bytes(gcol))
+        data = b"".join(struct.pack("<IQI", ln, gaddr, gi) for ln, gi in descs)
+        data_addr = self.alloc(data)
+        # datatype: v1 class 9 (vlen), type=string, null-pad, UTF-8 charset;
+        # the base type (1-byte unsigned int, what h5py records) follows
+        dt = struct.pack("<BBBBI", 0x19, 0x01, 0x01, 0, _VLEN_DESC)
+        dt += struct.pack("<BBBBI", 0x10, 0x00, 0, 0, 1) + struct.pack("<HH", 0, 8)
+        msgs = [
+            (_MSG_DATASPACE, self._dataspace_msg((len(payloads),))),
+            (_MSG_DATATYPE, dt),
+            (_MSG_FILL, struct.pack("<BBBB", 2, 1, 1, 0)),
+            (_MSG_LAYOUT, struct.pack("<BBQQ", 3, 1, data_addr, len(data))),
+        ]
+        return self._object_header(msgs)
+
     def write_group(self, spec: GroupSpec) -> int:
         # children first (bottom-up): their header addresses go in the SNODs
         child_addrs: dict[str, int] = {}
@@ -633,7 +758,17 @@ class _Writer:
             if isinstance(child, GroupSpec):
                 child_addrs[name] = self.write_group(child)
             else:
-                child_addrs[name] = self.write_dataset(np.asarray(child))
+                arr = np.asarray(child)
+                if arr.dtype.kind in ("U", "O"):  # python/unicode strings
+                    if arr.ndim != 1:
+                        raise NotImplementedError(
+                            "shim writer supports vlen-string datasets in 1-D only"
+                        )
+                    child_addrs[name] = self.write_vlen_dataset(
+                        [str(x) for x in arr.tolist()]
+                    )
+                else:
+                    child_addrs[name] = self.write_dataset(arr)
 
         names = sorted(child_addrs)  # symbol tables are name-ordered
         # local heap: offset 0 is the empty string (8 zero bytes), then names

@@ -67,6 +67,8 @@ class PendingIO:
     hedges_won: int = 0  # guarded-by: _lock
     breaker_opens: int = 0  # guarded-by: _lock
     breaker_closes: int = 0  # guarded-by: _lock
+    reissued_fetches: int = 0  # guarded-by: _lock
+    shared_rank_hits: int = 0  # guarded-by: _lock
     div_batches: int = 0  # guarded-by: _lock
     div_entropy_sum: float = 0.0  # guarded-by: _lock
     div_entropy_min: float = 0.0  # guarded-by: _lock — valid only when div_batches > 0
@@ -130,6 +132,13 @@ class IOStats:
     identical to the fault-free run; these counters are how that recovery
     work is made visible.
 
+    The elastic counters make the multi-host fabric's work visible:
+    ``reissued_fetches`` counts suspect-rank fetches re-issued idempotently
+    by the supervisor (each rides the rendezvous table, so a block already
+    in flight costs zero extra physical reads) and ``shared_rank_hits``
+    counts blocks one rank obtained from another co-located rank's read —
+    the RINAS-style cross-rank dedup win, measurable against ``requests``.
+
     The diversity counters are the loader's live §3.4 observatory:
     ``div_batches`` counts minibatches whose label entropy was observed
     (a :class:`~repro.core.dataset.ScDataset` built with ``diversity_obs``
@@ -158,6 +167,8 @@ class IOStats:
     hedges_won: int = 0  # guarded-by: _lock — hedges that beat the primary
     breaker_opens: int = 0  # guarded-by: _lock — shard breakers tripped open
     breaker_closes: int = 0  # guarded-by: _lock — breakers closed by a probe
+    reissued_fetches: int = 0  # guarded-by: _lock — suspect-rank fetches re-issued
+    shared_rank_hits: int = 0  # guarded-by: _lock — blocks served by another rank's read
     div_batches: int = 0  # guarded-by: _lock — batches with observed entropy
     div_entropy_sum: float = 0.0  # guarded-by: _lock — summed batch bits
     div_entropy_min: float = 0.0  # guarded-by: _lock — worst batch; valid iff div_batches > 0
@@ -183,6 +194,8 @@ class IOStats:
     spec_hedges_won: int = 0  # guarded-by: _lock
     spec_breaker_opens: int = 0  # guarded-by: _lock
     spec_breaker_closes: int = 0  # guarded-by: _lock
+    spec_reissued_fetches: int = 0  # guarded-by: _lock
+    spec_shared_rank_hits: int = 0  # guarded-by: _lock
     spec_div_batches: int = 0  # guarded-by: _lock
     spec_div_entropy_sum: float = 0.0  # guarded-by: _lock
     spec_div_entropy_min: float = 0.0  # guarded-by: _lock
@@ -210,6 +223,7 @@ class IOStats:
         prefetched: int = 0,
         adm_bypassed: int = 0,
         adm_rejected: int = 0,
+        shared_rank_hits: int = 0,
         calls: int = 1,
         slept: bool = False,
     ) -> None:
@@ -233,6 +247,7 @@ class IOStats:
                 pend.prefetched += prefetched
                 pend.adm_bypassed += adm_bypassed
                 pend.adm_rejected += adm_rejected
+                pend.shared_rank_hits += shared_rank_hits
                 pend.wall_s += wall_s
                 pend.modeled_s += dt
         elif getattr(self._tl, "scope", None) is not None:
@@ -240,7 +255,8 @@ class IOStats:
                 runs=runs, rows=rows, bytes_read=bytes_read, wall_s=wall_s,
                 cache_hits=cache_hits, cache_misses=cache_misses,
                 prefetched=prefetched, adm_bypassed=adm_bypassed,
-                adm_rejected=adm_rejected, calls=calls, slept=slept,
+                adm_rejected=adm_rejected, shared_rank_hits=shared_rank_hits,
+                calls=calls, slept=slept,
             )
             return  # the scoped child slept the simulated latency already
         else:
@@ -254,6 +270,7 @@ class IOStats:
                 self.prefetched += prefetched
                 self.adm_bypassed += adm_bypassed
                 self.adm_rejected += adm_rejected
+                self.shared_rank_hits += shared_rank_hits
                 self.wall_s += wall_s
                 self.modeled_s += dt
         # sleep OUTSIDE the lock: simulated latency must overlap across
@@ -325,6 +342,38 @@ class IOStats:
                 self.hedges_won += hedges_won
                 self.breaker_opens += breaker_opens
                 self.breaker_closes += breaker_closes
+
+    def record_elastic(
+        self,
+        *,
+        reissued_fetches: int = 0,
+        shared_rank_hits: int = 0,
+    ) -> None:
+        """Account elastic-fabric events.
+
+        ``reissued_fetches`` counts suspect-rank fetches the
+        :class:`~repro.distributed.elastic.ElasticSupervisor` re-issued
+        idempotently through the rendezvous table; ``shared_rank_hits``
+        counts blocks one rank obtained from another co-located rank's
+        physical read (also recordable inline via :meth:`record`).  Neither
+        changes delivered data — re-issue rides the in-flight dedup and
+        costs zero extra reads for blocks already in flight.  Honors
+        :meth:`deferred` capture like every other recorder.
+        """
+        pend: Optional[PendingIO] = getattr(self._tl, "pending", None)
+        if pend is not None:
+            with pend._lock:
+                pend.reissued_fetches += reissued_fetches
+                pend.shared_rank_hits += shared_rank_hits
+        elif getattr(self._tl, "scope", None) is not None:
+            self._tl.scope.record_elastic(
+                reissued_fetches=reissued_fetches,
+                shared_rank_hits=shared_rank_hits,
+            )
+        else:
+            with self._lock:
+                self.reissued_fetches += reissued_fetches
+                self.shared_rank_hits += shared_rank_hits
 
     def record_diversity(self, entropy_bits: float) -> None:
         """Account one delivered minibatch's label entropy (bits).
@@ -507,6 +556,7 @@ class IOStats:
             self.adm_bypassed = self.adm_rejected = 0
             self.retries = self.hedges_issued = self.hedges_won = 0
             self.breaker_opens = self.breaker_closes = 0
+            self.reissued_fetches = self.shared_rank_hits = 0
             self.div_batches = 0
             self.div_entropy_sum = self.div_entropy_min = 0.0
             self.wall_s = self.modeled_s = self.request_wait_s = 0.0
@@ -519,6 +569,7 @@ class IOStats:
             self.spec_retries = self.spec_hedges_issued = 0
             self.spec_hedges_won = 0
             self.spec_breaker_opens = self.spec_breaker_closes = 0
+            self.spec_reissued_fetches = self.spec_shared_rank_hits = 0
             self.spec_div_batches = 0
             self.spec_div_entropy_sum = self.spec_div_entropy_min = 0.0
             self.spec_request_wait_s = self.spec_retry_wait_s = 0.0
@@ -553,6 +604,8 @@ class IOStats:
                 "hedges_won": self.hedges_won,
                 "breaker_opens": self.breaker_opens,
                 "breaker_closes": self.breaker_closes,
+                "reissued_fetches": self.reissued_fetches,
+                "shared_rank_hits": self.shared_rank_hits,
                 "div_batches": self.div_batches,
                 "div_entropy_sum": self.div_entropy_sum,
                 "div_entropy_min": self.div_entropy_min,
@@ -575,6 +628,8 @@ class IOStats:
                 "spec_hedges_won": self.spec_hedges_won,
                 "spec_breaker_opens": self.spec_breaker_opens,
                 "spec_breaker_closes": self.spec_breaker_closes,
+                "spec_reissued_fetches": self.spec_reissued_fetches,
+                "spec_shared_rank_hits": self.spec_shared_rank_hits,
                 "spec_div_batches": self.spec_div_batches,
                 "spec_div_entropy_sum": self.spec_div_entropy_sum,
                 "spec_div_entropy_min": self.spec_div_entropy_min,

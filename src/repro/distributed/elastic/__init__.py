@@ -1,0 +1,35 @@
+"""repro.distributed.elastic — the elastic multi-host data fabric.
+
+Composes the deterministic loader (:mod:`repro.core.dataset`), the liveness
+primitives (:mod:`repro.distributed.fault`) and the shared-collection pool
+into a fabric that survives rank death and mid-training world resizes with
+bitwise stream continuation:
+
+- :mod:`.pool` — shared-collection pool (generalized out of ``serve/data``):
+  co-located consumers of the same data share one block cache + rendezvous
+  table.
+- :mod:`.repartition` — ``merge_states`` / ``partition``: turn N ranks'
+  v2 loader states into M explicit fetch plans covering exactly the
+  not-yet-delivered global remainder.
+- :mod:`.supervisor` — ``ElasticSupervisor``: heartbeat-driven suspect
+  detection, idempotent fetch re-issue through the rendezvous table,
+  duplicate-delivery dedup by fetch id.
+- :mod:`.fabric` — ``ElasticFabric`` / ``RankView``: the composition, plus
+  ``tagged_batches`` for merging per-rank streams into the global order.
+"""
+from .fabric import ElasticFabric, RankView, tagged_batches
+from .pool import GLOBAL_POOL, CollectionPool, pool_key
+from .repartition import merge_states, partition
+from .supervisor import ElasticSupervisor
+
+__all__ = [
+    "ElasticFabric",
+    "RankView",
+    "tagged_batches",
+    "GLOBAL_POOL",
+    "CollectionPool",
+    "pool_key",
+    "merge_states",
+    "partition",
+    "ElasticSupervisor",
+]

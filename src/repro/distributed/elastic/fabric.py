@@ -1,0 +1,169 @@
+"""ElasticFabric — co-located rank loaders over ONE shared collection.
+
+The RINAS composition: N rank loaders attach to a single
+:class:`~repro.data.backend.PlannedCollection` (one block cache + one
+rendezvous table), each through a :class:`RankView` that stamps the rank's
+tag around its I/O — so a block physically read for rank 0 serves rank 3
+from the shared cache, counted in ``shared_rank_hits`` instead of a second
+GET.  On top of that the fabric implements the elastic lifecycle:
+
+- ``kill(rank)`` — freeze a dead rank's loader state (its checkpoint);
+- ``resize(new_world)`` — merge all live + orphaned states
+  (:func:`~repro.distributed.elastic.repartition.merge_states`), re-split
+  (:func:`~repro.distributed.elastic.repartition.partition`), and rebuild
+  the loaders with explicit fetch plans — the merged global stream across
+  any N→M→N history is bitwise the never-resized stream (chaos-tested).
+
+:func:`tagged_batches` yields ``(global_fetch_id, batch_index, batch)`` so
+per-rank streams merge deterministically into the global order — the
+equality the bitwise tests and the smoke gate assert.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterator, Optional
+
+from repro.core.dataset import LoaderState, ScDataset
+
+from .repartition import merge_states, partition
+
+__all__ = ["RankView", "ElasticFabric", "tagged_batches"]
+
+
+class RankView:
+    """Per-rank facade over a shared collection.
+
+    Stamps the rank's tag (``collection.tagged``) around ``fetch`` and
+    ``prefetch`` so cross-rank cache traffic is attributed: a tagged fetch
+    obtaining a block ANOTHER tag read counts one ``shared_rank_hits``.
+    Everything else delegates — a RankView is a drop-in Collection.
+    """
+
+    def __init__(self, collection: Any, tag: Any):
+        self._col = collection
+        self._rank_tag = tag
+
+    def fetch(self, rows) -> Any:
+        if hasattr(self._col, "tagged"):
+            with self._col.tagged(self._rank_tag):
+                return self._col.fetch(rows)
+        return self._col.fetch(rows)
+
+    def prefetch(self, rows) -> int:
+        pf = getattr(self._col, "prefetch", None)
+        if pf is None:
+            return 0
+        if hasattr(self._col, "tagged"):
+            with self._col.tagged(self._rank_tag):
+                return pf(rows)
+        return pf(rows)
+
+    def __getitem__(self, rows) -> Any:
+        return self.fetch(rows)
+
+    def __len__(self) -> int:
+        return len(self._col)
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self._col, name)
+
+
+class ElasticFabric:
+    """N rank loaders sharing one collection, resizable mid-epoch."""
+
+    def __init__(
+        self,
+        collection: Any,
+        *,
+        world_size: int,
+        strategy: Any = None,
+        **dataset_kw,
+    ):
+        if world_size < 1:
+            raise ValueError("world_size must be >= 1")
+        dataset_kw.pop("rank", None)
+        dataset_kw.pop("world_size", None)
+        self.collection = collection
+        self.strategy = strategy
+        self.dataset_kw = dataset_kw
+        self.world_size = int(world_size)
+        self.seed = int(dataset_kw.get("seed", 0))
+        #: live loaders by rank
+        self.loaders: dict[int, ScDataset] = {
+            r: self._make(r, self.world_size) for r in range(self.world_size)
+        }
+        # states of killed ranks, merged (then cleared) at the next resize
+        self._orphans: list[LoaderState] = []
+
+    def _make(self, rank: int, world: int) -> ScDataset:
+        return ScDataset(
+            RankView(self.collection, rank),
+            self.strategy,
+            rank=rank,
+            world_size=world,
+            **self.dataset_kw,
+        )
+
+    def loader(self, rank: int) -> ScDataset:
+        return self.loaders[rank]
+
+    def kill(self, rank: int) -> LoaderState:
+        """A rank dies: freeze its loader's state (the last position it
+        DELIVERED through — in production this is its checkpoint) as an
+        orphan for the next resize, and drop the loader."""
+        ds = self.loaders.pop(rank)
+        state = ds.state()
+        self._orphans.append(state)
+        return state
+
+    def resize(self, new_world: int) -> None:
+        """Re-shape the fabric to ``new_world`` ranks mid-epoch.
+
+        Collects every live loader's state plus the orphaned states of dead
+        ranks, merges them into the global remainder, partitions it into
+        ``new_world`` explicit plans, and rebuilds the loaders.  Exactly the
+        not-yet-delivered fetches are re-assigned: no sample skipped, none
+        replayed.  From the NEXT epoch on, plain round-robin under the new
+        world applies (plans cover the current epoch only).
+        """
+        states = [ds.state() for ds in self.loaders.values()] + self._orphans
+        seed, epoch, fingerprint, remaining = merge_states(states)
+        plans = partition(remaining, new_world)
+        self._orphans = []
+        self.loaders = {}
+        self.world_size = int(new_world)
+        for r in range(new_world):
+            ds = self._make(r, new_world)
+            plan = tuple(plans[r])
+            ds.load_state(LoaderState(
+                seed, epoch, 0, 0, fingerprint,
+                new_world, plan[0][0] if plan else None, plan,
+            ))
+            self.loaders[r] = ds
+
+    def remaining(self) -> list:
+        """Gid-sorted global remainder across live loaders + orphans."""
+        states = [ds.state() for ds in self.loaders.values()] + self._orphans
+        return list(merge_states(states)[3])
+
+
+def tagged_batches(ds: ScDataset, limit: Optional[int] = None) -> Iterator:
+    """Iterate a loader, yielding ``(global_fetch_id, batch_index, batch)``.
+
+    The loader's state always points at the NEXT batch to deliver (it is
+    updated before each yield), so reading it just before ``next()`` names
+    the incoming batch's global position — the tag that lets per-rank
+    streams merge into the global stream for the bitwise comparisons.
+    Stops at the epoch boundary (or after ``limit`` batches).
+    """
+    entries = ds._fetch_entries()
+    it = iter(ds)
+    n = 0
+    while limit is None or n < limit:
+        st = ds._state
+        try:
+            batch = next(it)
+        except StopIteration:
+            return
+        gid, base_skip = entries[st.fetch_cursor]
+        yield int(gid), max(int(base_skip), st.batch_cursor), batch
+        n += 1

@@ -1,0 +1,109 @@
+"""Shared-collection pool — the serve-layer pool, generalized.
+
+PR 9's ``DataServeServer`` kept a private ``{key: (collection, refs)}`` map
+so co-tenant streams of the same data share ONE block cache and rendezvous
+table.  The elastic fabric needs the identical mechanism for co-located
+*rank loaders* (the RINAS observation: shuffled loading at scale lives or
+dies on sharing physical reads), so the mechanism moves here and both
+layers use it.
+
+Discipline (unchanged from the serve original):
+
+- ``_lock`` is a LEAF and only guards the map — the opener (collection
+  construction, file/HTTP handles) always runs OUTSIDE it.
+- Open races are resolved loser-closes: both sides open, the second one to
+  publish closes its duplicate and adopts the winner.
+- ``release`` only decrements the refcount; the collection stays open (its
+  cache warm) for the next acquirer of the same data.  ``close_all`` is the
+  owner's teardown.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from typing import Any, Callable, Optional
+
+__all__ = ["CollectionPool", "GLOBAL_POOL", "pool_key"]
+
+
+def pool_key(uri: str, open_opts: Optional[dict] = None) -> str:
+    """Collection identity: the data + how it is opened, not who samples it."""
+    return f"{uri}|{json.dumps(open_opts or {}, sort_keys=True)}"
+
+
+class _PoolEntry:
+    """A shared collection + its refcount (mutated under the pool lock)."""
+
+    __slots__ = ("collection", "refs")
+
+    def __init__(self, collection: Any):
+        self.collection = collection
+        self.refs = 0
+
+
+def _close_collection(col: Any) -> None:
+    if hasattr(col, "release"):
+        col.release()
+    elif hasattr(col, "close"):
+        col.close()
+
+
+class CollectionPool:
+    """Refcounted map of shared collections keyed by data identity."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: dict[str, _PoolEntry] = {}  # guarded-by: _lock
+
+    def acquire(self, key: str, opener: Callable[[], Any]) -> Any:
+        """The shared collection under ``key``, opening via ``opener`` on
+        first acquisition.  The opener runs outside the pool lock; a lost
+        open race closes the duplicate and returns the winner."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                entry.refs += 1
+                return entry.collection
+        col = opener()
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                entry = self._entries[key] = _PoolEntry(col)
+                entry.refs = 1
+                return col
+            entry.refs += 1
+            winner = entry.collection
+        _close_collection(col)
+        return winner
+
+    def release(self, key: str) -> None:
+        """Drop one reference.  The collection stays open (cache warm) for
+        the next acquirer; ``close_all`` tears everything down."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                entry.refs -= 1
+
+    def refs(self, key: str) -> int:
+        with self._lock:
+            entry = self._entries.get(key)
+            return entry.refs if entry is not None else 0
+
+    def entries(self) -> list:
+        """``(key, collection, refs)`` snapshot (for stats surfaces)."""
+        with self._lock:
+            return [(k, e.collection, e.refs) for k, e in self._entries.items()]
+
+    def close_all(self) -> None:
+        """Close every pooled collection and empty the map.  Collection
+        teardown (file handles, executors) runs outside the pool lock."""
+        with self._lock:
+            entries = list(self._entries.values())
+            self._entries.clear()
+        for e in entries:
+            _close_collection(e.collection)
+
+
+#: Process-global pool: co-located rank loaders (and Pipeline specs opened
+#: with ``shared_pool=True``) attach to one collection per data identity.
+GLOBAL_POOL = CollectionPool()

@@ -1,0 +1,140 @@
+"""ElasticSupervisor — suspect-rank detection and idempotent fetch re-issue.
+
+Wraps a :class:`~repro.distributed.fault.HeartbeatMonitor` with the fetch
+ledger that makes rank death survivable without double-delivery:
+
+- ``issue`` records which rank currently owes which global fetch;
+- ``ack`` marks a fetch delivered — and returns False for a DUPLICATE
+  delivery (a late, presumed-dead rank coming back with work someone else
+  already re-delivered), so the consumer can drop it by fetch id;
+- ``recover`` walks the suspect ranks and re-issues their unacknowledged
+  fetches through the collection's rendezvous table via ``prefetch``: a
+  block already in flight or cached is skipped there, so re-issuing work
+  that was *in progress* when the rank stalled costs zero extra physical
+  reads.  Re-issues are counted in the collection's IOStats
+  (``reissued_fetches``) so the fabric's recovery work is visible.
+
+The supervisor re-warms I/O; *re-assignment* of the dead rank's fetches to
+live ranks is the fabric's repartition step (:mod:`.repartition`) — the two
+compose because fetches are pure in ``(seed, epoch, global_fetch_id)``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.distributed.fault import HeartbeatMonitor
+
+if False:  # pragma: no cover — imports only for the lock analyzer / typing
+    from repro.core.dataset import ScDataset
+    from repro.data.backend import PlannedCollection
+
+__all__ = ["ElasticSupervisor"]
+
+
+class ElasticSupervisor:
+    """Liveness + at-most-once fetch ledger for one loader's global stream."""
+
+    def __init__(
+        self,
+        dataset,  # ScDataset (duck-typed: needs .collection/._epoch_order)
+        *,
+        heartbeat: Optional[HeartbeatMonitor] = None,
+        timeout_s: float = 5.0,
+    ):
+        # annotated so the static lock analyzer can trace recover()'s
+        # deliberate lock edges: supervisor -> epoch-order cache
+        # (ScDataset._order_lock) and supervisor -> rendezvous
+        # (PlannedCollection._fl)
+        self.dataset: "ScDataset" = dataset
+        self.collection: "PlannedCollection" = dataset.collection
+        self.heartbeat = heartbeat or HeartbeatMonitor(timeout_s=timeout_s)
+        self._lock = threading.Lock()
+        self._owner: dict = {}  # guarded-by: _lock — (epoch, gid) -> rank
+        self._delivered: set = set()  # guarded-by: _lock — acked (epoch, gid)
+        self._reissued: set = set()  # guarded-by: _lock — recovered (epoch, gid)
+
+    # ------------------------------------------------------------- liveness
+    def beat(self, rank) -> None:
+        self.heartbeat.beat(str(rank))
+
+    def suspects(self) -> list:
+        return self.heartbeat.suspects()
+
+    # -------------------------------------------------------------- ledger
+    def issue(self, rank, epoch: int, global_fetch_id: int) -> None:
+        """Record that ``rank`` now owes fetch ``(epoch, global_fetch_id)``."""
+        with self._lock:
+            self._owner[(int(epoch), int(global_fetch_id))] = str(rank)
+
+    def ack(self, rank, epoch: int, global_fetch_id: int) -> bool:
+        """Mark the fetch delivered by ``rank``.  True on first delivery;
+        False for a duplicate (drop it — someone already delivered this
+        fetch id, e.g. after a suspect rank's work was re-assigned)."""
+        key = (int(epoch), int(global_fetch_id))
+        with self._lock:
+            self._owner.pop(key, None)
+            if key in self._delivered:
+                return False
+            self._delivered.add(key)
+            return True
+
+    def outstanding(self, rank=None) -> list:
+        """Unacknowledged ``(epoch, gid)`` fetches — all, or one rank's."""
+        with self._lock:
+            if rank is None:
+                return sorted(self._owner)
+            r = str(rank)
+            return sorted(k for k, v in self._owner.items() if v == r)
+
+    # ------------------------------------------------------------ recovery
+    def _rows_of(self, epoch: int, gid: int) -> np.ndarray:
+        # self.dataset spelled out (no local alias): the lock analyzer only
+        # traces ``self.attr.method()`` receivers, and recover() holds the
+        # ledger lock across this — the edge must stay statically visible
+        order = self.dataset._epoch_order(epoch)
+        fs = self.dataset.fetch_size
+        rows = order[gid * fs : min((gid + 1) * fs, len(order))]
+        if self.dataset.sort_fetch_indices:
+            return np.sort(rows, kind="stable")
+        return rows
+
+    def recover(self) -> dict:
+        """Re-issue every suspect rank's unacknowledged fetches.
+
+        Returns ``{rank: [gid, ...]}`` of what was re-issued.  Each fetch
+        goes through ``collection.prefetch`` — the rendezvous table skips
+        blocks cached or already in flight, so a fetch the stalled rank had
+        mid-read is re-claimed for free.  Idempotent per fetch: a fetch is
+        recovered once until it is re-issued to a new owner.
+        """
+        # snapshot suspects OUTSIDE _lock: the monitor locks itself, and the
+        # supervisor lock deliberately extends over the rendezvous/prefetch
+        # path below — nesting the monitor under it would widen the witness
+        # graph for no benefit
+        sus = set(self.heartbeat.suspects())
+        if not sus:
+            return {}
+        out: dict = {}
+        stats = getattr(self.collection, "iostats", None)
+        # the supervisor lock is HELD across prefetch + stats recording on
+        # purpose: recovery must be atomic w.r.t. a concurrent ack/issue of
+        # the same fetch (no re-issue of work acked mid-walk).  This is the
+        # supervisor -> rendezvous lock edge pinned in tests/test_analyze.py.
+        with self._lock:
+            todo = [
+                (k, r) for k, r in self._owner.items()
+                if r in sus and k not in self._reissued
+            ]
+            for (epoch, gid), rank in sorted(todo):
+                self.collection.prefetch(self._rows_of(epoch, gid))
+                self._reissued.add((epoch, gid))
+                out.setdefault(rank, []).append(gid)
+        # stats recording happens OUTSIDE the ledger lock: it needs no
+        # atomicity with the re-issue walk, and keeping IOStats._lock out
+        # from under the supervisor lock keeps the witness graph minimal
+        if stats is not None and hasattr(stats, "record_elastic") and todo:
+            stats.record_elastic(reissued_fetches=len(todo))
+        return out

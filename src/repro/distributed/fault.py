@@ -50,14 +50,15 @@ def run_with_restarts(
     ``work`` must be checkpoint-resumable (the training driver is: state +
     loader cursor ride in the checkpoint).  Returns work's result.
 
-    The backoff before restart ``k`` is ``min(backoff_s * k, max_backoff_s)
-    * (1 + jitter * u_k)`` with ``u_k`` a seeded uniform draw in ``[0, 1)``
-    — linear growth, capped (``max_backoff_s=None`` = uncapped), and
-    desynchronized across supervisors restarting off one shared failure
-    (jitter=0 keeps the legacy deterministic schedule).  ``on_give_up(
-    restarts_used, last_exc)`` fires once when the budget is exhausted,
-    before the final exception propagates — the hook for paging/cleanup.
-    ``sleep`` is injectable so tests assert the schedule without waiting it.
+    The backoff before restart ``k`` is ``min(backoff_s * 2**(k-1),
+    max_backoff_s) * (1 + jitter * u_k)`` with ``u_k`` a seeded uniform draw
+    in ``[0, 1)`` — exponential growth, capped (``max_backoff_s=None`` =
+    uncapped), and desynchronized across supervisors restarting off one
+    shared failure (jitter=0 keeps a deterministic schedule; the jittered
+    schedule is deterministic in ``seed``).  ``on_give_up(restarts_used,
+    last_exc)`` fires once when the budget is exhausted, before the final
+    exception propagates — the hook for paging/cleanup.  ``sleep`` is
+    injectable so tests assert the schedule without waiting it.
     """
     rng = random.Random(seed)
     attempt = 0
@@ -73,12 +74,43 @@ def run_with_restarts(
             if on_restart:
                 on_restart(attempt, e)
             if backoff_s:
-                delay = backoff_s * attempt
+                delay = backoff_s * (2.0 ** (attempt - 1))
                 if max_backoff_s is not None:
                     delay = min(delay, max_backoff_s)
                 if jitter:
                     delay *= 1.0 + jitter * rng.random()
                 sleep(delay)
+
+
+def _undivisible_dims(axes_tree: Any, shapes_tree: Any, rules: Rules, mesh) -> list[str]:
+    """Dims whose rule maps to mesh axes that do NOT divide the dim size.
+
+    ``spec_for_axes(strict=True)`` silently replicates such a dim — fine for
+    a fresh jit trace, but on an elastic RESTORE it means the new topology
+    quietly changes the layout (and likely the memory budget) the job was
+    sized for.  Returns human-readable descriptions, empty = all divisible.
+    """
+    from .sharding import _axis_size, _present, _is_axes_leaf, _shape_of
+
+    bad: list[str] = []
+
+    def check(axes, shaped):
+        shape = _shape_of(shaped)
+        for i, logical in enumerate(axes):
+            if not logical:
+                continue
+            a = _present(mesh, rules.get(logical))
+            if a is None:
+                continue
+            n = _axis_size(mesh, a)
+            if n > 1 and shape[i] % n != 0:
+                bad.append(
+                    f"dim '{logical}' of shape {tuple(shape)} (size {shape[i]}) "
+                    f"is not divisible by mesh axes {a!r} (={n} devices)"
+                )
+
+    jax.tree.map(check, axes_tree, shapes_tree, is_leaf=_is_axes_leaf)
+    return bad
 
 
 def reshard_for_mesh(
@@ -88,14 +120,32 @@ def reshard_for_mesh(
     mesh,
     rules: Rules,
     step: Optional[int] = None,
+    *,
+    strict: bool = True,
 ):
     """Restore a checkpoint onto a (possibly different) mesh.
 
     Arrays are saved unsharded; shardings are re-resolved against the target
     mesh, so any topology whose axes divide the logical dims works — the
     elastic path for lost/added pod slices.
+
+    ``strict=True`` (default) REFUSES a mesh whose axes do not divide the
+    logical dims they shard: ``spec_for_axes`` would silently fall back to
+    replication, and an elastic restore that quietly changes the layout the
+    job was sized for is corruption-by-OOM waiting to happen.  Pass
+    ``strict=False`` to accept the documented replicate-fallback instead.
     """
     shapes = jax.tree.map(lambda t: t, template)
+    if strict:
+        bad = _undivisible_dims(axes_tree, shapes, rules, mesh)
+        if bad:
+            raise ValueError(
+                "reshard_for_mesh: target mesh does not divide the logical "
+                "dims it shards (the sharding rules would silently fall back "
+                "to replication):\n  - " + "\n  - ".join(bad)
+                + "\nPick a mesh whose axes divide these dims, change the "
+                "rules, or pass strict=False to accept replication."
+            )
     shardings = tree_shardings(axes_tree, rules, mesh, shapes)
     return ckpt.restore(template, step, shardings=shardings)
 

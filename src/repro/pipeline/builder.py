@@ -67,6 +67,8 @@ class Pipeline:
         "retries", "retry_backoff_s", "retry_max_backoff_s",
         "retry_deadline_s", "hedge_factor", "hedge_min_s",
         "breaker_threshold", "breaker_cooldown_s",
+        # elastic fabric (PR 10): pooled vs private collection instance
+        "shared_pool",
     )
 
     def __init__(self, spec: DataSpec, collection: Any = None, iostats: Any = None):
@@ -76,6 +78,10 @@ class Pipeline:
         # those are released by DataPipeline.close(); caller-supplied
         # collections are never touched.
         self._owns_collection = False
+        # set when the collection came from the process-global pool
+        # (spec.shared_pool): closing releases the refcount, never the
+        # shared instance itself
+        self._pool_key: Optional[str] = None
         # runtime-only handle: a caller-owned IOStats (e.g. a benchmark's
         # simulated-latency model) threaded into open_collection.  Never part
         # of the spec — it changes accounting/timing, not stream content.
@@ -149,6 +155,11 @@ class Pipeline:
             getattr(old, f) != getattr(self._spec, f)
             for f in self._COLLECTION_FIELDS
         ):
+            if self._pool_key is not None:
+                from repro.distributed.elastic.pool import GLOBAL_POOL
+
+                GLOBAL_POOL.release(self._pool_key)
+                self._pool_key = None
             self._collection = None
             self._owns_collection = False
         return self
@@ -254,6 +265,19 @@ class Pipeline:
         if policy is not None:
             kw["cache_policy"] = str(policy)
         return self._replace(**kw)
+
+    def shared(self, on: bool = True) -> "Pipeline":
+        """Attach to the process-global shared-collection pool
+        (:data:`repro.distributed.elastic.GLOBAL_POOL`) instead of opening
+        a private collection: co-located consumers of the same data — the
+        elastic fabric's rank loaders, or several pipelines in one process —
+        share ONE block cache and rendezvous table, so a block one of them
+        faults in serves the rest without a second backend request (the
+        RINAS cross-rank dedup).  Content-free: it changes who performs a
+        physical read, never which bytes a consumer is delivered.  The
+        first opener's collection-side knobs win for the shared instance;
+        ``DataPipeline.close()`` drops the pool reference only."""
+        return self._replace(shared_pool=bool(on))
 
     def resilience(
         self,
@@ -413,7 +437,24 @@ class Pipeline:
         open the collection with those knobs yourself, or use ``from_uri``.
         """
         if self._collection is None:
-            self._collection = _open_from_spec(self._spec, iostats=self._iostats)
+            if self._spec.shared_pool:
+                from repro.distributed.elastic.pool import GLOBAL_POOL, pool_key
+
+                if self._spec.uri is None:
+                    raise ValueError(
+                        "shared_pool=True needs a URI-backed spec (the pool "
+                        "keys collections by data identity)"
+                    )
+                key = pool_key(self._spec.uri, self._spec.open_opts)
+                self._collection = GLOBAL_POOL.acquire(
+                    key,
+                    lambda: _open_from_spec(self._spec, iostats=self._iostats),
+                )
+                self._pool_key = key
+            else:
+                self._collection = _open_from_spec(
+                    self._spec, iostats=self._iostats
+                )
             self._owns_collection = True
             return self._collection
         s = self._spec
@@ -464,6 +505,7 @@ class Pipeline:
             s, col, ds,
             recommendation=getattr(self, "last_recommendation", None),
             owns_collection=self._owns_collection,
+            pool_key=self._pool_key,
         )
 
 
@@ -537,12 +579,16 @@ class DataPipeline:
         *,
         recommendation: Optional[Recommendation] = None,
         owns_collection: bool = False,
+        pool_key: Optional[str] = None,
     ):
         self.spec = spec
         self.collection = collection
         self.dataset = dataset
         self.recommendation = recommendation
         self.owns_collection = owns_collection
+        #: set when the collection is a GLOBAL_POOL reference — close()
+        #: then releases the refcount instead of the shared instance
+        self.pool_key = pool_key
         # the PrefetchPool behind the most recent __iter__ (None when
         # iterating synchronously) — exposes pool stats / worker balance
         self.last_pool: Optional[PrefetchPool] = None
@@ -671,6 +717,13 @@ class DataPipeline:
         (``from_collection``) are never touched: the caller opened them, the
         caller may be sharing them, the caller closes them."""
         if not self.owns_collection:
+            return
+        if self.pool_key is not None:
+            # pooled: drop OUR reference; the shared instance (and its warm
+            # cache) outlives this pipeline for the pool's other holders
+            from repro.distributed.elastic.pool import GLOBAL_POOL
+
+            GLOBAL_POOL.release(self.pool_key)
             return
         if hasattr(self.collection, "release"):
             self.collection.release()

@@ -65,8 +65,11 @@ __all__ = [
 #: ``entropy_floor`` — content-free: telemetry observes the stream and the
 #: floor only steers autotune's choice, which lands in fingerprinted fields);
 #: 5 = PR 9 adds ``cache_policy`` (content-free: cache organization changes
-#: hit rates, never delivered bytes).
-SPEC_VERSION = 5
+#: hit rates, never delivered bytes);
+#: 6 = PR 10 adds ``shared_pool`` (content-free: co-located consumers
+#: attaching to one pooled collection dedup physical reads — the elastic
+#: fabric's RINAS path — without changing any delivered byte).
+SPEC_VERSION = 6
 
 #: name -> strategy class.  Params are the dataclass fields, JSON-typed;
 #: ``weights`` / ``labels`` may instead arrive as ``weights_obs`` /
@@ -175,6 +178,10 @@ CONTENT_FREE_FIELDS = frozenset({
     # floor is an autotune TARGET — the (b, f) it picks land in fingerprinted
     # fields, so the floor itself carries no content
     "diversity_obs", "entropy_floor",
+    # elastic fabric: attaching to the process-global shared-collection
+    # pool changes WHO performs a physical read (cross-rank dedup), never
+    # which bytes a consumer is delivered
+    "shared_pool",
 })
 
 
@@ -238,6 +245,9 @@ class DataSpec:
     # ---- diversity observatory: live §3.4 entropy telemetry + SLO
     diversity_obs: Optional[str] = None  # obs column to track; None = off
     entropy_floor: float = 0.0  # autotune E[H] target (bits); 0 = no floor
+
+    # ---- elastic fabric: share one collection across co-located consumers
+    shared_pool: bool = False  # open via the process-global CollectionPool
 
     version: int = SPEC_VERSION
 

@@ -52,6 +52,7 @@ from typing import Any, Optional
 from repro.core.dataset import LoaderState, ScDataset
 from repro.data import open_collection
 from repro.data.iostats import IOStats
+from repro.distributed.elastic.pool import CollectionPool, pool_key
 from repro.pipeline.builder import DataPipeline
 from repro.pipeline.spec import DataSpec, strategy_from_spec
 
@@ -199,26 +200,9 @@ class _Tenant:
         }
 
 
-class _PoolEntry:
-    """A shared collection + its refcount (mutated under the server lock)."""
-
-    __slots__ = ("collection", "refs")
-
-    def __init__(self, collection: Any):
-        self.collection = collection
-        self.refs = 0
-
-
 def _pool_key(spec: DataSpec) -> str:
     """Collection identity: the data, not the tenant's sampling of it."""
-    return f"{spec.uri}|{json.dumps(spec.open_opts, sort_keys=True)}"
-
-
-def _close_collection(col: Any) -> None:
-    if hasattr(col, "release"):
-        col.release()
-    elif hasattr(col, "close"):
-        col.close()
+    return pool_key(spec.uri, spec.open_opts)
 
 
 def _put_until(q: queue.Queue, item, stop: threading.Event) -> bool:
@@ -255,7 +239,9 @@ class DataServeServer:
         # FIFO of (event, box) waiters; the releasing thread writes
         # box["slot"] BEFORE set(), so a woken waiter owns its slot
         self._waiting: deque = deque()  # guarded-by: _lock
-        self._pool: dict[str, _PoolEntry] = {}  # guarded-by: _lock
+        # shared-collection pool (repro.distributed.elastic.pool) — its own
+        # leaf lock; the serve _lock never extends over pool operations
+        self._pool = CollectionPool()
         self._conns: set = set()  # guarded-by: _lock — open sockets, for stop()
         self._conn_threads: list = []  # guarded-by: _lock
         self._next_tenant_id = 0  # guarded-by: _lock
@@ -303,7 +289,6 @@ class DataServeServer:
             tenants = list(self._tenants.values())
             conns = list(self._conns)
             threads = list(self._conn_threads)
-            entries = list(self._pool.values())
         for t in tenants:
             t.stop.set()
         for c in conns:  # unblocks threads parked in recv()
@@ -315,10 +300,7 @@ class DataServeServer:
             self._accept_thread.join(timeout=5.0)
         for th in threads:
             th.join(timeout=5.0)
-        for e in entries:
-            _close_collection(e.collection)
-        with self._lock:
-            self._pool.clear()
+        self._pool.close_all()
 
     def __enter__(self) -> "DataServeServer":
         return self.start()
@@ -378,50 +360,34 @@ class DataServeServer:
         with the server's collection-side knobs and the shared IOStats
         base.  Returns ``(pool_key, collection)``."""
         key = _pool_key(spec)
-        with self._lock:
-            entry = self._pool.get(key)
-            if entry is not None:
-                entry.refs += 1
-                return key, entry.collection
         cfg = self.config
-        knobs: dict = {}
-        if cfg.block_rows is not None:
-            knobs["block_rows"] = cfg.block_rows
-        col = open_collection(
-            spec.uri,
-            iostats=self.iostats,
-            cache_bytes=cfg.cache_bytes,
-            cache_policy=cfg.cache_policy,
-            admission=cfg.admission,
-            io_workers=cfg.io_workers,
-            **knobs,
-            **spec.open_opts,
-        )
-        with self._lock:
-            entry = self._pool.get(key)
-            if entry is None:
-                entry = self._pool[key] = _PoolEntry(col)
-                entry.refs = 1
-                return key, col
-            entry.refs += 1
-            winner = entry.collection
-        # lost the open race: keep the winner, close the duplicate
-        _close_collection(col)
-        return key, winner
+
+        def opener():
+            knobs: dict = {}
+            if cfg.block_rows is not None:
+                knobs["block_rows"] = cfg.block_rows
+            return open_collection(
+                spec.uri,
+                iostats=self.iostats,
+                cache_bytes=cfg.cache_bytes,
+                cache_policy=cfg.cache_policy,
+                admission=cfg.admission,
+                io_workers=cfg.io_workers,
+                **knobs,
+                **spec.open_opts,
+            )
+
+        return key, self._pool.acquire(key, opener)
 
     def _release_collection(self, key: str) -> None:
         # refcount only — the collection stays open (cache warm) for the
         # next tenant of the same data; stop() closes everything
-        with self._lock:
-            entry = self._pool.get(key)
-            if entry is not None:
-                entry.refs -= 1
+        self._pool.release(key)
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> ServeStats:
         with self._lock:
             tenants = list(self._tenants.values())
-            entries = [(k, e.collection, e.refs) for k, e in self._pool.items()]
             admission = {
                 "max_tenants": self.config.max_tenants,
                 "active": sum(s is not None for s in self._slots),
@@ -430,7 +396,9 @@ class DataServeServer:
                 "admit_timeouts": self._admit_timeouts,
                 "peak_active": self._peak_active,
             }
-        # merges/cache snapshots take other locks — strictly outside _lock
+        # merges/cache snapshots/pool reads take other locks — strictly
+        # outside _lock
+        entries = self._pool.entries()
         agg = self.iostats.child()
         agg.merge(self.iostats)
         agg.merge(self._drained)

@@ -499,6 +499,39 @@ class TestRepoGate:
                 "repro.data.cloud.CloudAdapter._sem",
                 "repro.data.faults.FaultInjectingAdapter._lock",
             ),
+            # PR 10 elastic fabric: ElasticSupervisor.recover() deliberately
+            # HOLDS the supervisor ledger lock across collection.prefetch so
+            # recovery is atomic w.r.t. concurrent ack/issue of the same
+            # fetch.  prefetch's may-acquire set therefore hangs off the
+            # supervisor lock: the rendezvous lock (_fl), the prefetch
+            # executor guard (_exec_lock), both cache flavours, and the
+            # shard breaker consulted on the read path, and the epoch-order
+            # cache consulted to name the re-issued rows.  All acyclic — no
+            # collection/loader code ever calls back into the supervisor.
+            (
+                "repro.distributed.elastic.supervisor.ElasticSupervisor._lock",
+                "repro.core.dataset.ScDataset._order_lock",
+            ),
+            (
+                "repro.distributed.elastic.supervisor.ElasticSupervisor._lock",
+                "repro.data.backend.PlannedCollection._fl",
+            ),
+            (
+                "repro.distributed.elastic.supervisor.ElasticSupervisor._lock",
+                "repro.data.backend.PlannedCollection._exec_lock",
+            ),
+            (
+                "repro.distributed.elastic.supervisor.ElasticSupervisor._lock",
+                "repro.data.readplan.BlockCache._lock",
+            ),
+            (
+                "repro.distributed.elastic.supervisor.ElasticSupervisor._lock",
+                "repro.data.readplan.SegmentedBlockCache._lock",
+            ),
+            (
+                "repro.distributed.elastic.supervisor.ElasticSupervisor._lock",
+                "repro.data.faults.ShardBreaker._lock",
+            ),
         }
 
 

@@ -73,6 +73,29 @@ _SUBPROCESS_SCRIPT = textwrap.dedent("""
     assert restored["w"].sharding.mesh.shape["data"] == 4
     assert manifest["loader_state"]["fetch_cursor"] == 3
     print("ELASTIC_OK")
+
+    # A mesh whose axes do NOT divide the dims they shard is refused with a
+    # clear error (silent replicate-fallback on an elastic restore would
+    # quietly change the layout the job was sized for)...
+    odd_dir = ckpt_dir + "_odd"
+    odd_template = {{"w": jnp.zeros((6, 64), jnp.float32)}}
+    sh_odd = tree_shardings(axes, RULES_TRAIN, mesh_a, odd_template)
+    mgr2 = CheckpointManager(odd_dir)
+    mgr2.save(1, {{"w": jax.device_put(
+        jnp.arange(6 * 64, dtype=jnp.float32).reshape(6, 64), sh_odd["w"])}})
+    try:
+        reshard_for_mesh(mgr2, odd_template, axes, mesh_a, RULES_TRAIN)
+        raise SystemExit("expected ValueError for undivisible vocab dim")
+    except ValueError as e:
+        msg = str(e)
+        assert "not divisible" in msg and "vocab" in msg, msg
+        assert "strict=False" in msg, msg
+    # ...while strict=False opts back into the documented replication
+    r2, _ = reshard_for_mesh(mgr2, odd_template, axes, mesh_a, RULES_TRAIN,
+                             strict=False)
+    assert np.array_equal(np.asarray(r2["w"]),
+                          np.arange(6 * 64, dtype=np.float32).reshape(6, 64))
+    print("ELASTIC_STRICT_OK")
 """)
 
 
@@ -83,3 +106,4 @@ def test_elastic_remesh_subprocess(tmp_path):
                        text=True, timeout=300)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "ELASTIC_OK" in r.stdout
+    assert "ELASTIC_STRICT_OK" in r.stdout

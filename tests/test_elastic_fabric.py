@@ -1,0 +1,572 @@
+"""Elastic multi-host data fabric (ISSUE 10): kill/resize chaos suite.
+
+Acceptance invariants under test:
+
+- **bitwise stream continuation** — kill a rank mid-epoch, resize the world
+  N→M→N, and the union of the delivered per-rank streams (merged by global
+  fetch id / batch index) is bitwise identical to the never-resized run;
+  fetches are pure in ``(seed, epoch, global_fetch_id)`` (paper Alg. 1), so
+  the merged ``remaining`` lists ARE the not-yet-delivered stream;
+- the same holds **under active fault injection** (``fault://`` transient
+  errors + retries) composed with the rank kills — chaos on chaos;
+- **cross-rank read dedup** (the RINAS composition): rank loaders sharing
+  ONE collection issue strictly fewer ``cloud://`` requests and bytes than
+  the same ranks on isolated per-rank collections, with the dividend
+  attributed in ``shared_rank_hits``;
+- :class:`ElasticSupervisor`: at-most-once ledger (duplicate delivery acks
+  False), idempotent suspect recovery through the rendezvous table
+  (re-issuing work whose blocks are cached/in-flight costs zero extra
+  reads), ``reissued_fetches`` accounting;
+- :func:`merge_states` refuses drifted/duplicated/pre-v2 states;
+- :class:`CollectionPool` refcounting and open-race resolution;
+- ``Pipeline.shared()`` builds against the process-global pool
+  (content-free: same fingerprint, same delivered bytes).
+
+Every test runs under the runtime lock-order witness — kill/resize chaos is
+exactly where an unpredicted lock edge would surface.
+"""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BlockShuffling, ScDataset
+from repro.core.dataset import LoaderState
+from repro.data import IOStats, open_collection
+from repro.data.chunked_store import write_chunked_store
+from repro.data.csr_store import write_csr_shard
+from repro.distributed.elastic import (
+    GLOBAL_POOL,
+    CollectionPool,
+    ElasticFabric,
+    ElasticSupervisor,
+    merge_states,
+    partition,
+    pool_key,
+    tagged_batches,
+)
+from repro.distributed.fault import HeartbeatMonitor
+from repro.pipeline import Pipeline
+
+
+@pytest.fixture(autouse=True)
+def _witness(lock_order_witness):
+    """Every chaos test runs under the runtime lock-order witness."""
+    yield
+
+
+N, G = 512, 8
+FETCH_KW = dict(batch_size=8, fetch_factor=2, seed=3)
+#: same knobs as test_resilience: ~15% transient failures, pure-hash chaos
+FAULT_Q = "seed=5&error_rate=0.15"
+RETRY_KW = dict(retries=10, retry_backoff_s=0.0005, retry_max_backoff_s=0.005)
+
+
+@pytest.fixture(scope="module")
+def store(tmp_path_factory):
+    rng = np.random.default_rng(11)
+    root = tmp_path_factory.mktemp("elastic")
+    X = (rng.random((N, G)) * 10).astype(np.float32)
+    d = str(root / "chunks")
+    write_chunked_store(d, X, chunk_rows=32)
+    return d, X
+
+
+def _random_csr(rng, n, g):
+    counts = rng.integers(1, g, n)
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    nnz = int(indptr[-1])
+    indices = rng.integers(0, g, nnz).astype(np.int32)
+    data = rng.random(nnz).astype(np.float32)
+    return data, indices, indptr
+
+
+@pytest.fixture(scope="module")
+def csr_shards(tmp_path_factory):
+    rng = np.random.default_rng(23)
+    root = tmp_path_factory.mktemp("elastic_csr")
+    data, indices, indptr = _random_csr(rng, N, G)
+    half = int(indptr[N // 2])
+    s0, s1 = str(root / "s0"), str(root / "s1")
+    write_csr_shard(s0, data[:half], indices[:half], indptr[: N // 2 + 1], G, {})
+    write_csr_shard(s1, data[half:], indices[half:], indptr[N // 2:] - half,
+                    G, {})
+    return f"{s0},{s1}"
+
+
+def _dense(b):
+    return b.to_dense().copy() if hasattr(b, "to_dense") else np.asarray(b).copy()
+
+
+def _open(d, **kw):
+    return open_collection(f"chunked://{d}", block_rows=32,
+                           cache_bytes=4 << 20, **kw)
+
+
+def _fabric(col, world, **overrides):
+    kw = dict(FETCH_KW)
+    kw.update(overrides)
+    return ElasticFabric(col, world_size=world, strategy=BlockShuffling(8),
+                         **kw)
+
+
+def _drain_into(out, ds, limit=None):
+    """Collect ``(gid, batch_index) -> dense batch``, refusing duplicates."""
+    n = 0
+    for gid, j, b in tagged_batches(ds, limit=limit):
+        key = (gid, j)
+        assert key not in out, f"duplicate delivery of {key}"
+        out[key] = _dense(b)
+        n += 1
+    return n
+
+
+def _reference_stream(col):
+    """The never-resized global epoch: one world-1 loader, fetches pure in
+    (seed, epoch, gid) make this THE stream any world must deliver."""
+    ds = ScDataset(col, BlockShuffling(8), rank=0, world_size=1, **FETCH_KW)
+    ref = {}
+    _drain_into(ref, ds)
+    return ref
+
+
+def _assert_streams_equal(ref, got):
+    assert set(got) == set(ref)
+    for key in ref:
+        np.testing.assert_array_equal(got[key], ref[key])
+
+
+# --------------------------------------------------- bitwise kill / resize
+def test_bitwise_kill_resize_n_m_n(store):
+    """world 3 → kill(1) → resize(2) → resize(3): merged stream bitwise
+    equals the never-resized epoch, every batch delivered exactly once."""
+    d, _ = store
+    ref = _reference_stream(_open(d))
+
+    col = _open(d)
+    fab = _fabric(col, 3)
+    got = {}
+    for r in list(fab.loaders):
+        _drain_into(got, fab.loaders[r], limit=3)
+    fab.kill(1)
+    fab.resize(2)
+    for r in list(fab.loaders):
+        _drain_into(got, fab.loaders[r], limit=2)
+    fab.resize(3)
+    for r in list(fab.loaders):
+        _drain_into(got, fab.loaders[r])
+
+    _assert_streams_equal(ref, got)
+    # ranks share ONE collection: cross-rank cache traffic was attributed
+    assert col.stats()["io"]["shared_rank_hits"] > 0
+
+
+@pytest.mark.parametrize("world,resizes", [
+    (2, [4]),        # grow
+    (3, [1]),        # collapse to one
+    (1, [3, 2]),     # grow then shrink
+    (4, [2, 3, 4]),  # full round trip
+])
+def test_bitwise_resize_sequences(store, world, resizes):
+    """Any N→...→M resize history delivers the same global epoch."""
+    d, _ = store
+    ref = _reference_stream(_open(d))
+
+    fab = _fabric(_open(d), world)
+    got = {}
+    for new_world in resizes:
+        for r in list(fab.loaders):
+            _drain_into(got, fab.loaders[r], limit=2)
+        fab.resize(new_world)
+    for r in list(fab.loaders):
+        _drain_into(got, fab.loaders[r])
+    _assert_streams_equal(ref, got)
+
+
+def test_bitwise_kill_without_resize_then_merge(store):
+    """A killed rank's orphaned state re-enters the stream at the next
+    resize — nothing it still owed is lost in between."""
+    d, _ = store
+    ref = _reference_stream(_open(d))
+
+    fab = _fabric(_open(d), 3)
+    got = {}
+    for r in list(fab.loaders):
+        _drain_into(got, fab.loaders[r], limit=1)
+    state = fab.kill(2)
+    assert state.remaining, "killed mid-epoch: the orphan still owes fetches"
+    # survivors keep going before anyone resizes
+    for r in list(fab.loaders):
+        _drain_into(got, fab.loaders[r], limit=2)
+    fab.resize(2)
+    for r in list(fab.loaders):
+        _drain_into(got, fab.loaders[r])
+    _assert_streams_equal(ref, got)
+
+
+def test_bitwise_resize_under_fault_injection(store):
+    """fault:// transient errors + retries composed with kill/resize: the
+    continuation stays bitwise — chaos on chaos."""
+    d, _ = store
+    ref = _reference_stream(_open(d))
+
+    col = open_collection(f"fault://chunked://{d}?{FAULT_Q}", block_rows=32,
+                          cache_bytes=4 << 20, **RETRY_KW)
+    fab = _fabric(col, 2)
+    got = {}
+    for r in list(fab.loaders):
+        _drain_into(got, fab.loaders[r], limit=3)
+    fab.kill(0)
+    fab.resize(3)
+    for r in list(fab.loaders):
+        _drain_into(got, fab.loaders[r], limit=2)
+    fab.resize(2)
+    for r in list(fab.loaders):
+        _drain_into(got, fab.loaders[r])
+    _assert_streams_equal(ref, got)
+    assert col.stats()["io"]["retries"] > 0, "faults must actually fire"
+
+
+def test_resize_mid_fetch_respects_batch_cursor(store):
+    """Kill a rank mid-FETCH (batch_cursor > 0): the re-homed plan skips
+    exactly the delivered minibatches of the partial fetch."""
+    d, _ = store
+    ref = _reference_stream(_open(d))
+
+    fab = _fabric(_open(d), 2)
+    got = {}
+    # fetch_factor=2 → 2 batches per fetch; 1 batch leaves a fetch half-done
+    _drain_into(got, fab.loaders[0], limit=1)
+    st = fab.kill(0)
+    assert st.remaining[0][1] > 0, "first remaining entry carries the skip"
+    fab.resize(2)
+    for r in list(fab.loaders):
+        _drain_into(got, fab.loaders[r])
+    _assert_streams_equal(ref, got)
+
+
+def test_next_epoch_reverts_to_round_robin(store):
+    """Explicit plans cover the CURRENT epoch only: after the resized epoch
+    drains, epoch+1 under the new world is plain Alg. 1 round-robin."""
+    d, _ = store
+    fab = _fabric(_open(d), 3)
+    got = {}
+    for r in list(fab.loaders):
+        _drain_into(got, fab.loaders[r], limit=2)
+    fab.resize(2)
+    for r in list(fab.loaders):
+        _drain_into(got, fab.loaders[r])
+    for ds in fab.loaders.values():
+        assert ds._fetch_plan is None, "plan must clear at the epoch boundary"
+        assert ds._state.epoch == 1
+    # epoch 1 matches a fresh world-2 loader pair exactly
+    fresh = {r: ScDataset(_open(d), BlockShuffling(8), rank=r, world_size=2,
+                          **FETCH_KW) for r in range(2)}
+    for ds in fresh.values():
+        ds.set_epoch(1)
+    for r, ds in fab.loaders.items():
+        want = [_dense(b) for b in fresh[r]]
+        have = [_dense(b) for b in ds]
+        assert len(have) == len(want)
+        for w, h in zip(want, have):
+            np.testing.assert_array_equal(w, h)
+
+
+# -------------------------------------------------- loader state v2 surface
+def test_state_v2_json_roundtrip_resumes_bitwise(store):
+    d, _ = store
+    ds = ScDataset(_open(d), BlockShuffling(8), rank=0, world_size=2,
+                   **FETCH_KW)
+    it = iter(ds)
+    skipped = [_dense(next(it)) for _ in range(3)]
+    assert len(skipped) == 3
+    st = ds.state()
+    assert st.world_size == 2 and st.remaining is not None
+    assert st.global_cursor == st.remaining[0][0]
+    wire = json.dumps(st.to_dict())
+    back = LoaderState.from_dict(json.loads(wire))
+    assert back == st
+
+    rest = [_dense(b) for b in it]
+    ds2 = ScDataset(_open(d), BlockShuffling(8), rank=0, world_size=2,
+                    **FETCH_KW)
+    ds2.load_state(back)
+    rest2 = [_dense(b) for b in ds2]
+    assert len(rest2) == len(rest)
+    for a, b in zip(rest, rest2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_repartition_method_validates(store):
+    d, _ = store
+    ds = ScDataset(_open(d), BlockShuffling(8), **FETCH_KW)
+    g = len(ds._epoch_order(0)) // ds.fetch_size
+    with pytest.raises(ValueError):
+        ds.repartition(5, 3)
+    with pytest.raises(ValueError):
+        ds.repartition(0, 2, plan=[(g + 7, 0)])
+    ds.repartition(0, 2, plan=[(0, 1), (3, 0)])
+    assert ds._fetch_entries() == [(0, 1), (3, 0)]
+    ds.repartition(0, 2, plan=None)
+    assert len(ds._fetch_entries()) > 2
+
+
+# --------------------------------------------------------- merge_states
+def _mk_state(**kw):
+    base = dict(seed=3, epoch=0, fetch_cursor=0, batch_cursor=0,
+                fingerprint=None, world_size=2, global_cursor=0,
+                remaining=((0, 0),))
+    base.update(kw)
+    return LoaderState(**base)
+
+
+def test_merge_states_rejects_drift_and_duplicates():
+    with pytest.raises(ValueError, match="no states"):
+        merge_states([])
+    with pytest.raises(ValueError, match="seed/epoch"):
+        merge_states([_mk_state(), _mk_state(seed=4, remaining=((1, 0),))])
+    with pytest.raises(ValueError, match="fingerprints"):
+        merge_states([_mk_state(fingerprint="a"),
+                      _mk_state(fingerprint="b", remaining=((1, 0),))])
+    with pytest.raises(ValueError, match="no global cursor"):
+        merge_states([_mk_state(), _mk_state(remaining=None)])
+    with pytest.raises(ValueError, match="owed by two ranks"):
+        merge_states([_mk_state(), _mk_state(remaining=((0, 1),))])
+    seed, epoch, fp, rem = merge_states(
+        [_mk_state(remaining=((4, 0), (2, 1))), _mk_state(remaining=((1, 0),))]
+    )
+    assert (seed, epoch, fp) == (3, 0, None)
+    assert rem == ((1, 0), (2, 1), (4, 0))
+
+
+def test_partition_round_robin_and_empty_shares():
+    with pytest.raises(ValueError):
+        partition([(0, 0)], 0)
+    shares = partition([(5, 0), (1, 2), (3, 0)], 2)
+    assert shares == [[(1, 2), (5, 0)], [(3, 0)]]
+    shares = partition([(1, 0)], 3)
+    assert shares == [[(1, 0)], [], []]  # empty shares are legal
+
+
+# ------------------------------------------------- cross-rank read dedup
+def test_shared_collection_fewer_cloud_requests(csr_shards):
+    """RINAS: ranks on ONE collection vs the same ranks on isolated
+    collections — strictly fewer backend requests AND bytes, the dividend
+    visible in shared_rank_hits, the delivered stream identical."""
+    uri = f"cloud://sharded-csr://{csr_shards}?profile=same-region&latency_scale=0"
+    kw = dict(block_rows=32, io_workers=2)
+
+    shared_stats = IOStats()
+    col = open_collection(uri, iostats=shared_stats, cache_bytes=8 << 20, **kw)
+    fab = _fabric(col, 3)
+    shared_got = {}
+    # interleave rank consumption batch-by-batch — the co-located schedule
+    its = {r: tagged_batches(ds) for r, ds in fab.loaders.items()}
+    while its:
+        for r in list(its):
+            try:
+                gid, j, b = next(its[r])
+            except StopIteration:
+                del its[r]
+                continue
+            assert (gid, j) not in shared_got
+            shared_got[(gid, j)] = _dense(b)
+    snap = shared_stats.snapshot()
+    assert snap["shared_rank_hits"] > 0
+
+    iso_stats = [IOStats() for _ in range(3)]
+    iso_got = {}
+    for r in range(3):
+        c = open_collection(uri, iostats=iso_stats[r],
+                            cache_bytes=(8 << 20) // 3, **kw)
+        ds = ScDataset(c, BlockShuffling(8), rank=r, world_size=3, **FETCH_KW)
+        _drain_into(iso_got, ds)
+    _assert_streams_equal(iso_got, shared_got)
+
+    iso_requests = sum(s.requests for s in iso_stats)
+    iso_bytes = sum(s.bytes_read for s in iso_stats)
+    assert snap["requests"] < iso_requests
+    assert snap["bytes_read"] < iso_bytes
+
+
+# ------------------------------------------------------ elastic supervisor
+def test_supervisor_ack_dedup_and_outstanding(store):
+    d, _ = store
+    ds = ScDataset(_open(d), BlockShuffling(8), **FETCH_KW)
+    sup = ElasticSupervisor(ds, timeout_s=60.0)
+    sup.issue(0, 0, 4)
+    sup.issue(1, 0, 5)
+    assert sup.outstanding() == [(0, 4), (0, 5)]
+    assert sup.outstanding(1) == [(0, 5)]
+    assert sup.ack(0, 0, 4) is True
+    assert sup.ack(0, 0, 4) is False, "duplicate delivery must ack False"
+    assert sup.outstanding() == [(0, 5)]
+
+
+def test_supervisor_reassigned_late_delivery_drops(store):
+    """The double-delivery race: a suspect rank's fetch is re-assigned, the
+    new owner delivers first, the presumed-dead rank comes back late — its
+    delivery acks False and is dropped by fetch id."""
+    d, _ = store
+    ds = ScDataset(_open(d), BlockShuffling(8), **FETCH_KW)
+    sup = ElasticSupervisor(ds, timeout_s=60.0)
+    sup.issue(1, 0, 7)          # rank 1 owes fetch 7, then stalls
+    sup.issue(0, 0, 7)          # re-assigned to rank 0 after recovery
+    assert sup.ack(0, 0, 7) is True
+    assert sup.ack(1, 0, 7) is False
+
+
+def test_supervisor_recover_is_idempotent_and_free_when_cached(store):
+    """recover() re-issues ONLY suspect-owned unacked fetches, exactly once,
+    through the rendezvous table — blocks already cached cost zero extra
+    physical reads — and records reissued_fetches."""
+    d, _ = store
+    col = _open(d, io_workers=2)  # prefetch (the re-issue path) needs async
+    ds = ScDataset(col, BlockShuffling(8), **FETCH_KW)
+    sup = ElasticSupervisor(ds, heartbeat=HeartbeatMonitor(timeout_s=0.05))
+    sup.beat(0)
+    sup.beat(1)
+    sup.issue(0, 0, 0)
+    sup.issue(1, 0, 1)
+    sup.issue(1, 0, 2)
+    sup.ack(1, 0, 2)  # delivered before the stall — must NOT be re-issued
+
+    # warm the cache with exactly the suspect's fetches: recovery re-claims
+    # them from the rendezvous table for free
+    ds.fetch(0, 1)
+    before = col.stats()["io"]["bytes_read"]
+
+    time.sleep(0.08)
+    sup.beat(0)  # rank 0 stays alive; rank 1 is now a suspect
+    assert sup.suspects() == ["1"]
+
+    out = sup.recover()
+    assert out == {"1": [1]}
+    assert col.stats()["io"]["bytes_read"] == before, (
+        "re-issuing cached work must cost zero extra reads"
+    )
+    assert col.stats()["io"]["reissued_fetches"] == 1
+    assert sup.recover() == {}, "recovery is idempotent per fetch"
+
+    # nothing suspect → recover is a no-op even with outstanding work
+    sup.beat(1)
+    sup.issue(1, 0, 3)
+    assert sup.recover() == {}
+
+
+def test_supervisor_recover_prefetches_cold_fetch(store):
+    """A suspect's fetch nobody started yet is warmed by recover(): the
+    adopting rank's subsequent fetch joins the staged reads, so recover +
+    fetch costs exactly what the fetch alone costs cold."""
+    d, _ = store
+    col = _open(d, io_workers=2)
+    ds = ScDataset(col, BlockShuffling(8), **FETCH_KW)
+    sup = ElasticSupervisor(ds, heartbeat=HeartbeatMonitor(timeout_s=0.02))
+    sup.beat(2)
+    sup.issue(2, 0, 6)
+    time.sleep(0.05)
+    assert sup.recover() == {"2": [6]}
+    ds.fetch(0, 6)  # rendezvous join: completes the staged reads
+    spent = col.stats()["io"]["bytes_read"]
+    assert spent > 0
+
+    cold_col = _open(d, io_workers=2)
+    cold = ScDataset(cold_col, BlockShuffling(8), **FETCH_KW)
+    cold.fetch(0, 6)
+    assert spent == cold_col.stats()["io"]["bytes_read"]
+
+
+# -------------------------------------------------------- collection pool
+class _FakeCol:
+    def __init__(self):
+        self.closed = False
+
+    def close(self):
+        self.closed = True
+
+
+def test_collection_pool_refcounts_and_close_all():
+    pool = CollectionPool()
+    key = pool_key("chunked:///tmp/x", {"block_rows": 32})
+    assert key != pool_key("chunked:///tmp/x", {"block_rows": 64})
+    made = []
+
+    def opener():
+        made.append(_FakeCol())
+        return made[-1]
+
+    a = pool.acquire(key, opener)
+    b = pool.acquire(key, opener)
+    assert a is b and len(made) == 1
+    assert pool.refs(key) == 2
+    pool.release(key)
+    assert pool.refs(key) == 1
+    pool.release(key)
+    # refcount 0 keeps the instance warm (cache survives); close_all reaps
+    assert pool.refs(key) == 0
+    assert not made[0].closed
+    pool.close_all()
+    assert made[0].closed
+
+
+def test_collection_pool_open_race_single_winner():
+    """Two threads race the first open: the opener runs OUTSIDE the pool
+    lock, both get the SAME instance, the loser's open is closed."""
+    pool = CollectionPool()
+    key = "race"
+    barrier = threading.Barrier(2)
+    made = []
+    got = [None, None]
+
+    def opener():
+        c = _FakeCol()
+        made.append(c)
+        return c
+
+    def contend(i):
+        barrier.wait()
+        got[i] = pool.acquire(key, opener)
+
+    ts = [threading.Thread(target=contend, args=(i,)) for i in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert got[0] is got[1]
+    assert pool.refs(key) == 2
+    survivors = [c for c in made if not c.closed]
+    assert len(survivors) == 1 and survivors[0] is got[0]
+    pool.close_all()
+
+
+# -------------------------------------------------- pipeline shared_pool
+def test_pipeline_shared_pool_is_content_free_and_shared(store):
+    d, _ = store
+    uri = f"chunked://{d}"
+    spec_priv = Pipeline.from_uri(uri).strategy("block", block_size=8) \
+        .batch(8, fetch_factor=2).seed(3)._spec
+    spec_shared = spec_priv.replace(shared_pool=True)
+    assert spec_shared.fingerprint() == spec_priv.fingerprint(), (
+        "shared_pool changes who reads, never what is delivered"
+    )
+
+    p1 = Pipeline(spec_shared).build()
+    p2 = Pipeline(spec_shared).build()
+    key = pool_key(spec_shared.uri, spec_shared.open_opts)
+    try:
+        assert p1.collection is p2.collection
+        assert GLOBAL_POOL.refs(key) == 2
+        batches = [_dense(b) for b in p1]
+        ref = [_dense(b) for b in Pipeline(spec_priv).build()]
+        assert len(batches) == len(ref)
+        for a, b in zip(batches, ref):
+            np.testing.assert_array_equal(a, b)
+    finally:
+        p1.close()
+        p2.close()
+    assert GLOBAL_POOL.refs(key) == 0
+    # closing pool references never closes the shared instance
+    assert p1.collection.fetch(np.arange(4)) is not None

@@ -105,3 +105,18 @@ def test_heartbeat_monitor():
     hb.beat("w1")
     assert hb.suspects() == ["w0"]
     assert hb.alive() == ["w1"]
+
+
+def test_heartbeat_suspect_recovers_on_beat():
+    """suspect -> beat -> alive: a late rank rejoining clears its suspicion
+    (the transition the ElasticSupervisor's rejoin path relies on)."""
+    import time
+
+    hb = HeartbeatMonitor(timeout_s=0.05)
+    hb.beat("w0")
+    time.sleep(0.08)
+    assert hb.suspects() == ["w0"] and hb.alive() == []
+    hb.beat("w0")  # rejoin
+    assert hb.suspects() == [] and hb.alive() == ["w0"]
+    time.sleep(0.08)  # ...and liveness keeps being re-evaluated after that
+    assert hb.suspects() == ["w0"]

@@ -423,10 +423,10 @@ def test_run_with_restarts_backoff_jitter_and_give_up():
     assert out == "ok"
     assert calls == [False, True, True, True]
     rng = random.Random(7)  # the documented closed form, re-derived
-    expect = [min(0.1 * k, 0.25) * (1.0 + 0.5 * rng.random())
+    expect = [min(0.1 * 2 ** (k - 1), 0.25) * (1.0 + 0.5 * rng.random())
               for k in (1, 2, 3)]
     assert slept == pytest.approx(expect)
-    for d, base in zip(slept, (0.1, 0.2, 0.25)):
+    for d, base in zip(slept, (0.1, 0.2, 0.25)):  # 0.1, 0.2, 0.4→capped
         assert base <= d <= base * 1.5  # jittered, never past 1+jitter
 
     gave_up = []
@@ -438,6 +438,42 @@ def test_run_with_restarts_backoff_jitter_and_give_up():
             sleep=lambda s: None,
         )
     assert gave_up == [(2, "dead")]  # fired once, with the budget used
+
+
+def test_run_with_restarts_backoff_is_exponential_with_cap():
+    """The PR 7 claim, now true: growth doubles per restart and saturates at
+    max_backoff_s; jitter=0 is the exact closed form, and the jittered
+    schedule is bitwise reproducible under the same seed."""
+    slept = []
+    n = {"calls": 0}
+
+    def flaky(resume):
+        n["calls"] += 1
+        if n["calls"] < 7:
+            raise RuntimeError("boom")
+        return n["calls"]
+
+    assert run_with_restarts(flaky, max_restarts=6, backoff_s=0.01,
+                             max_backoff_s=0.1, sleep=slept.append) == 7
+    assert slept == pytest.approx([0.01, 0.02, 0.04, 0.08, 0.1, 0.1])
+
+    def sched(seed):
+        out, state = [], {"calls": 0}
+
+        def work(resume):
+            state["calls"] += 1
+            if state["calls"] < 5:
+                raise RuntimeError("boom")
+
+        run_with_restarts(work, max_restarts=4, backoff_s=0.01,
+                          max_backoff_s=1.0, jitter=0.3, seed=seed,
+                          sleep=out.append)
+        return out
+
+    assert sched(11) == sched(11)  # seeded jitter: deterministic
+    assert sched(11) != sched(12)  # ...but a real function of the seed
+    for d, base in zip(sched(11), (0.01, 0.02, 0.04, 0.08)):
+        assert base <= d <= base * 1.3
 
 
 # ------------------------------------------- controller latency regime shift

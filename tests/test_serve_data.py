@@ -340,6 +340,92 @@ def test_admission_timeout_errors(data_dir):
         srv.stop()
 
 
+def _crash(cli: DataClient) -> None:
+    """Kill the client's socket mid-stream — no F_CLOSE, no goodbye."""
+    sock = cli._sock
+    cli._sock = None
+    try:
+        sock.shutdown(socket.SHUT_RDWR)
+    except OSError:
+        pass
+    sock.close()
+
+
+def test_tenant_crash_releases_slot_to_queue_head(data_dir):
+    """A tenant whose socket dies mid-stream releases its FIFO slot to the
+    HEAD of the admission queue, exactly like a clean close."""
+    srv = DataServeServer(
+        ServeConfig(max_tenants=1, admit_timeout_s=30.0)
+    ).start()
+    spec = _spec(data_dir)
+    order: list = []
+    olock = threading.Lock()
+
+    def tenant(name, delay):
+        time.sleep(delay)
+        with DataClient(srv.address, spec) as c:
+            with olock:
+                order.append(name)
+            next(iter(c))
+    try:
+        a = DataClient(srv.address, spec)  # holds the only slot
+        next(iter(a))
+        tb = threading.Thread(target=tenant, args=("B", 0.0))
+        tc = threading.Thread(target=tenant, args=("C", 0.4))
+        tb.start()
+        tc.start()
+        time.sleep(0.9)
+        assert srv.stats().admission["waiting"] == 2
+        _crash(a)  # slot must hand off to B, then C
+        tb.join(timeout=20)
+        tc.join(timeout=20)
+    finally:
+        srv.stop()
+    assert order == ["B", "C"]
+
+
+def test_tenant_crash_50_cycles_no_leaks(data_dir):
+    """50 crash/reconnect cycles over ONE streaming slot: every crash must
+    release the slot (a single leak deadlocks admission), fold the departed
+    tenant's IOStats into the aggregate, and drop the pooled collection's
+    refcount — no leaked slots, tenants, or collection references."""
+    srv = DataServeServer(
+        ServeConfig(max_tenants=1, admit_timeout_s=10.0)
+    ).start()
+    spec = _spec(data_dir)
+    cycles, per_cycle = 50, 2
+    try:
+        for _ in range(cycles):
+            c = DataClient(srv.address, spec)
+            it = iter(c)
+            for _ in range(per_cycle):
+                next(it)
+            _crash(c)
+        # the server notices a dead peer asynchronously: wait for the last
+        # departure to settle before auditing for leaks
+        deadline = time.time() + 10.0
+        while time.time() < deadline:
+            st = srv.stats()
+            if st.admission["active"] == 0 and not st.tenants:
+                break
+            time.sleep(0.02)
+        st = srv.stats()
+        assert st.admission["active"] == 0
+        assert st.admission["waiting"] == 0
+        assert st.admission["admitted_total"] == cycles
+        assert not st.tenants, "crashed tenants must not linger"
+        # one pooled collection across all 50 tenants, zero refs at rest
+        assert len(st.collections) == 1
+        assert st.collections[0]["refs"] == 0
+        # every departed tenant's counters folded into the aggregate: at
+        # least the delivered rows (producers may have fetched ahead)
+        batch_rows = spec.batch_size
+        assert st.aggregate["rows"] >= cycles * per_cycle * batch_rows
+        assert st.shared["rows"] == 0  # nothing leaked onto the shared base
+    finally:
+        srv.stop()
+
+
 def test_quota_exhausted(data_dir):
     srv = DataServeServer(ServeConfig(quota_bytes=20_000)).start()
     spec = _spec(data_dir)
